@@ -1,0 +1,6 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+Each bench prints ``name,us_per_call,derived`` CSV rows and writes its
+artifact (JSON) under benchmarks/results/.
+"""

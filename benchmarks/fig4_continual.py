@@ -1,0 +1,61 @@
+"""Fig. 4: domain-incremental continual learning — Adam vs DFA vs the
+mixed-signal hardware model, n_h ∈ {100, 256}, permuted + split streams.
+
+Validates (on matched-geometry synthetic streams — DESIGN.md §8):
+  * replay prevents catastrophic forgetting (graceful degradation),
+  * DFA within a few points of the Adam baseline,
+  * hardware model within 5 % of software DFA (the paper's ≤5 % claim),
+  * n_h=256 narrows the hw/software gap (paper: 4.93 % → 2.48 %).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.continual import ContinualConfig, run_continual
+from repro.core.miru import MiRUConfig
+from repro.data.synthetic import make_permuted_tasks, make_split_tasks
+
+from benchmarks.common import emit, save_json
+
+FAST = {"n_tasks": 4, "n_train": 500, "n_test": 200, "epochs": 6}
+
+
+def run(fast: bool = True) -> dict:
+    p = FAST
+    out: dict = {}
+    for stream, mk in [("permuted", make_permuted_tasks),
+                       ("split", make_split_tasks)]:
+        for n_h in (100, 256) if not fast else (100,):
+            tasks = mk(0, n_tasks=p["n_tasks"], n_train=p["n_train"],
+                       n_test=p["n_test"])
+            T, F = tasks[0].x_train.shape[1:]
+            n_y = int(max(t.y_train.max() for t in tasks)) + 1
+            cfg = MiRUConfig(n_x=F, n_h=n_h, n_y=n_y)
+            for trainer in ("adam", "dfa", "dfa_hw"):
+                t0 = time.time()
+                ccfg = ContinualConfig(trainer=trainer,
+                                       epochs_per_task=p["epochs"],
+                                       batch_size=32,
+                                       replay_capacity=512)
+                res = run_continual(cfg, ccfg, tasks)
+                key = f"{stream}_nh{n_h}_{trainer}"
+                out[key] = {"MA": res["MA"],
+                            "acc_after_each": res["acc_after_each"],
+                            "final_row": res["R"][-1].tolist()}
+                emit(f"fig4/{key}", (time.time() - t0) * 1e6,
+                     f"MA={res['MA']:.3f}")
+    # Headline deltas.
+    for stream in ("permuted", "split"):
+        sw = out[f"{stream}_nh100_dfa"]["MA"]
+        hw = out[f"{stream}_nh100_dfa_hw"]["MA"]
+        adam = out[f"{stream}_nh100_adam"]["MA"]
+        out[f"{stream}_gaps"] = {"hw_vs_dfa": sw - hw,
+                                 "dfa_vs_adam": adam - sw}
+        emit(f"fig4/{stream}_hw_gap", 0.0,
+             f"hw_gap={sw - hw:+.3f};dfa_vs_adam={adam - sw:+.3f}")
+    save_json("fig4_continual", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

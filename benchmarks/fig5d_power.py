@@ -1,0 +1,30 @@
+"""Fig. 5d: power breakdown across core units (analytical circuit
+model): analog front-end (ADCs + Op-Amps) dominates."""
+from __future__ import annotations
+
+import time
+
+from repro.analog.costmodel import M2RUCostModel
+
+from benchmarks.common import emit, save_json
+
+
+def run() -> dict:
+    m = M2RUCostModel()
+    t0 = time.time()
+    brk = m.power_breakdown_w()
+    total = sum(brk.values())
+    out = {"breakdown_mw": {k: v * 1e3 for k, v in brk.items()},
+           "total_mw": total * 1e3,
+           "training_mw": m.power_w(training=True) * 1e3,
+           "shares": {k: v / total for k, v in brk.items()}}
+    emit("fig5d/total", (time.time() - t0) * 1e6,
+         f"total={total*1e3:.2f}mW(expect48.62)")
+    for k, v in brk.items():
+        emit(f"fig5d/{k}", 0.0, f"{v*1e3:.3f}mW({v/total*100:.1f}%)")
+    save_json("fig5d_power", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: WBS matmul / fused MiRU scan / k-WTA / flash
+fwd vs their jnp references (CPU interpret-mode timings — correctness +
+relative cost context, not TPU numbers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import emit, save_json, time_call
+
+
+def run() -> dict:
+    out = {}
+    key = jax.random.PRNGKey(0)
+
+    # WBS matmul
+    x = jax.random.uniform(key, (256, 256), minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    sign, code = ops.quantize_inputs(x, 8)
+    gains = 2.0 ** (-jnp.arange(1, 9, dtype=jnp.float32))
+    us_k = time_call(lambda: ops.wbs_matmul(sign, code, w, gains)
+                     .block_until_ready())
+    us_r = time_call(lambda: ref.wbs_matmul_ref(sign, code, w, gains)
+                     .block_until_ready())
+    out["wbs_matmul"] = {"kernel_us": us_k, "ref_us": us_r}
+    emit("kernel/wbs_matmul", us_k, f"ref={us_r:.0f}us;256x256x256_8bit")
+
+    # MiRU scan
+    xw = jax.random.normal(key, (32, 28, 128))
+    u = jax.random.normal(jax.random.PRNGKey(2), (128, 128)) * 0.3
+    h0 = jnp.zeros((32, 128))
+    us_k = time_call(lambda: ops.miru_scan(xw, u, h0, 0.8, 0.5)[0]
+                     .block_until_ready())
+    us_r = time_call(lambda: ref.miru_scan_ref(xw, u, h0, 0.8, 0.5)[0]
+                     .block_until_ready())
+    out["miru_scan"] = {"kernel_us": us_k, "ref_us": us_r}
+    emit("kernel/miru_scan", us_k, f"ref={us_r:.0f}us;B32_T28_H128")
+
+    # k-WTA
+    g = jax.random.normal(jax.random.PRNGKey(3), (64, 1024))
+    us_k = time_call(lambda: ops.kwta(g, 580).block_until_ready())
+    us_r = time_call(lambda: ref.kwta_ref(g, 580).block_until_ready())
+    out["kwta"] = {"kernel_us": us_k, "ref_us": us_r}
+    emit("kernel/kwta", us_k, f"ref={us_r:.0f}us;64x1024_k580")
+
+    # Flash attention fwd
+    q = jax.random.normal(key, (2, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (2, 256, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(5), (2, 256, 2, 64))
+    us_k = time_call(lambda: ops.flash_attention_fwd(q, k, v, True)[0]
+                     .block_until_ready())
+    out["flash_fwd"] = {"kernel_us": us_k}
+    emit("kernel/flash_fwd", us_k, "B2_S256_H4_dh64")
+
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Run every benchmark. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig4_continual, fig5a_quant_error,
+                            fig5b_endurance, fig5c_latency, fig5d_power,
+                            kernel_bench, roofline_bench,
+                            table1_throughput)
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    table1_throughput.run()
+    fig5c_latency.run()
+    fig5d_power.run()
+    fig5a_quant_error.run()
+    fig5b_endurance.run()
+    kernel_bench.run()
+    fig4_continual.run(fast=True)
+    roofline_bench.run()
+    print(f"# total_bench_seconds={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

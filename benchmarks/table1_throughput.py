@@ -1,0 +1,54 @@
+"""Table I: throughput / power / efficiency of the M2RU accelerator,
+plus a timed software forward of the same 28×100×10 network for context
+(the fused Pallas MiRU path, interpret mode on CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog.costmodel import M2RUCostModel
+from repro.core.miru import MiRUConfig, init_miru_params, miru_forward
+
+from benchmarks.common import emit, save_json, time_call
+
+
+def run() -> dict:
+    m = M2RUCostModel()
+    out = {
+        "step_latency_us": m.step_latency_s() * 1e6,
+        "seq_per_s": m.throughput_seq_per_s(28),
+        "gops": m.gops(),
+        "power_mw": m.power_w() * 1e3,
+        "power_train_mw": m.power_w(training=True) * 1e3,
+        "gops_per_w": m.gops_per_watt(),
+        "pj_per_op": m.pj_per_op(),
+        "gain_vs_digital": m.efficiency_gain_vs_digital(),
+        "paper": {"latency_us": 1.85, "seq_per_s": 19305, "gops": 15,
+                  "power_mw": 48.62, "gops_per_w": 312,
+                  "pj_per_op": 3.21, "gain": 29},
+    }
+    emit("table1/latency", 0.0,
+         f"{out['step_latency_us']:.2f}us(expect1.85)")
+    emit("table1/throughput", 0.0,
+         f"{out['seq_per_s']:.0f}seq/s(expect19305);"
+         f"{out['gops']:.2f}GOPS(expect~15)")
+    emit("table1/efficiency", 0.0,
+         f"{out['gops_per_w']:.0f}GOPS/W(expect312);"
+         f"{out['pj_per_op']:.2f}pJ/op(expect3.21);29x_vs_digital")
+
+    # Software context: batched forward of the same network on CPU.
+    cfg = MiRUConfig(n_x=28, n_h=100, n_y=10)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (64, 28, 28))
+    fwd = jax.jit(lambda p, xx: miru_forward(p, cfg, xx)[0])
+    us = time_call(lambda: fwd(params, x).block_until_ready())
+    out["sw_fwd_us_batch64"] = us
+    emit("table1/software_fwd", us, f"batch64_seq28_cpu")
+    save_json("table1_throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+"""repro — M2RU: Memristive Minion Recurrent Unit, as a production JAX framework.
+
+Layers:
+  core/        the paper's contribution (MiRU, DFA-through-time, K-WTA, replay)
+  analog/      mixed-signal hardware-like model + circuit cost model
+  kernels/     Pallas TPU kernels (wbs_matmul, miru_scan, kwta)
+  models/      LM architecture zoo (GQA/MLA/MoE/SSD/enc-dec/hybrid)
+  configs/     assigned architecture configs + the paper's own
+  data/        synthetic data pipeline + continual task streams
+  optim/       optimizers, quantized state, sparsification, compression
+  train/       training loop, checkpointing, fault tolerance
+  serve/       batched decode engine
+  distributed/ sharding rules and collective helpers
+  launch/      mesh / dryrun / train / serve CLIs, roofline
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,21 @@
+"""Mixed-signal hardware-like model of the M2RU accelerator.
+
+- crossbar:   conductance-pair weight mapping + device non-idealities.
+- wbs:        weighted-bit-streaming numerical model (eqs. 11-19).
+- adc:        ADC quantization + integrator leakage model (eqs. 8-10).
+- endurance:  per-device write counting, CDF, lifespan projection (Fig. 5b).
+- costmodel:  cycle/power analytical model (Fig. 5c/5d, Table I).
+"""
+from repro.analog.crossbar import CrossbarSpec, CrossbarState, program, vmm
+from repro.analog.wbs import WBSSpec, wbs_vmm, quantize_signed
+from repro.analog.adc import adc_quantize, integrator_droop
+from repro.analog.endurance import EnduranceTracker, lifespan_years
+from repro.analog.costmodel import M2RUCostModel, HardwareConstants
+
+__all__ = [
+    "CrossbarSpec", "CrossbarState", "program", "vmm",
+    "WBSSpec", "wbs_vmm", "quantize_signed",
+    "adc_quantize", "integrator_droop",
+    "EnduranceTracker", "lifespan_years",
+    "M2RUCostModel", "HardwareConstants",
+]

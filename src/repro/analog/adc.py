@@ -1,0 +1,49 @@
+"""ADC quantization and integrator retention model (§IV-B-1, eqs. 8-10).
+
+The shared high-speed ADC (1.28 GSps, ~2 ns per channel) scans all bitlines
+of a crossbar; transmission gates isolate the integrator during the hold
+phase so droop is limited to Op-Amp bias current and capacitor dielectric
+leakage. The droop functions reproduce the paper's < 0.1 LSB budget check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_quantize(v: jax.Array, bits: int, full_scale: float) -> jax.Array:
+    """Mid-rise uniform quantizer over [-full_scale, +full_scale]."""
+    levels = 2 ** bits
+    step = 2.0 * full_scale / levels
+    q = jnp.round(v / step)
+    q = jnp.clip(q, -(levels // 2), levels // 2 - 1)
+    return q * step
+
+
+def integrator_droop(v_int: float, t_conv: float, tau: float) -> float:
+    """ΔV = V_int · exp(−T_conv/τ)   (eq. 8) — returns the *droop* V−V'."""
+    import math
+    return v_int * (1.0 - math.exp(-t_conv / tau))
+
+
+def droop_leakage(v_int: float, t_conv: float, r_leak: float,
+                  c_f: float) -> float:
+    """ΔV_l ≈ V_int · T_conv / (R_leak · C_f)   (eq. 9, hold phase)."""
+    return v_int * t_conv / (r_leak * c_f)
+
+
+def droop_bias(i_b: float, t_conv: float, c_f: float) -> float:
+    """ΔV_b = I_b · T_conv / C_f   (eq. 10, Op-Amp input bias)."""
+    return i_b * t_conv / c_f
+
+
+def total_hold_droop(v_int: float = 0.5, t_conv: float = 200e-9,
+                     c_f: float = 2e-12, i_b: float = 50e-12,
+                     r_leak: float = 10e9) -> float:
+    """Worst-case droop over an ADC scan with the paper's constants.
+
+    Paper: < 10.5 µV (< 0.1 LSB) over 200 ns with C_f = 2 pF, I_b < 50 pA,
+    R_leak > 10 GΩ.
+    """
+    return droop_leakage(v_int, t_conv, r_leak, c_f) \
+        + droop_bias(i_b, t_conv, c_f)

@@ -1,0 +1,115 @@
+"""Memristive crossbar model (§IV-B-1).
+
+Each synaptic weight is the conductance difference between a tunable device
+and a fixed reference device biased at the midpoint of the resistance window
+(R_on = 2 MΩ, R_off = 20 MΩ, §V-B):
+
+    w_ji ∝ 1/M_ji − 1/M_ri                                   (eq. 7)
+
+Non-idealities modeled (per §V-B): 10 % cycle-to-cycle (read) variability,
+10 % device-to-device write variation, conductance clipping to the physical
+window, and optional finite write resolution (Ziksa pulse quantization).
+
+All functions are jit-able; stochasticity is explicit via PRNG keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarSpec:
+    r_on: float = 2e6            # Ω  (fully-SET resistance)
+    r_off: float = 20e6          # Ω  (fully-RESET resistance)
+    write_sigma: float = 0.10    # device-to-device write variability
+    read_sigma: float = 0.10     # cycle-to-cycle read variability
+    w_clip: float = 1.0          # |logical weight| mapped to full window
+    write_levels: Optional[int] = None  # finite programming resolution
+
+    @property
+    def g_on(self) -> float:
+        return 1.0 / self.r_on
+
+    @property
+    def g_off(self) -> float:
+        return 1.0 / self.r_off
+
+    @property
+    def g_ref(self) -> float:
+        """Reference device at the midpoint of the conductance window."""
+        return 0.5 * (self.g_on + self.g_off)
+
+    @property
+    def g_half_range(self) -> float:
+        return 0.5 * (self.g_on - self.g_off)
+
+
+@dataclasses.dataclass
+class CrossbarState:
+    """Programmed conductances (same shape as the logical weight matrix)."""
+    g: jax.Array          # tunable device conductances (S)
+    spec: CrossbarSpec
+
+    def to_weights(self) -> jax.Array:
+        """Ideal read-back of logical weights."""
+        return (self.g - self.spec.g_ref) / self.spec.g_half_range \
+            * self.spec.w_clip
+
+
+def _target_conductance(w: jax.Array, spec: CrossbarSpec) -> jax.Array:
+    wn = jnp.clip(w / spec.w_clip, -1.0, 1.0)
+    return spec.g_ref + wn * spec.g_half_range
+
+
+def program(key: jax.Array, w: jax.Array, spec: CrossbarSpec
+            ) -> CrossbarState:
+    """Program logical weights into the crossbar (Ziksa write scheme).
+
+    Applies write variability and optional level quantization, then clips to
+    the physical conductance window.
+    """
+    g_t = _target_conductance(w, spec)
+    if spec.write_levels is not None:
+        lo, hi = spec.g_off, spec.g_on
+        step = (hi - lo) / (spec.write_levels - 1)
+        g_t = jnp.round((g_t - lo) / step) * step + lo
+    noise = 1.0 + spec.write_sigma * jax.random.normal(key, w.shape)
+    g = jnp.clip(g_t * noise, spec.g_off, spec.g_on)
+    return CrossbarState(g=g, spec=spec)
+
+
+def update(key: jax.Array, state: CrossbarState, dw: jax.Array
+           ) -> CrossbarState:
+    """Incremental conductance update (in-situ training write).
+
+    Only nonzero dw entries receive write pulses — the K-WTA sparsifier
+    upstream decides which; the endurance tracker counts them.
+    """
+    spec = state.spec
+    dg = dw / spec.w_clip * spec.g_half_range
+    noise = 1.0 + spec.write_sigma * jax.random.normal(key, dw.shape)
+    g = jnp.where(dw != 0, state.g + dg * noise, state.g)
+    g = jnp.clip(g, spec.g_off, spec.g_on)
+    return CrossbarState(g=g, spec=spec)
+
+
+def vmm(key: Optional[jax.Array], x: jax.Array, state: CrossbarState
+        ) -> jax.Array:
+    """Analog vector-matrix multiply on the crossbar (eq. 7).
+
+    x (…, n_in) dimensionless drive (the WBS layer handles bit streaming and
+    voltage scaling); returns (…, n_out) in logical-weight units. With
+    ``key`` None the read is noiseless (used for oracles/tests).
+    """
+    w_eff = state.to_weights()
+    if key is not None and state.spec.read_sigma > 0:
+        # Read noise perturbs each device conductance per access.
+        g_noisy = state.g * (1.0 + state.spec.read_sigma
+                             * jax.random.normal(key, state.g.shape))
+        w_eff = (g_noisy - state.spec.g_ref) / state.spec.g_half_range \
+            * state.spec.w_clip
+    return x @ w_eff

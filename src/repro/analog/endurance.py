@@ -1,0 +1,99 @@
+"""Memristor endurance tracking and lifespan projection (§VI-B, Fig. 5b).
+
+Devices tolerate 10^6–10^12 SET/RESET cycles; the paper assumes 10^9.
+Training writes are counted per device; K-WTA gradient sparsification cuts
+write traffic ~47 %, moving the projected lifetime from ~6.9 to ~12.2 years
+at a 1 ms update cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EnduranceTracker:
+    """Per-device write counters for a set of named weight arrays."""
+    endurance: float = 1e9
+
+    def __post_init__(self):
+        self._counts: dict[str, np.ndarray] = {}
+        self.updates_applied = 0
+
+    def register(self, name: str, shape: tuple[int, ...]) -> None:
+        self._counts[name] = np.zeros(shape, dtype=np.int64)
+
+    def record(self, name: str, mask: np.ndarray) -> None:
+        if name not in self._counts:
+            self.register(name, mask.shape)
+        self._counts[name] += mask.astype(np.int64)
+
+    def record_update(self, masks: dict[str, np.ndarray]) -> None:
+        for name, m in masks.items():
+            self.record(name, np.asarray(m))
+        self.updates_applied += 1
+
+    # ------------------------------------------------------------------
+    # Analysis
+    # ------------------------------------------------------------------
+    def all_counts(self) -> np.ndarray:
+        if not self._counts:
+            return np.zeros((0,), dtype=np.int64)
+        return np.concatenate([c.reshape(-1) for c in self._counts.values()])
+
+    def mean_writes(self) -> float:
+        c = self.all_counts()
+        return float(c.mean()) if c.size else 0.0
+
+    def write_cdf(self, n_points: int = 256
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """(write_counts, CDF) — Fig. 5b's x/y."""
+        c = np.sort(self.all_counts())
+        if c.size == 0:
+            return np.zeros(1), np.zeros(1)
+        idx = np.linspace(0, c.size - 1, n_points).astype(int)
+        return c[idx].astype(float), (idx + 1) / c.size
+
+    def overstressed_fraction(self, projected_total_updates: float) -> float:
+        """Fraction of devices whose *projected* writes exceed endurance if
+        the observed per-update write rates continue for
+        ``projected_total_updates`` updates (the shaded region in Fig. 5b)."""
+        c = self.all_counts()
+        if c.size == 0 or self.updates_applied == 0:
+            return 0.0
+        rate = c / self.updates_applied           # writes per update
+        projected = rate * projected_total_updates
+        return float((projected > self.endurance).mean())
+
+
+def lifespan_years(mean_writes_per_update: float, endurance: float = 1e9,
+                   update_period_s: float = 1e-3) -> float:
+    """Years until the average device reaches its endurance limit.
+
+    Paper calibration: uniform writes (rate=1) @1 ms, 10^9 endurance
+    → 10^9 ms ≈ 31.7 yr *per device*, but the paper reports the network
+    lifespan limited by the hot tail: with pre-sparsification write stats
+    (mean 1.6e5 writes over the run) it reports 6.9 yr, post-sparsification
+    (8.5e4) 12.2 yr — i.e. lifespan scales inversely with write rate. We
+    reproduce that scaling: years = endurance / writes_per_second / seconds
+    per year, with writes_per_second = mean_rate / update_period.
+    """
+    if mean_writes_per_update <= 0:
+        return float("inf")
+    writes_per_s = mean_writes_per_update / update_period_s
+    seconds = endurance / writes_per_s
+    return seconds / (365.25 * 24 * 3600)
+
+
+def paper_lifespan_check() -> dict[str, float]:
+    """The paper's own numbers: write-rate ratio 8.5e4/1.6e5 ≈ 0.53 maps
+    6.9 yr → ~12.2 yr (they quote 12.2; ratio gives 12.99 — the paper's
+    sparsified run also shifts the tail, absorbed here in the rate)."""
+    dense_rate = 1.0 / 6.9
+    sparse_years = 6.9 * (1.6e5 / 8.5e4)
+    return {"dense_years": 6.9, "sparse_years_scaling": sparse_years,
+            "paper_sparse_years": 12.2,
+            "write_reduction": 1.0 - 8.5e4 / 1.6e5,
+            "dense_rate": dense_rate}

@@ -1,0 +1,91 @@
+"""Weighted-Bit Streaming (WBS) numerical model — §V-A, eqs. (11)-(19).
+
+Digital inputs are decomposed sign-magnitude into n_b bit planes. On the
+chip each plane is streamed for a fixed pulse width T_s and weighted by the
+memristor-ratio analog gain (M_f/M_i)_k = 2^{-k}; the integrator accumulates
+
+    V_int ∝ Σ_k 2^{-k} · (bitplane_k ⊙ sign) · W                 (eq. 15-18)
+
+which equals the fixed-point product (x / 2^{n_b}) · W when the ratios are
+ideal. TPU adaptation (DESIGN.md §2): all bit planes are evaluated as
+parallel matmuls — same math, throughput-oriented; the per-plane *ratio
+variability* ε_k (one more memristor pair per plane) is retained as the
+model's distinguishing non-ideality.
+
+This module is the reference/simulation path; ``kernels/wbs_matmul.py`` is
+the fused Pallas implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WBSSpec:
+    n_bits: int = 8              # input precision streamed bit-by-bit
+    gain_sigma: float = 0.0      # per-plane (M_f/M_i) ratio variability
+    adc_bits: Optional[int] = 8  # fused output ADC; None = no quantization
+    adc_range: float = 4.0       # symmetric ADC full-scale (logical units)
+
+
+def quantize_signed(x: jax.Array, n_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Sign-magnitude quantization of x∈[-1,1] to (sign, magnitude-code).
+
+    A digital '1' is streamed as ±0.1 V by the level shifter (Fig. 3-Left);
+    '0' as 0 V — i.e. the hardware natively computes sign-magnitude.
+    Returns (sign ∈ {-1,0,+1} int8, code ∈ [0, 2^n−1] uint8).
+    """
+    top = 2 ** n_bits - 1
+    mag = jnp.clip(jnp.round(jnp.abs(x) * top), 0, top)
+    sign = jnp.sign(x).astype(jnp.int8)
+    return sign, mag.astype(jnp.uint8)
+
+
+def bit_planes(code: jax.Array, n_bits: int) -> jax.Array:
+    """(…,) uint → (n_bits, …) float bit planes, MSB first (k=1 ⇒ 2^{-1})."""
+    ks = jnp.arange(n_bits - 1, -1, -1, dtype=jnp.uint8)  # MSB..LSB
+    planes = (code[None, ...] >> ks.reshape(-1, *([1] * code.ndim))) & 1
+    return planes.astype(jnp.float32)
+
+
+def ideal_gains(n_bits: int) -> jax.Array:
+    """(M_f/M_i)_k = 2^{-k}, k = 1..n_b (eq. 17), MSB first."""
+    return 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
+
+
+def wbs_vmm(x: jax.Array, w: jax.Array, spec: WBSSpec,
+            key: Optional[jax.Array] = None) -> jax.Array:
+    """WBS crossbar VMM: y = Σ_k g_k · (B_k ⊙ s) @ W, then fused ADC.
+
+    Args:
+      x: (..., n_in) real inputs in [-1, 1].
+      w: (n_in, n_out) logical weights (crossbar-programmed upstream).
+      key: PRNG for gain variability (None ⇒ ideal ratios).
+
+    With ideal ratios and adc_bits=None this equals a fixed-point matmul:
+    max-abs error vs x@w bounded by the input quantization step.
+    """
+    sign, code = quantize_signed(x, spec.n_bits)
+    planes = bit_planes(code, spec.n_bits)                 # (nb, ..., n_in)
+    signed_planes = planes * sign.astype(jnp.float32)[None]
+
+    gains = ideal_gains(spec.n_bits)
+    if key is not None and spec.gain_sigma > 0:
+        gains = gains * (1.0 + spec.gain_sigma
+                         * jax.random.normal(key, gains.shape))
+    # Scale per plane then single contraction: Σ_k g_k B_k is the exact
+    # dequantized input, so one matmul suffices mathematically — but we keep
+    # the per-plane contraction to model per-plane gain noise faithfully.
+    y = jnp.einsum("k,k...i,io->...o", gains, signed_planes, w)
+    # 2^{-1}..2^{-nb} weighting reconstructs x/ (1 - 2^{-nb})-ish scale;
+    # normalize so ideal path returns x̂ @ w with x̂ the quantized x.
+    y = y * (2.0 ** spec.n_bits / (2.0 ** spec.n_bits - 1.0))
+
+    if spec.adc_bits is not None:
+        from repro.analog.adc import adc_quantize
+        y = adc_quantize(y, spec.adc_bits, spec.adc_range)
+    return y

@@ -1,0 +1,92 @@
+"""Assigned input shapes × per-arch input_specs() (ShapeDtypeStructs).
+
+  train_4k     seq 4096  × global_batch 256   (training step)
+  prefill_32k  seq 32768 × global_batch 32    (inference prefill)
+  decode_32k   KV 32768  × global_batch 128   (one-token decode)
+  long_500k    KV 524288 × global_batch 1     (long-context decode;
+                                               SSM/hybrid only)
+
+decode shapes lower ``serve_step`` (decode_step with the cache passed as
+an input ShapeDtypeStruct); train_4k lowers ``train_step``; prefill
+lowers the forward. Multimodal archs receive stub frame/patch embeddings
+in the batch (the brief: frontend is a stub providing precomputed
+embeddings)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if shape_name == "long_500k" and cfg.layer_pattern == "attn":
+        return ("pure full-attention arch: O(L²) attention at 524k context "
+                "— skipped per brief; run only for SSM/hybrid")
+    return None
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.is_encoder_decoder:
+        enc = min(S, cfg.max_enc_len)
+        batch["frames"] = _sds((B, enc, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    elif cfg.frontend == "vision":
+        n_img = cfg.n_frontend_tokens
+        batch["patches"] = _sds((B, n_img, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S - n_img), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    t = batch["tokens"].shape
+    batch["labels"] = _sds(t, jnp.int32)
+    batch["mask"] = _sds(t, jnp.float32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    from repro.models import lm
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = min(4096, cfg.max_enc_len) if cfg.is_encoder_decoder else 0
+    caches = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, S, enc_len=enc_len))
+    return {
+        "caches": caches,
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

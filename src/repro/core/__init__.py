@@ -1,0 +1,26 @@
+"""The paper's primary contribution.
+
+- miru:      Minion Recurrent Unit (eqs. 1-3) — gate-free GRU variant.
+- dfa:       Direct Feedback Alignment through time (Algorithm 1).
+- kwta:      K-winner-take-all (the paper's ζ sparsifier / softmax approx).
+- replay:    reservoir sampler (xorshift32) + stochastic quantizer + buffer.
+- continual: domain-incremental continual-learning trainer (Fig. 4 protocol).
+"""
+from repro.core.miru import (MiRUConfig, init_miru_params, init_dfa_feedback,
+                             miru_forward, miru_apply_readout)
+from repro.core.kwta import kwta, kwta_mask
+from repro.core.replay import (ReservoirSampler, Xorshift32, ReplayBuffer,
+                               stochastic_quantize, uniform_quantize,
+                               dequantize)
+from repro.core.dfa import (dfa_grads, bptt_grads, miru_loss,
+                            grad_alignment)
+from repro.core.continual import (ContinualConfig, run_continual,
+                                  evaluate_tasks)
+
+__all__ = [
+    "MiRUConfig", "init_miru_params", "init_dfa_feedback", "miru_forward",
+    "miru_apply_readout", "kwta", "kwta_mask", "ReservoirSampler",
+    "Xorshift32", "ReplayBuffer", "stochastic_quantize", "uniform_quantize",
+    "dequantize", "dfa_grads", "bptt_grads", "miru_loss", "grad_alignment",
+    "ContinualConfig", "run_continual", "evaluate_tasks",
+]

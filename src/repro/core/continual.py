@@ -1,0 +1,263 @@
+"""Domain-incremental continual learning — the Fig. 4 protocol.
+
+Tasks arrive sequentially with no identity at test time and a shared output
+head. Training mixes fresh examples with reservoir-sampled, stochastically
+quantized replay. Three backends:
+
+  "adam"   — BPTT + Adam (the paper's software baseline)
+  "dfa"    — DFA-through-time + SGD + K-WTA sparsification (paper, software)
+  "dfa_hw" — DFA on the hardware-like model: WBS-quantized inputs, crossbar
+             read/write variability, ADC quantization, sparsified noisy
+             writes, endurance tracking (the M2RU accelerator)
+
+Reported: R[t, i] = accuracy on task i after training through task t;
+MA = mean of the final row (eq. 20).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analog.adc import adc_quantize
+from repro.analog.endurance import EnduranceTracker
+from repro.analog.wbs import WBSSpec, wbs_vmm
+from repro.core import dfa as dfa_mod
+from repro.core.kwta import kwta_global
+from repro.core.miru import (MiRUConfig, init_dfa_feedback, init_miru_params,
+                             miru_apply_readout)
+from repro.data.synthetic import TaskData
+from repro.optim import adam, apply_updates
+from repro.utils import accuracy as acc_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinualConfig:
+    trainer: str = "dfa"                # adam | dfa | dfa_hw
+    epochs_per_task: int = 1
+    batch_size: int = 32
+    lr: float = 0.2
+    hidden_lr_scale: float = 0.3        # per-layer update shift (hardware)
+    adam_lr: float = 1e-3
+    kwta_keep_frac: Optional[float] = 0.57
+    replay_capacity: int = 512
+    replay_ratio: float = 0.5           # fraction of each batch from replay
+    replay_bits: int = 4                # stochastic-quantizer precision
+    # Hardware-like model knobs (dfa_hw):
+    input_bits: int = 8
+    adc_bits: int = 8
+    adc_range: float = 4.0
+    gain_sigma: float = 0.02            # WBS memristor-ratio variability
+    write_sigma: float = 0.10           # §V-B device write variation
+    weight_clip: float = 1.5            # crossbar dynamic range (logical)
+    track_endurance: bool = False
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Hardware-like forward
+# ---------------------------------------------------------------------------
+
+def hw_miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
+                    x_seq: jax.Array, key: jax.Array, ccfg: ContinualConfig
+                    ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """MiRU forward on the mixed-signal model.
+
+    The hidden crossbar holds [W_h; U_h] on shared wordlines (Fig. 2): the
+    concatenated drive [xᵗ, β·hᵗ⁻¹] is WBS-streamed; the integrator output
+    is ADC-quantized, then the digital PWL tanh and λ-interpolation follow.
+    """
+    B, T, _ = x_seq.shape
+    w_cat = jnp.concatenate([params["w_h"], params["u_h"]], axis=0)
+    spec = WBSSpec(n_bits=ccfg.input_bits, gain_sigma=ccfg.gain_sigma,
+                   adc_bits=None)  # ADC applied after adding the bias
+    scale = ccfg.weight_clip
+
+    def step(carry, inp):
+        h, k = carry
+        x_t = inp
+        k, k1 = jax.random.split(k)
+        drive = jnp.concatenate([x_t, cfg.beta * h], axis=-1)
+        pre = wbs_vmm(drive, w_cat / scale, spec, key=k1) * scale \
+            + params["b_h"]
+        pre = adc_quantize(pre, ccfg.adc_bits, ccfg.adc_range)
+        h_tilde = jnp.tanh(pre)
+        h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
+        return (h_new, k), (h_new, h, pre)
+
+    h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
+    (_, _), (h_all, h_prev, pre) = jax.lax.scan(
+        step, (h0, key), jnp.swapaxes(x_seq, 0, 1))
+    h_all = jnp.swapaxes(h_all, 0, 1)
+    h_prev = jnp.swapaxes(h_prev, 0, 1)
+    pre = jnp.swapaxes(pre, 0, 1)
+    logits = miru_apply_readout(params, cfg, h_all[:, -1, :])
+    return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
+
+
+# ---------------------------------------------------------------------------
+# Train/eval steps (jit-compiled once per backend)
+# ---------------------------------------------------------------------------
+
+def _make_steps(cfg: MiRUConfig, ccfg: ContinualConfig):
+    """Build jitted (train_step, eval_fn) for the chosen backend."""
+    opt = adam(ccfg.adam_lr)
+
+    if ccfg.trainer == "adam":
+        @jax.jit
+        def train_step(params, opt_state, key, x, y):
+            loss, grads = dfa_mod.bptt_grads(params, cfg, x, y)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss, updates
+
+        @jax.jit
+        def evaluate(params, key, x, y):
+            logits, _ = dfa_mod.miru_forward(params, cfg, x)
+            return acc_fn(logits, y)
+
+    elif ccfg.trainer == "dfa":
+        @jax.jit
+        def train_step(params, opt_state, key, x, y):
+            psi = opt_state["psi"]
+            loss, grads = dfa_mod.dfa_grads(params, psi, cfg, x, y)
+            new_params, _ = dfa_mod.sgd_kwta_update(
+                params, grads, ccfg.lr, ccfg.kwta_keep_frac,
+                ccfg.hidden_lr_scale)
+            updates = jax.tree.map(lambda a, b: a - b, new_params, params)
+            return new_params, opt_state, loss, updates
+
+        @jax.jit
+        def evaluate(params, key, x, y):
+            logits, _ = dfa_mod.miru_forward(params, cfg, x)
+            return acc_fn(logits, y)
+
+    elif ccfg.trainer == "dfa_hw":
+        @jax.jit
+        def train_step(params, opt_state, key, x, y):
+            psi = opt_state["psi"]
+            k_fwd, k_wr = jax.random.split(key)
+            fwd = lambda p, c, xs: hw_miru_forward(p, c, xs, k_fwd, ccfg)
+            loss, grads = dfa_mod.dfa_grads(params, psi, cfg, x, y,
+                                            forward_fn=fwd)
+            # Sparsify, then write with device variability and clip to the
+            # crossbar's dynamic range.
+            new_params = {}
+            updates = {}
+            kws = jax.random.split(k_wr, len(params))
+            hidden = ("w_h", "u_h", "b_h")
+            for kw, (name, p) in zip(kws, sorted(params.items())):
+                g = grads[name]
+                if ccfg.kwta_keep_frac is not None and g.ndim >= 2:
+                    g = kwta_global(g, ccfg.kwta_keep_frac)
+                s = ccfg.hidden_lr_scale if name in hidden else 1.0
+                dw = -ccfg.lr * s * g
+                noise = 1.0 + ccfg.write_sigma * jax.random.normal(
+                    kw, dw.shape)
+                dw = jnp.where(dw != 0, dw * noise, 0.0)
+                newp = jnp.clip(p + dw, -ccfg.weight_clip, ccfg.weight_clip)
+                new_params[name] = newp
+                updates[name] = newp - p
+            return new_params, opt_state, loss, updates
+
+        @jax.jit
+        def evaluate(params, key, x, y):
+            logits, _ = hw_miru_forward(params, cfg, x, key, ccfg)
+            return acc_fn(logits, y)
+
+    else:
+        raise ValueError(f"unknown trainer {ccfg.trainer!r}")
+
+    return train_step, evaluate, opt
+
+
+def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
+                   upto: int) -> np.ndarray:
+    accs = np.zeros(upto + 1)
+    for i, task in enumerate(tasks[:upto + 1]):
+        accs[i] = float(evaluate(params, key,
+                                 jnp.asarray(task.x_test),
+                                 jnp.asarray(task.y_test)))
+    return accs
+
+
+# ---------------------------------------------------------------------------
+# Main loop
+# ---------------------------------------------------------------------------
+
+def run_continual(cfg: MiRUConfig, ccfg: ContinualConfig,
+                  tasks: list[TaskData]) -> dict[str, Any]:
+    """Train through the task sequence; return the R matrix, MA, and
+    (optionally) endurance statistics."""
+    from repro.core.replay import ReplayBuffer
+
+    key = jax.random.PRNGKey(ccfg.seed)
+    key, k_param, k_psi = jax.random.split(key, 3)
+    params = init_miru_params(k_param, cfg)
+    psi = init_dfa_feedback(k_psi, cfg)
+
+    train_step, evaluate, opt = _make_steps(cfg, ccfg)
+    if ccfg.trainer == "adam":
+        opt_state = opt.init(params)
+    else:
+        opt_state = {"psi": psi}
+
+    T, F = tasks[0].x_train.shape[1:]
+    buffer = ReplayBuffer(ccfg.replay_capacity, (T, F),
+                          n_bits=ccfg.replay_bits, seed=ccfg.seed)
+    tracker = EnduranceTracker() if ccfg.track_endurance else None
+    host_rng = np.random.default_rng(ccfg.seed + 1)
+
+    n_tasks = len(tasks)
+    R = np.zeros((n_tasks, n_tasks))
+    losses: list[float] = []
+
+    for t, task in enumerate(tasks):
+        n = task.x_train.shape[0]
+        bs = ccfg.batch_size
+        for _ in range(ccfg.epochs_per_task):
+            order = host_rng.permutation(n)
+            for s in range(0, n - bs + 1, bs):
+                idx = order[s:s + bs]
+                xb = task.x_train[idx]
+                yb = task.y_train[idx]
+                # Mix in replay (after the first task has populated it).
+                if t > 0 and buffer.size > 0 and ccfg.replay_ratio > 0:
+                    n_rep = int(round(bs * ccfg.replay_ratio))
+                    if n_rep > 0:
+                        xr, yr = buffer.sample(host_rng, n_rep)
+                        xb = np.concatenate([xb[:bs - n_rep],
+                                             xr.reshape(-1, T, F)])
+                        yb = np.concatenate([yb[:bs - n_rep], yr])
+                key, k_step = jax.random.split(key)
+                params, opt_state, loss, updates = train_step(
+                    params, opt_state, k_step, jnp.asarray(xb),
+                    jnp.asarray(yb))
+                losses.append(float(loss))
+                if tracker is not None:
+                    tracker.record_update(
+                        {k: np.asarray(v != 0) for k, v in updates.items()
+                         if np.ndim(v) >= 2})
+                # Reservoir-sample the *fresh* examples into the buffer.
+                fresh = xb[:max(1, bs - int(round(bs * ccfg.replay_ratio)))]
+                fresh_y = yb[:fresh.shape[0]]
+                buffer.add_batch(fresh.reshape(fresh.shape[0], -1)
+                                 .reshape(fresh.shape[0], T, F), fresh_y)
+        key, k_eval = jax.random.split(key)
+        R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t)
+
+    out: dict[str, Any] = {
+        "R": R,
+        "MA": float(R[-1, :].mean()),
+        "acc_after_each": [float(R[t, :t + 1].mean())
+                           for t in range(n_tasks)],
+        "losses": losses,
+        "params": params,
+    }
+    if tracker is not None:
+        out["endurance"] = tracker
+    return out

@@ -1,0 +1,155 @@
+"""Minion Recurrent Unit (MiRU) — the paper's cell, eqs. (1)-(3).
+
+MiRU replaces GRU's *learned* update/reset gates with two scalar
+hyper-parameter coefficients:
+
+    h̃ᵗ = tanh(xᵗ W_h + (β ⊙ hᵗ⁻¹) U_h + b_h)          (1)
+    hᵗ  = λ ⊙ hᵗ⁻¹ + (1 − λ) ⊗ h̃ᵗ                     (2)
+    ŷᵗ  = softmax(hᵗ W_o + b_o)                         (3)
+
+β (reset): larger → retain more history inside the candidate computation.
+λ (update): larger → stronger reliance on the previous hidden state.
+
+This module is pure-functional JAX. The fused Pallas path
+(`kernels.ops.miru_scan`) implements the identical recurrence with the
+time loop carried in VMEM scratch; `use_fused=True` dispatches to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import glorot_uniform, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MiRUConfig:
+    """Configuration of a (input → MiRU hidden → readout) network."""
+    n_x: int                  # input features per time step
+    n_h: int                  # hidden MiRU units
+    n_y: int                  # readout classes
+    beta: float = 0.8         # reset coefficient β ∈ (0, 1]
+    lam: float = 0.5          # update coefficient λ ∈ [0, 1)
+    dtype: Any = jnp.float32
+    # K-WTA readout (the voltage-mode circuit approximating softmax). When
+    # None the readout is a plain softmax (used by the software models).
+    readout_k: Optional[int] = None
+
+    def __post_init__(self):
+        if not (0.0 < self.beta <= 1.0):
+            raise ValueError(f"beta must be in (0,1], got {self.beta}")
+        if not (0.0 <= self.lam < 1.0):
+            raise ValueError(f"lam must be in [0,1), got {self.lam}")
+
+
+def init_miru_params(key: jax.Array, cfg: MiRUConfig) -> dict[str, jax.Array]:
+    """Trainable parameters. Glorot for matrices, zeros for biases."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_h": glorot_uniform(k1, (cfg.n_x, cfg.n_h), cfg.dtype),
+        "u_h": glorot_uniform(k2, (cfg.n_h, cfg.n_h), cfg.dtype),
+        "b_h": jnp.zeros((cfg.n_h,), cfg.dtype),
+        "w_o": glorot_uniform(k3, (cfg.n_h, cfg.n_y), cfg.dtype),
+        "b_o": jnp.zeros((cfg.n_y,), cfg.dtype),
+    }
+
+
+def init_dfa_feedback(key: jax.Array, cfg: MiRUConfig,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Fixed random feedback matrix Ψ ∈ R^{n_y × n_h} (Algorithm 1, line 13).
+
+    Ψ is *not* trained; it projects the output error onto the hidden layer.
+    Scale follows the DFA literature: 1/sqrt(n_y) keeps the projected error
+    magnitude comparable to the true gradient.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(cfg.n_y).astype(jnp.float32)
+    return normal_init(key, (cfg.n_y, cfg.n_h), float(scale), cfg.dtype)
+
+
+def miru_cell(params: dict[str, jax.Array], cfg: MiRUConfig,
+              h_prev: jax.Array, x_t: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """One MiRU step. Returns (h_t, preact_t).
+
+    preact (the tanh argument) is returned because DFA needs tanh′(preact).
+    """
+    pre = x_t @ params["w_h"] + (cfg.beta * h_prev) @ params["u_h"] \
+        + params["b_h"]
+    h_tilde = jnp.tanh(pre)
+    h_t = cfg.lam * h_prev + (1.0 - cfg.lam) * h_tilde
+    return h_t, pre
+
+
+def miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
+                 x_seq: jax.Array, h0: Optional[jax.Array] = None,
+                 use_fused: bool = False,
+                 ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Run the full recurrence over a batch of sequences.
+
+    Args:
+      x_seq: (B, T, n_x).
+      h0:    (B, n_h) initial state, zeros if None.
+      use_fused: dispatch the recurrence to the Pallas `miru_scan` kernel.
+
+    Returns:
+      logits (B, n_y) from the *final* hidden state (the paper's readout
+      uses h^{n_T} only), and a dict of intermediates for training:
+        h_all   (B, T, n_h)  hidden states h¹..h^T
+        h_prev  (B, T, n_h)  h⁰..h^{T-1} (inputs to each step)
+        pre     (B, T, n_h)  tanh pre-activations
+    """
+    B, T, _ = x_seq.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
+
+    if use_fused:
+        from repro.kernels import ops as kops
+        # Pre-compute the input projection as one big matmul (MXU-friendly),
+        # then run the fused recurrence kernel over time.
+        xw = x_seq.reshape(B * T, cfg.n_x) @ params["w_h"]
+        xw = xw.reshape(B, T, cfg.n_h) + params["b_h"]
+        h_all, pre = kops.miru_scan(xw, params["u_h"], h0,
+                                    beta=cfg.beta, lam=cfg.lam)
+        h_prev = jnp.concatenate([h0[:, None, :], h_all[:, :-1, :]], axis=1)
+    else:
+        def step(h, x_t):
+            h_new, pre = miru_cell(params, cfg, h, x_t)
+            return h_new, (h_new, h, pre)
+
+        _, (h_all, h_prev, pre) = jax.lax.scan(
+            step, h0, jnp.swapaxes(x_seq, 0, 1))
+        h_all = jnp.swapaxes(h_all, 0, 1)
+        h_prev = jnp.swapaxes(h_prev, 0, 1)
+        pre = jnp.swapaxes(pre, 0, 1)
+
+    logits = miru_apply_readout(params, cfg, h_all[:, -1, :])
+    return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
+
+
+def miru_apply_readout(params: dict[str, jax.Array], cfg: MiRUConfig,
+                       h: jax.Array) -> jax.Array:
+    """Readout logits. With readout_k set, emulate the voltage-mode k-WTA
+    circuit: only the k largest logits survive (others pinned to a large
+    negative value so softmax ≈ 0), matching the hardware's approximate
+    softmax."""
+    logits = h @ params["w_o"] + params["b_o"]
+    if cfg.readout_k is not None and cfg.readout_k < cfg.n_y:
+        from repro.core.kwta import kwta_mask
+        mask = kwta_mask(logits, cfg.readout_k, by_magnitude=False)
+        logits = jnp.where(mask, logits, jnp.full_like(logits, -30.0))
+    return logits
+
+
+def miru_param_count(cfg: MiRUConfig) -> int:
+    """Trainable parameter count (excludes the fixed Ψ)."""
+    return (cfg.n_x * cfg.n_h + cfg.n_h * cfg.n_h + cfg.n_h
+            + cfg.n_h * cfg.n_y + cfg.n_y)
+
+
+def gru_param_count(n_x: int, n_h: int, n_y: int) -> int:
+    """Reference GRU parameter count (3 gates) for the compactness claim."""
+    return 3 * (n_x * n_h + n_h * n_h + n_h) + n_h * n_y + n_y

@@ -1,0 +1,186 @@
+"""Hardware experience-replay pipeline (§IV-A): reservoir sampler,
+stochastic quantizer, replay buffer.
+
+The paper's data-preparation unit is digital host-side logic (counter,
+xorshift32, modulus unit, LFSR-driven stochastic rounder). It is reproduced
+here bit-faithfully in numpy for the host path, plus vectorized jnp versions
+of the quantizers for the in-graph replay path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Xorshift32 — the paper's RNG (chosen over LFSR for unbiased indices)
+# ---------------------------------------------------------------------------
+
+class Xorshift32:
+    """32-bit xorshift PRNG (Marsaglia), exactly the 13/17/5 hardware circuit.
+
+    Produces decorrelated, uniform indices — the property the paper relies on
+    for equal-probability reservoir sampling (unlike an LFSR, whose maximal
+    sequence never emits 0 and is correlated between taps).
+    """
+
+    def __init__(self, seed: int = 0x9E3779B9):
+        seed = np.uint32(seed if seed != 0 else 0xDEADBEEF)
+        self.state = np.uint32(seed)
+
+    def next(self) -> int:
+        x = self.state
+        with np.errstate(over="ignore"):
+            x = np.uint32(x ^ np.uint32(x << np.uint32(13)))
+            x = np.uint32(x ^ np.uint32(x >> np.uint32(17)))
+            x = np.uint32(x ^ np.uint32(x << np.uint32(5)))
+        self.state = x
+        return int(x)
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Uniform int in [lo, hi] via the paper's modulus unit."""
+        span = hi - lo + 1
+        return lo + self.next() % span
+
+
+# ---------------------------------------------------------------------------
+# Stochastic quantizer (eqs. 4-6)
+# ---------------------------------------------------------------------------
+
+def stochastic_quantize(x: jax.Array, key: jax.Array, n_bits: int
+                        ) -> jax.Array:
+    """Quantize x∈[0,1] to n_bits integer codes with stochastic rounding.
+
+        z  = x · 2^{n_b}
+        q  = ⌊z⌋ + 1   if r < frac(z) and ⌊z⌋ < 2^{n_b} − 1
+             ⌊z⌋       otherwise,   r ~ U(0,1)
+
+    Unbiased: E[dequantize(q)] == x (up to the clip at the top code).
+    """
+    z = x * (2.0 ** n_bits)
+    fl = jnp.floor(z)
+    frac = z - fl
+    r = jax.random.uniform(key, x.shape)
+    top = 2.0 ** n_bits - 1.0
+    q = jnp.where((r < frac) & (fl < top), fl + 1.0, fl)
+    return jnp.clip(q, 0.0, top).astype(jnp.uint8 if n_bits <= 8
+                                        else jnp.uint16)
+
+
+def uniform_quantize(x: jax.Array, n_bits: int) -> jax.Array:
+    """Plain truncation quantizer (the baseline in Fig. 5a)."""
+    z = jnp.floor(x * (2.0 ** n_bits))
+    top = 2.0 ** n_bits - 1.0
+    return jnp.clip(z, 0.0, top).astype(jnp.uint8 if n_bits <= 8
+                                        else jnp.uint16)
+
+
+def dequantize(q: jax.Array, n_bits: int, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) / (2.0 ** n_bits)
+
+
+def lfsr_stochastic_quantize(x: np.ndarray, n_bits: int, seed: int = 1
+                             ) -> np.ndarray:
+    """Bit-faithful hardware rounder: an n_bits LFSR supplies r (Verilog
+    model in §IV-A-2). Host-side numpy; used in hardware-equivalence tests."""
+    taps = {4: (3, 2), 8: (7, 5, 4, 3)}[n_bits if n_bits in (4, 8) else 4]
+    state = seed & ((1 << n_bits) - 1) or 1
+    flat = x.reshape(-1)
+    out = np.empty_like(flat)
+    top = 2 ** n_bits - 1
+    for i, v in enumerate(flat):
+        fb = 0
+        for t in taps:
+            fb ^= (state >> t) & 1
+        state = ((state << 1) | fb) & ((1 << n_bits) - 1)
+        z = v * (2.0 ** n_bits)
+        fl = np.floor(z)
+        r = state / (2.0 ** n_bits)
+        q = fl + 1 if (r < (z - fl) and fl < top) else fl
+        out[i] = min(max(q, 0), top)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Reservoir sampler + replay buffer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReservoirSampler:
+    """Algorithm-R over a stream of unknown length with the paper's hardware
+    construction: counter + xorshift32 + modulus + index check.
+
+    Every element of the stream ends up in the buffer with equal probability
+    k/i after i presentations.
+    """
+    capacity: int
+    seed: int = 0x2545F491
+
+    def __post_init__(self):
+        self._rng = Xorshift32(self.seed)
+        self.count = 0  # the paper's counter i
+
+    def offer(self) -> Optional[int]:
+        """Present one example; return the buffer slot to overwrite, or None
+        if the example is not selected."""
+        self.count += 1
+        i = self.count
+        if i <= self.capacity:
+            return i - 1
+        # j uniform in [1, i] via modulus unit; keep iff j <= k.
+        j = self._rng.randint(1, i)
+        return j - 1 if j <= self.capacity else None
+
+
+class ReplayBuffer:
+    """Reservoir-sampled, stochastically-quantized replay store.
+
+    Features are stored as n_bits integer codes (8→4-bit halves the memory,
+    §IV-A-2); labels as int32. Host-side numpy storage — this is the DRAM
+    replay buffer, not an on-device tensor.
+    """
+
+    def __init__(self, capacity: int, feature_shape: tuple[int, ...],
+                 n_bits: int = 4, seed: int = 7):
+        self.capacity = capacity
+        self.n_bits = n_bits
+        self.sampler = ReservoirSampler(capacity, seed=seed ^ 0x5BD1E995)
+        self._feat = np.zeros((capacity, *feature_shape), dtype=np.uint8)
+        self._label = np.zeros((capacity,), dtype=np.int32)
+        self.size = 0
+        self._qkey = jax.random.PRNGKey(seed)
+
+    def add(self, x: np.ndarray, y: int) -> bool:
+        """Offer one (features∈[0,1], label) example to the reservoir."""
+        slot = self.sampler.offer()
+        if slot is None:
+            return False
+        self._qkey, sub = jax.random.split(self._qkey)
+        q = np.asarray(stochastic_quantize(jnp.asarray(x), sub, self.n_bits))
+        self._feat[slot] = q
+        self._label[slot] = y
+        self.size = min(self.size + 1, self.capacity)
+        return True
+
+    def add_batch(self, xs: np.ndarray, ys: np.ndarray) -> int:
+        added = 0
+        for x, y in zip(xs, ys):
+            added += bool(self.add(x, int(y)))
+        return added
+
+    def sample(self, rng: np.random.Generator, batch: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Uniform sample of dequantized examples for rehearsal."""
+        if self.size == 0:
+            raise ValueError("empty replay buffer")
+        idx = rng.integers(0, self.size, size=batch)
+        feats = self._feat[idx].astype(np.float32) / (2.0 ** self.n_bits)
+        return feats, self._label[idx]
+
+    @property
+    def nbytes(self) -> int:
+        return self._feat.nbytes + self._label.nbytes

@@ -1,0 +1,15 @@
+"""Data pipeline: synthetic generators + deterministic sharded batching.
+
+MNIST / CIFAR-10 are not available offline; `synthetic` provides matched-
+geometry substitutes (DESIGN.md §8): permuted-prototype sequence streams
+(28 steps × 28 features, 10 classes) and split Gaussian-mixture "ResNet-18
+feature" streams (512-d), both organized as domain-incremental task
+sequences. `pipeline` provides the sharded, deterministic, restart-safe
+batch iterator used by the LM trainer.
+"""
+from repro.data.synthetic import (make_permuted_tasks, make_split_tasks,
+                                  TaskData, lm_token_batch)
+from repro.data.pipeline import ShardedBatcher, DataState
+
+__all__ = ["make_permuted_tasks", "make_split_tasks", "TaskData",
+           "lm_token_batch", "ShardedBatcher", "DataState"]

@@ -1,0 +1,65 @@
+"""Deterministic, restart-safe, sharded batch iterator.
+
+Design goals at 1000+ nodes:
+  * Determinism: batch content is a pure function of (seed, step) — any
+    worker can reconstruct any step, which is what makes checkpoint/restart
+    and elastic rescale correct without data-loader state transfer.
+  * Sharding: each process materializes only its slice of the global batch
+    (process_index/process_count), placed with jax.make_array_from_callback
+    onto the data axis of the mesh.
+  * Straggler tolerance: because batches are recomputable, a replacement
+    worker can join at step s and produce bit-identical data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataState:
+    """The entire pipeline state — one integer. Checkpointable trivially."""
+    step: int = 0
+    seed: int = 0
+
+
+class ShardedBatcher:
+    """Produces per-step batches deterministically from (seed, step).
+
+    ``gen_fn(rng, step) -> dict[str, np.ndarray]`` builds the *global*
+    batch; sharding to devices happens via jax.device_put with the target
+    sharding (on a single host this is a plain put; under multi-process it
+    would use make_array_from_process_local_data — same call signature).
+    """
+
+    def __init__(self, gen_fn: Callable[[np.random.Generator, int],
+                                        dict[str, np.ndarray]],
+                 seed: int = 0, sharding: Optional[Any] = None):
+        self._gen = gen_fn
+        self.state = DataState(step=0, seed=seed)
+        self._sharding = sharding
+
+    def peek(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.state.seed, step]))
+        return self._gen(rng, step)
+
+    def next(self) -> dict[str, Any]:
+        batch = self.peek(self.state.step)
+        self.state.step += 1
+        if self._sharding is not None:
+            batch = {k: jax.device_put(v, self._sharding[k]
+                                       if isinstance(self._sharding, dict)
+                                       else self._sharding)
+                     for k, v in batch.items()}
+        return batch
+
+    # -- checkpoint integration ------------------------------------------
+    def state_dict(self) -> dict[str, int]:
+        return {"step": self.state.step, "seed": self.state.seed}
+
+    def load_state_dict(self, d: dict[str, int]) -> None:
+        self.state = DataState(step=int(d["step"]), seed=int(d["seed"]))

@@ -1,0 +1,10 @@
+"""Distribution: mesh axes, per-parameter PartitionSpecs, activation
+sharding context, collective helpers."""
+from repro.distributed.context import (ShardingContext, sharding_scope,
+                                       current_context, act_constraint)
+from repro.distributed.sharding import (param_specs, batch_specs,
+                                        opt_state_specs, cache_specs)
+
+__all__ = ["ShardingContext", "sharding_scope", "current_context",
+           "act_constraint", "param_specs", "batch_specs",
+           "opt_state_specs", "cache_specs"]

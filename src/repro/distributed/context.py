@@ -1,0 +1,99 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher installs a ShardingContext and
+the model calls ``act_constraint(x, kind)`` at a few strategic points
+(post-embedding, residual stream, attention output). Without a context
+(unit tests, single-device smoke runs) the helpers are no-ops, so the
+same model code runs everywhere.
+
+Kinds:
+  "btd"  — (batch, seq, d_model) residual stream. Batch over the DP axes;
+           seq over the TP axis when sequence parallelism is enabled
+           (what lets 61-layer × 1M-token remat fit HBM).
+  "bt"   — (batch, seq) token arrays.
+  "btv"  — logits: batch over DP, vocab over TP.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: jax.sharding.Mesh
+    batch_axes: tuple[str, ...] = ("data",)   # ("pod","data") multi-pod
+    model_axis: str = "model"
+    sequence_parallel: bool = True
+    # Attention context exchange: "gather" lets GSPMD all-gather K/V per
+    # chunk (P× the tensor volume); "ulysses" reshards seq→heads with
+    # all-to-alls (1× volume) around the attention op. §Perf iteration 2.
+    attn_mode: str = "gather"
+    # MoE dispatch: "global" sort-based capacity dispatch (GSPMD resolves
+    # the data-dependent gathers — collective-catastrophic at deepseek
+    # scale); "ep" shard_map expert parallelism with explicit all-to-all
+    # (k·D bytes/token, the physical minimum). §Perf iteration 5.
+    moe_mode: str = "global"
+
+    def spec(self, kind: str) -> P:
+        b = self.batch_axes if len(self.batch_axes) > 1 \
+            else self.batch_axes[0]
+        if kind == "btd":
+            seq = self.model_axis if self.sequence_parallel else None
+            return P(b, seq, None)
+        if kind == "bt":
+            return P(b, None)
+        if kind == "btv":
+            return P(b, None, self.model_axis)
+        if kind == "bshd":       # ulysses: heads sharded, seq gathered
+            return P(b, None, self.model_axis, None)
+        if kind == "bshd_full":  # K/V explicitly gathered while still
+            return P(b, None, None, None)   # bf16 (anchors the all-gather
+            # before any f32 convert the backend might hoist)
+        if kind == "bsh":        # (B, S, heads): heads over model (SSM dt)
+            return P(b, None, self.model_axis)
+        if kind == "bshd_seq":   # (B, S, H, d) with seq kept sharded —
+            seq = self.model_axis if self.sequence_parallel else None
+            return P(b, seq, None, None)    # anchor before an a2a reshard
+        if kind == "bs__":       # (B, S, groups, state): seq gathered,
+            return P(b, None, None, None)   # small B/C tensors replicated
+        raise ValueError(kind)
+
+
+_tls = threading.local()
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_scope(ctx: ShardingContext):
+    prev = current_context()
+    _tls.ctx = ctx
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def act_constraint(x: jax.Array, kind: str) -> jax.Array:
+    ctx = current_context()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.spec(kind)))
+
+
+def ulysses_enabled(n_heads: int) -> bool:
+    """True when the context requests all-to-all attention and the head
+    count divides the model axis."""
+    ctx = current_context()
+    if ctx is None or ctx.attn_mode != "ulysses":
+        return False
+    return n_heads % ctx.mesh.shape[ctx.model_axis] == 0

@@ -1,0 +1,238 @@
+"""Per-parameter PartitionSpec rules (DP/FSDP/TP/EP) for every arch.
+
+Scheme (DESIGN.md §6), on mesh axes (data, model) [+ replicated pod]:
+  * 2-D projections (d_in, d_out): P('data','model') — FSDP × TP. The
+    residual-side dim shards over 'data' (gathered per-layer under FSDP),
+    the hidden/head dim over 'model' (tensor parallel).
+  * back-projections to the residual (wo / w_down / out_proj):
+    P('model','data') — keeps the contracting dim on 'model' so the TP
+    pair (up-proj, down-proj) needs a single all-reduce.
+  * MoE expert banks (E, D, F): experts over 'model' (EP) when E divides;
+    otherwise fall back to TP over F. FSDP over D either way.
+  * embeddings / lm_head: vocab over 'model'.
+  * vectors (norms, biases, scalars): replicated.
+Leading layer-stack (scan) dims are never sharded.
+
+Divisibility is checked per-dim; anything non-divisible degrades to
+replicated on that dim rather than relying on GSPMD padding (predictable
+memory accounting in the dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+_BACK_PROJ = ("wo", "w_down", "out_proj")
+_VOCAB = ("embed", "lm_head")
+# Per-layer vectors (norm scales, biases, SSM scalars): replicated even
+# when stacked into (L, dim) — sharding them buys nothing and costs a
+# gather per layer.
+_VECTOR_NAMES = frozenset({
+    "norm", "norm1", "norm2", "norm_x", "final_norm", "enc_norm",
+    "q_norm", "k_norm", "kv_norm", "b", "bias", "bq", "bk", "bv", "b_h",
+    "b_o", "conv_b", "a_log", "dt_bias", "d_skip",
+})
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _ok(dim: int, mesh, axis: Optional[str]) -> Optional[str]:
+    if axis is None:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(path: tuple[str, ...], leaf, cfg: ModelConfig, mesh,
+               fsdp_axis: str = "data", tp_axis: str = "model",
+               replicate_small_banks: bool = False) -> P:
+    name = path[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    if name in _VECTOR_NAMES:
+        return P(*([None] * nd))
+    # How many leading dims are layer-stack dims: treat every dim before
+    # the last-2 (matrices) / last-1 (vectors) as stack/e dims, except MoE
+    # expert banks handled explicitly.
+    if name in ("router",):
+        d = _ok(shape[-2], mesh, fsdp_axis)
+        return P(*([None] * (nd - 2)), d, None)
+    if name in ("w_gate", "w_up", "w_down") and nd >= 3 \
+            and path[-2] != "shared" and cfg.n_experts > 0 \
+            and shape[-3] == cfg.n_experts:
+        E = shape[-3]
+        ep = _ok(E, mesh, tp_axis)
+        bank_bytes = E * shape[-2] * shape[-1] * 2   # bf16
+        replicate = replicate_small_banks and bank_bytes <= 2.5e8
+        if name == "w_down":                     # (…, E, F, D)
+            if ep:
+                return P(*([None] * (nd - 3)), ep, None,
+                         _ok(shape[-1], mesh, fsdp_axis))
+            if replicate:                        # small bank + EP-local
+                return P(*([None] * nd))         # dispatch: replicate
+            return P(*([None] * (nd - 3)), None,
+                     _ok(shape[-2], mesh, tp_axis),
+                     _ok(shape[-1], mesh, fsdp_axis))
+        # (…, E, D, F)
+        if ep:
+            return P(*([None] * (nd - 3)), ep,
+                     _ok(shape[-2], mesh, fsdp_axis), None)
+        if replicate:
+            return P(*([None] * nd))
+        return P(*([None] * (nd - 3)), None,
+                 _ok(shape[-2], mesh, fsdp_axis),
+                 _ok(shape[-1], mesh, tp_axis))
+    if name in _VOCAB:
+        if name == "embed":                      # (V, D)
+            return P(_ok(shape[0], mesh, tp_axis), None)
+        return P(_ok(shape[-2], mesh, fsdp_axis),
+                 _ok(shape[-1], mesh, tp_axis))  # lm_head (D, V)
+    if nd >= 2 and shape[-1] > 1 and shape[-2] > 1:
+        lead = [None] * (nd - 2)
+        if name in _BACK_PROJ:
+            return P(*lead, _ok(shape[-2], mesh, tp_axis),
+                     _ok(shape[-1], mesh, fsdp_axis))
+        return P(*lead, _ok(shape[-2], mesh, fsdp_axis),
+                 _ok(shape[-1], mesh, tp_axis))
+    return P(*([None] * nd))                     # vectors / scalars
+
+
+def param_specs(cfg: ModelConfig, shapes: PyTree, mesh,
+                fsdp: bool = True,
+                replicate_small_banks: bool = False) -> PyTree:
+    """PartitionSpec tree matching a param (or ShapeDtypeStruct) tree.
+
+    ``fsdp=False`` (serving mode): drop the 'data' axis from weights —
+    pure TP, no per-layer weight all-gathers at decode.
+    ``replicate_small_banks``: with EP-local MoE dispatch (moe_mode=ep),
+    sub-256 MB expert banks replicate per device (zero MoE collectives);
+    under global dispatch they stay TP-sharded."""
+    def leaf(path, x):
+        spec = _leaf_spec(path, x, cfg, mesh,
+                          replicate_small_banks=replicate_small_banks)
+        if fsdp:
+            return spec
+        return P(*[None if a == "data" else a for a in spec])
+
+    return _map_with_path(leaf, shapes)
+
+
+def _map_with_path(fn, tree: PyTree) -> PyTree:
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            return type(node)(*(walk(path + (f,), v)
+                                for f, v in zip(node._fields, node)))
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(path + (str(i),), v)
+                              for i, v in enumerate(node))
+        return fn(path, node)
+    return walk((), tree)
+
+
+def batch_specs(batch_shapes: PyTree, mesh, multi_pod: bool) -> PyTree:
+    b = ("pod", "data") if multi_pod else "data"
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if leaf.shape[0] % np.prod([mesh.shape[a] for a in
+                                    (b if isinstance(b, tuple) else (b,))]
+                                   ) != 0:
+            return P(*([None] * nd))
+        return P(b, *([None] * (nd - 1)))
+
+    return _map_with_path(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes: PyTree, mesh, multi_pod: bool) -> PyTree:
+    """Decode caches: stacked (L, B, S, …) — shard batch over all DP axes
+    (and the model axis too when it divides: decode batches are the only
+    tensors big enough to need 256-way sharding)."""
+    axes = (["pod"] if multi_pod else []) + ["data", "model"]
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd < 2:
+            return P(*([None] * nd))
+        B = leaf.shape[1] if nd >= 3 else leaf.shape[0]
+        bdim = 1 if nd >= 3 else 0
+        use = []
+        rem = B
+        for a in axes:
+            if rem % mesh.shape[a] == 0:
+                use.append(a)
+                rem //= mesh.shape[a]
+        out = [None] * nd
+        if use:
+            out[bdim] = tuple(use) if len(use) > 1 else use[0]
+        # Long-context/small-batch caches: put unused axes on the widest
+        # trailing dim that divides (TP over kv-channels / heads).
+        unused = [a for a in axes if a not in use]
+        for a in unused:
+            for dim in range(nd - 1, bdim, -1):
+                if out[dim] is None and dim != bdim \
+                        and leaf.shape[dim] % mesh.shape[a] == 0 \
+                        and leaf.shape[dim] >= mesh.shape[a]:
+                    out[dim] = a
+                    break
+        return P(*out)
+
+    return _map_with_path(spec, cache_shapes)
+
+
+def opt_state_specs(opt_shapes: PyTree, pspecs: PyTree, mesh) -> PyTree:
+    """Optimizer state sharding: moments inherit their parameter's spec;
+    flattened 8-bit moments shard over (data, model); scalars replicate."""
+    flat_specs = {tuple(p): s for p, s in _flatten(pspecs)}
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        # 8-bit moments are shape-preserving: codes inherit the param's
+        # spec; block scales inherit it with the last dim unsharded.
+        mpath = path[:-1] if path and path[-1] in ("codes", "scales") \
+            else path
+        for plen in range(len(mpath), 0, -1):
+            cand = tuple(mpath[-plen:])
+            if cand in flat_specs:
+                s = flat_specs[cand]
+                if len(s) == nd:
+                    if path[-1] == "scales":
+                        return P(*s[:-1], None)
+                    if path[-1] == "codes":
+                        # padded last dim may break divisibility
+                        last = s[-1]
+                        if last is not None and leaf.shape[-1] % \
+                                mesh.shape[last] != 0:
+                            last = None
+                        return P(*s[:-1], last)
+                    return s
+        if nd == 1 and leaf.shape[0] % (mesh.shape["data"]
+                                        * mesh.shape["model"]) == 0:
+            return P(("data", "model"))
+        return P(*([None] * nd))
+
+    return _map_with_path(spec, opt_shapes)
+
+
+def _flatten(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, path + (k,))
+    elif isinstance(tree, (list, tuple)) and not isinstance(tree, P):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, path + (str(i),))
+    else:
+        yield path, tree

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for M2RU's compute hot-spots.
+
+- wbs_matmul: weighted-bit-streaming crossbar VMM (the paper's §V-A,
+  TPU-adapted: bit-planes as MXU matmuls, fused gains + ADC epilogue).
+- miru_scan:  fused MiRU recurrence (grid-sequential time, h carried in
+  VMEM scratch — the TPU analogue of the paper's tiled interpolation).
+- kwta:       k-winner-take-all via threshold bisection (digital twin of
+  the voltage-mode circuit, Fig. 3-Right).
+- flash_attention: fwd + dq/dkv bwd kernels — the beyond-paper fix for
+  the score-traffic memory bound found in the dry-run roofline.
+
+ops.py — public jit'd wrappers (padding, dispatch, interpret-mode on CPU).
+ref.py — pure-jnp oracles; every kernel is swept against them in
+tests/test_kernels.py across shapes and dtypes.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

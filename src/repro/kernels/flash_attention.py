@@ -1,0 +1,271 @@
+"""Pallas TPU kernel: flash attention forward (beyond-paper optimization).
+
+The dry-run roofline shows every train/prefill cell's memory term is
+dominated by materialized f32 score chunks — XLA cannot fuse through the
+two dots of attention, so (B,H,Sq,chunk) buffers round-trip HBM ~5× per
+layer. This kernel runs the whole online-softmax chain in VMEM: scores,
+probabilities, and the running (m, l, acc) never leave the chip.
+(EXPERIMENTS.md §Perf iteration 4 quantifies the removed traffic.)
+
+Grid (BH, Sq/bq, Sk/bk), K innermost; (m, l, acc) carried in VMEM scratch
+across the K sweep; epilogue normalizes and writes out + logsumexp
+(the residual needed by the flash backward).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, out_ref, lse_ref,
+                      m_scr, l_scr, acc_scr, *,
+                      causal: bool, bq: int, bk: int, n_k: int,
+                      sk_true: int, scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                   # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = ki < sk_true
+    if causal:
+        qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        valid = valid & (ki <= qi)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                             # stays in VMEM
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _epilogue():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0] = (acc_scr[...] / l).astype(out_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(l))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+# dq kernel: grid (BH, Sq/bq, Sk/bk), K innermost — dq block accumulates in
+# VMEM scratch while streaming K/V chunks.
+# dkv kernel: grid (BH, Sk/bk, Sq/bq), Q innermost — dk/dv blocks accumulate
+# while streaming Q/dO chunks. Probabilities are recomputed from (q,k,lse);
+# nothing score-shaped ever reaches HBM (the flash recipe).
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dq_ref, dq_scr, *, causal, bq, bk, n_k, sk_true,
+                     scale):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = ki < sk_true
+    if causal:
+        qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        valid = valid & (ki <= qi)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - lse)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    dq_scr[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(kb == n_k - 1)
+    def _write():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                      dk_ref, dv_ref, dk_scr, dv_scr, *, causal, bq, bk,
+                      n_q, sk_true, scale):
+    qb = pl.program_id(2)
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    kb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = ki < sk_true
+    if causal:
+        qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        valid = valid & (ki <= qi)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - lse)                                 # (bq, bk)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bk, dv)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (bk, dh)
+
+    @pl.when(qb == n_q - 1)
+    def _write():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "bq", "bk", "sk_true", "interpret"))
+def flash_attention_bwd_pallas(q, k, v, out, lse, dout,
+                               causal: bool = True, bq: int = 128,
+                               bk: int = 128, sk_true: int | None = None,
+                               interpret: bool = False):
+    """Backward: q (BH,Sq,dh); k/v (BH,Sk,·); out/dout (BH,Sq,dv);
+    lse (BH,Sq). Returns (dq, dk, dv)."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    dv_dim = v.shape[2]
+    assert Sq % bq == 0 and Sk % bk == 0
+    if sk_true is None:
+        sk_true = Sk
+    scale = dh ** -0.5
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                             # (BH, Sq)
+
+    common_in = [
+        pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),   # q
+        pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),   # k
+        pl.BlockSpec((1, bk, dv_dim), lambda b, i, j: (b, j, 0)),  # v
+        pl.BlockSpec((1, bq, dv_dim), lambda b, i, j: (b, i, 0)),  # dout
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),          # lse
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),          # delta
+    ]
+    dq = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, causal=causal, bq=bq, bk=bk,
+                          n_k=Sk // bk, sk_true=sk_true, scale=scale),
+        grid=(BH, Sq // bq, Sk // bk),
+        in_specs=common_in,
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    # dkv grid transposes the block roles: i ↔ KV block, j ↔ Q block.
+    dkv_in = [
+        pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, j, 0)),   # q
+        pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, i, 0)),   # k
+        pl.BlockSpec((1, bk, dv_dim), lambda b, i, j: (b, i, 0)),  # v
+        pl.BlockSpec((1, bq, dv_dim), lambda b, i, j: (b, j, 0)),  # dout
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, j)),          # lse
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, j)),          # delta
+    ]
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, causal=causal, bq=bq, bk=bk,
+                          n_q=Sq // bq, sk_true=sk_true, scale=scale),
+        grid=(BH, Sk // bk, Sq // bq),
+        in_specs=dkv_in,
+        out_specs=[
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dv_dim), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sk, dh), k.dtype),
+            jax.ShapeDtypeStruct((BH, Sk, dv_dim), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, dh), jnp.float32),
+                        pltpu.VMEM((bk, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "bq", "bk", "sk_true", "interpret"))
+def flash_attention_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                               causal: bool = True, bq: int = 128,
+                               bk: int = 128, sk_true: int | None = None,
+                               interpret: bool = False
+                               ) -> tuple[jax.Array, jax.Array]:
+    """q (BH, Sq, dh); k/v (BH, Sk, dh|dv), Sq % bq == Sk % bk == 0.
+
+    Returns (out (BH, Sq, dv), lse (BH, Sq)).
+    """
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[2]
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    if sk_true is None:
+        sk_true = Sk
+    n_k = Sk // bk
+    scale = dh ** -0.5
+    grid = (BH, Sq // bq, n_k)
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, bq=bq, bk=bk, n_k=n_k,
+        sk_true=sk_true, scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denom
+            pltpu.VMEM((bq, dv), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused MiRU recurrence (eqs. 1-2).
+
+The input projection x@W_h + b_h is one big MXU matmul done *outside* (it
+has no sequential dependency); this kernel runs the inherently-sequential
+part — the (β·h)U_h recurrence and λ-interpolation — with the hidden state
+carried in VMEM scratch across a sequential time grid.
+
+This is the TPU analogue of the paper's tiling scheme (§IV-B-1): batch
+tiles are the concurrent units ("tiles work concurrently at the layer
+level"), time steps are sequential within each tile, and the carried
+h never leaves VMEM between steps (the paper's shift-register file).
+
+Grid = (B/bm, T), T innermost ⇒ for a fixed batch tile the kernel visits
+t = 0..T−1 in order; `h_scratch` is the carried state, re-seeded from h0
+at t == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _miru_kernel(xw_ref, u_ref, h0_ref, hall_ref, pre_ref, h_scratch, *,
+                 beta: float, lam: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)
+
+    h = h_scratch[...]
+    u = u_ref[...].astype(jnp.float32)
+    pre = xw_ref[:, 0, :].astype(jnp.float32) + jnp.dot(
+        beta * h, u, preferred_element_type=jnp.float32)
+    h_new = lam * h + (1.0 - lam) * jnp.tanh(pre)
+    h_scratch[...] = h_new
+    hall_ref[:, 0, :] = h_new
+    pre_ref[:, 0, :] = pre
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "lam", "bm",
+                                             "interpret"))
+def miru_scan_pallas(xw: jax.Array, u_h: jax.Array, h0: jax.Array,
+                     beta: float, lam: float, bm: int = 8,
+                     interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """xw (B, T, H) precomputed input drive; u_h (H, H); h0 (B, H).
+
+    Returns (h_all, pre), both (B, T, H) f32. B must divide by bm and H
+    should be 128-aligned (ops.py pads).
+    """
+    B, T, H = xw.shape
+    assert B % bm == 0, (B, bm)
+    assert u_h.shape == (H, H) and h0.shape == (B, H)
+
+    grid = (B // bm, T)
+    kernel = functools.partial(_miru_kernel, beta=float(beta),
+                               lam=float(lam))
+    h_all, pre = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),  # xw
+            pl.BlockSpec((H, H), lambda i, t: (0, 0)),         # u_h
+            pl.BlockSpec((bm, H), lambda i, t: (i, 0)),        # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),  # h_all
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),  # pre
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, H), jnp.float32)],
+        interpret=interpret,
+    )(xw, u_h, h0)
+    return h_all, pre

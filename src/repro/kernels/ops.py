@@ -1,0 +1,156 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: shape padding to block multiples, dtype handling,
+interpret-mode dispatch (interpret=True on CPU — kernels execute in
+Python for bit-exact validation; compiled on TPU), and jnp fallbacks
+where a kernel's VMEM contract would be violated (documented per-op).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kwta import kwta_pallas
+from repro.kernels.miru_scan import miru_scan_pallas
+from repro.kernels.wbs_matmul import wbs_matmul_pallas
+from repro.utils import round_up
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
+    return jnp.pad(x, ((0, m - x.shape[0]), (0, n - x.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# WBS matmul
+# ---------------------------------------------------------------------------
+
+def quantize_inputs(x: jax.Array, n_bits: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Sign-magnitude digitization of x ∈ [-1, 1] (the host-side buffer
+    write that precedes WBS streaming)."""
+    top = 2 ** n_bits - 1
+    mag = jnp.clip(jnp.round(jnp.abs(x) * top), 0, top)
+    return jnp.sign(x).astype(jnp.int8), mag.astype(jnp.uint8)
+
+
+def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
+               gains: jax.Array, adc_bits: Optional[int] = None,
+               adc_range: float = 4.0, block: int = 128) -> jax.Array:
+    """Padded/dispatched WBS crossbar matmul. See wbs_matmul_pallas."""
+    M, K = sign.shape
+    _, N = w.shape
+    bm = min(block, round_up(M, 8))
+    bk = min(block, round_up(K, 128))
+    bn = min(block, round_up(N, 128))
+    Mp, Kp, Np = round_up(M, bm), round_up(K, bk), round_up(N, bn)
+    sign_p = _pad2(sign, Mp, Kp)     # sign=0 ⇒ padded inputs contribute 0
+    code_p = _pad2(code, Mp, Kp)
+    w_p = _pad2(w, Kp, Np)
+    y = wbs_matmul_pallas(sign_p, code_p, w_p, gains, adc_bits=adc_bits,
+                          adc_range=adc_range, bm=bm, bk=bk, bn=bn,
+                          interpret=_interpret())
+    return y[:M, :N]
+
+
+def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
+              adc_bits: Optional[int] = 8, adc_range: float = 4.0,
+              gains: Optional[jax.Array] = None) -> jax.Array:
+    """QuantMode.WBS linear layer: float activations → sign-magnitude
+    codes → bit-plane crossbar matmul. x (..., K) @ w (K, N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if gains is None:
+        gains = 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
+    sign, code = quantize_inputs(x2, n_bits)
+    y = wbs_matmul(sign, code, w, gains, adc_bits, adc_range)
+    return y.reshape(*lead, w.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MiRU fused recurrence
+# ---------------------------------------------------------------------------
+
+def miru_scan(xw: jax.Array, u_h: jax.Array, h0: jax.Array, beta: float,
+              lam: float) -> tuple[jax.Array, jax.Array]:
+    """Fused MiRU recurrence. xw (B,T,H), u_h (H,H), h0 (B,H)."""
+    B, T, H = xw.shape
+    bm = 8 if B >= 8 else B
+    Bp = round_up(B, bm)
+    Hp = round_up(H, 128)
+    if Bp != B or Hp != H:
+        xw_p = jnp.pad(xw, ((0, Bp - B), (0, 0), (0, Hp - H)))
+        u_p = jnp.pad(u_h, ((0, Hp - H), (0, Hp - H)))
+        h0_p = jnp.pad(h0, ((0, Bp - B), (0, Hp - H)))
+    else:
+        xw_p, u_p, h0_p = xw, u_h, h0
+    h_all, pre = miru_scan_pallas(xw_p, u_p, h0_p, beta=beta, lam=lam,
+                                  bm=bm, interpret=_interpret())
+    return h_all[:B, :, :H], pre[:B, :, :H]
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (forward)
+# ---------------------------------------------------------------------------
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, bq: int = 128, bk: int = 128
+                        ) -> tuple[jax.Array, jax.Array]:
+    """(B, Sq, H, dh) layout wrapper around the Pallas flash forward.
+
+    Pads Sq/Sk to block multiples; repeats GQA KV heads; returns
+    (out (B,Sq,H,dv), lse (B,H,Sq))."""
+    from repro.kernels.flash_attention import flash_attention_fwd_pallas
+    B, Sq, H, dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    rep = H // Kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    dv = v.shape[-1]
+    bq = min(bq, round_up(Sq, 8))
+    bk = min(bk, round_up(Sk, 8))
+    Sqp, Skp = round_up(Sq, bq), round_up(Sk, bk)
+    qt = jnp.swapaxes(q, 1, 2).reshape(B * H, Sq, dh)
+    kt = jnp.swapaxes(k, 1, 2).reshape(B * H, Sk, dh)
+    vt = jnp.swapaxes(v, 1, 2).reshape(B * H, Sk, dv)
+    qt = jnp.pad(qt, ((0, 0), (0, Sqp - Sq), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, Skp - Sk), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, Skp - Sk), (0, 0)))
+    out, lse = flash_attention_fwd_pallas(
+        qt, kt, vt, causal=causal, bq=bq, bk=bk, sk_true=Sk,
+        interpret=_interpret())
+    out = out[:, :Sq].reshape(B, H, Sq, dv)
+    return jnp.swapaxes(out, 1, 2), lse[:, :Sq].reshape(B, H, Sq)
+
+
+# ---------------------------------------------------------------------------
+# k-WTA
+# ---------------------------------------------------------------------------
+
+_KWTA_VMEM_LIMIT = 1 << 20  # rows longer than this fall back to jnp top_k
+
+
+def kwta(x: jax.Array, k: int, iters: int = 32) -> jax.Array:
+    """Per-row k-WTA by magnitude. 1-D input treated as a single row."""
+    squeeze = x.ndim == 1
+    x2 = x[None, :] if squeeze else x
+    R, N = x2.shape
+    if k >= N:
+        return x
+    if N > _KWTA_VMEM_LIMIT:
+        out = ref.kwta_ref(x2, k)       # exact jnp fallback (huge rows)
+    else:
+        br = 8 if R >= 8 else R
+        Rp = round_up(R, br)
+        x_p = jnp.pad(x2, ((0, Rp - R), (0, 0)))
+        out = kwta_pallas(x_p, k=k, iters=iters, br=br,
+                          interpret=_interpret())[:R]
+    return out[0] if squeeze else out

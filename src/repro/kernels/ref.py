@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's *exact* integer/bit semantics so the
+sweep tests can assert allclose at fp32 tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wbs_matmul_ref(sign: jax.Array, code: jax.Array, w: jax.Array,
+                   gains: jax.Array, adc_bits: int | None = None,
+                   adc_range: float = 4.0) -> jax.Array:
+    """Weighted-bit-streaming VMM oracle.
+
+    sign (M, K) int8 ∈ {-1, 0, +1}; code (M, K) uint8 magnitudes;
+    w (K, N); gains (n_bits,) MSB-first plane gains (ideal: 2^{-1}..2^{-nb}).
+
+    y = Σ_k gains[k] · (plane_k ⊙ sign) @ w, rescaled by 2^nb/(2^nb − 1)
+    so ideal gains reproduce the sign-magnitude fixed-point product, then
+    optionally ADC-quantized.
+    """
+    n_bits = gains.shape[0]
+    ks = jnp.arange(n_bits - 1, -1, -1, dtype=code.dtype)       # MSB first
+    planes = (code[None, :, :] >> ks[:, None, None]) & 1        # (nb, M, K)
+    signed = planes.astype(jnp.float32) * sign.astype(jnp.float32)[None]
+    y = jnp.einsum("b,bmk,kn->mn", gains.astype(jnp.float32), signed,
+                   w.astype(jnp.float32))
+    y = y * (2.0 ** n_bits / (2.0 ** n_bits - 1.0))
+    if adc_bits is not None:
+        levels = 2 ** adc_bits
+        step = 2.0 * adc_range / levels
+        q = jnp.clip(jnp.round(y / step), -(levels // 2), levels // 2 - 1)
+        y = q * step
+    return y
+
+
+def miru_scan_ref(xw: jax.Array, u_h: jax.Array, h0: jax.Array,
+                  beta: float, lam: float
+                  ) -> tuple[jax.Array, jax.Array]:
+    """MiRU recurrence oracle.
+
+    xw (B, T, H) = x@W_h + b_h precomputed; u_h (H, H); h0 (B, H).
+    Returns (h_all (B,T,H), pre (B,T,H)).
+    """
+    def step(h, xw_t):
+        pre = xw_t + (beta * h) @ u_h.astype(jnp.float32)
+        h_new = lam * h + (1.0 - lam) * jnp.tanh(pre)
+        return h_new, (h_new, pre)
+
+    _, (h_all, pre) = jax.lax.scan(step, h0.astype(jnp.float32),
+                                   jnp.swapaxes(xw, 0, 1).astype(jnp.float32))
+    return jnp.swapaxes(h_all, 0, 1), jnp.swapaxes(pre, 0, 1)
+
+
+def kwta_ref(x: jax.Array, k: int) -> jax.Array:
+    """Exact per-row k-WTA by magnitude (rows = leading dim)."""
+    if k >= x.shape[-1]:
+        return x
+    mag = jnp.abs(x)
+    kth = jax.lax.top_k(mag, k)[0][..., -1:]
+    return jnp.where(mag >= kth, x, jnp.zeros_like(x))

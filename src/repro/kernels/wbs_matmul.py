@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: weighted-bit-streaming crossbar matmul (§V-A).
+
+TPU adaptation of the paper's WBS (DESIGN.md §2): the chip streams input
+bits serially over time with memristor-ratio gains 2^{-k}; the MXU instead
+evaluates all n_b bit-planes as matmuls inside one VMEM-resident kernel,
+accumulating gain-weighted partial products in an fp32 scratch accumulator
+(the integrator) and applying the ADC quantizer in the epilogue.
+
+Dataflow per (i, j, k) grid cell (K innermost → accumulator carries):
+    acc[i,j] += Σ_b gains[b] · ((code_tile >> (nb−1−b)) & 1 ⊙ sign) @ w_tile
+epilogue (k == K−1):
+    out = ADC( acc · 2^nb/(2^nb − 1) )
+
+Block shapes default to 128-aligned tiles (MXU native); the ops.py wrapper
+pads arbitrary shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wbs_kernel(sign_ref, code_ref, w_ref, gains_ref, out_ref, acc_ref, *,
+                n_bits: int, n_k: int, adc_bits: Optional[int],
+                adc_range: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sign = sign_ref[...].astype(jnp.float32)
+    code = code_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+
+    acc = acc_ref[...]
+    # One MXU matmul per bit plane, gain-weighted (the analog bit
+    # significance). n_bits is static → fully unrolled.
+    for b in range(n_bits):
+        shift = n_bits - 1 - b                      # MSB first (k=1 ⇒ 2^-1)
+        plane = ((code >> shift) & 1).astype(jnp.float32) * sign
+        acc = acc + gains_ref[0, b] * jnp.dot(
+            plane, w, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] * (2.0 ** n_bits / (2.0 ** n_bits - 1.0))
+        if adc_bits is not None:
+            levels = 2 ** adc_bits
+            step = 2.0 * adc_range / levels
+            y = jnp.clip(jnp.round(y / step),
+                         -(levels // 2), levels // 2 - 1) * step
+        out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "adc_bits", "adc_range", "bm", "bk", "bn", "interpret"))
+def wbs_matmul_pallas(sign: jax.Array, code: jax.Array, w: jax.Array,
+                      gains: jax.Array, adc_bits: Optional[int] = None,
+                      adc_range: float = 4.0, bm: int = 128, bk: int = 128,
+                      bn: int = 128, interpret: bool = False) -> jax.Array:
+    """sign/code (M, K) int8/uint8, w (K, N), gains (n_bits,) → (M, N) f32.
+
+    Shapes must already be multiples of the block sizes (ops.py pads).
+    """
+    M, K = sign.shape
+    K2, N = w.shape
+    assert K == K2, (sign.shape, w.shape)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+    n_bits = gains.shape[0]
+    gains2d = gains.reshape(1, n_bits).astype(jnp.float32)
+    n_k = K // bk
+
+    grid = (M // bm, N // bn, n_k)
+    kernel = functools.partial(_wbs_kernel, n_bits=n_bits, n_k=n_k,
+                               adc_bits=adc_bits, adc_range=adc_range)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # sign
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # code
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w
+            pl.BlockSpec((1, n_bits), lambda i, j, k: (0, 0)),  # gains
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(sign, code, w, gains2d)

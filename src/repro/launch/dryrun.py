@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+backend initialization, and the production meshes need 512 placeholder
+host devices. (Only this entry point sets the flag; tests and benches see
+the real single device.)
+
+Per cell:
+  * build ShapeDtypeStruct inputs (configs.shapes.input_specs — no
+    allocation),
+  * jit the step with explicit in/out shardings from
+    distributed.sharding, lower, compile,
+  * record memory_analysis / cost_analysis / per-collective byte counts
+    parsed from the compiled HLO,
+  * append the record to benchmarks/results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --seq-par=0 --remat=1   (perf knobs)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPES, input_specs, skip_reason
+from repro.distributed import (ShardingContext, batch_specs, cache_specs,
+                               opt_state_specs, param_specs, sharding_scope)
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.utils import tree_bytes, tree_size
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z0-9.]*\s*=?\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO."""
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op, dt, dims = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_optimizer(cfg, n_params: int):
+    """8-bit Adam moments for the ≥100 B configs, fp32 AdamW otherwise."""
+    if n_params > 100e9:
+        return optim.adam_8bit(3e-4), "adam_8bit"
+    return optim.adamw(3e-4), "adamw"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               seq_par: bool = True, remat: bool = True,
+               extra_tag: str = "", attn_mode: str = "gather",
+               moe_mode: str = "global",
+               kv_dtype: str = "") -> dict:
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, remat=remat)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+        
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    n_chips = mesh.devices.size
+
+    pshapes = lm.param_shapes(cfg)
+    n_params = tree_size(pshapes)
+    # Serving cells drop FSDP when TP-only weights fit per-chip HBM —
+    # removes all per-layer weight gathers from the decode step (§Perf).
+    tp_bytes_per_chip = tree_bytes(pshapes) / mesh.shape["model"]
+    use_fsdp = shape.kind != "decode" or tp_bytes_per_chip > 8e9
+    # Replicated small banks pair with the EP-local dispatch (train /
+    # prefill); decode uses the global path where TP-sharded banks win.
+    pspecs = param_specs(cfg, pshapes, mesh, fsdp=use_fsdp,
+                         replicate_small_banks=(moe_mode == "ep" and
+                                                shape.kind != "decode"))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(n_chips), "kind": shape.kind,
+        "n_params": int(n_params),
+        "param_bytes": int(tree_bytes(pshapes)),
+        "seq_par": seq_par, "remat": remat, "tag": extra_tag,
+        "fsdp": use_fsdp,
+    }
+
+    record["attn_mode"] = attn_mode
+    record["moe_mode"] = moe_mode
+    ctx = ShardingContext(mesh=mesh, batch_axes=batch_axes,
+                          sequence_parallel=seq_par and
+                          shape.kind != "decode",
+                          attn_mode=attn_mode, moe_mode=moe_mode)
+    t0 = time.time()
+
+    with sharding_scope(ctx):
+        if shape.kind == "train":
+            specs = input_specs(cfg, shape_name)
+            optimizer, opt_name = make_optimizer(cfg, n_params)
+            record["optimizer"] = opt_name
+            oshapes = jax.eval_shape(optimizer.init, pshapes)
+            ospecs = opt_state_specs(oshapes, pspecs, mesh)
+            bspecs = batch_specs(specs, mesh, multi_pod)
+            record["opt_bytes"] = int(tree_bytes(oshapes))
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: lm.loss_fn(p, cfg, batch))(params)
+                updates, new_opt = optimizer.update(grads, opt_state,
+                                                    params)
+                new_params = optim.apply_updates(params, updates)
+                return new_params, new_opt, loss
+
+            step = jax.jit(
+                train_step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                              _named(mesh, bspecs)),
+                out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = step.lower(pshapes, oshapes, specs)
+
+        elif shape.kind == "prefill":
+            specs = input_specs(cfg, shape_name)
+            bspecs = batch_specs(specs, mesh, multi_pod)
+            logits_spec = ctx.spec("btv")
+            if cfg.vocab % mesh.shape["model"] != 0:
+                logits_spec = P(logits_spec[0], None, None)
+
+            def prefill_step(params, batch):
+                return lm.prefill(params, cfg, batch)
+
+            step = jax.jit(
+                prefill_step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                out_shardings=NamedSharding(mesh, logits_spec))
+            lowered = step.lower(pshapes, specs)
+
+        else:  # decode
+            specs = input_specs(cfg, shape_name)
+            cspecs = cache_specs(specs["caches"], mesh, multi_pod)
+            tok_spec = batch_specs(
+                {"tokens": specs["tokens"]}, mesh, multi_pod)["tokens"]
+            record["cache_bytes"] = int(tree_bytes(specs["caches"]))
+
+            def serve_step(params, caches, tokens, pos):
+                logits, new_caches = lm.decode_step(params, cfg, caches,
+                                                    tokens, pos)
+                return lm.greedy_token(logits), new_caches
+
+            B = specs["tokens"].shape[0]
+            n_dp = 1
+            for a in batch_axes:
+                n_dp *= mesh.shape[a]
+            out_tok_spec = P(batch_axes if len(batch_axes) > 1
+                             else batch_axes[0]) if B % n_dp == 0 else P()
+            step = jax.jit(
+                serve_step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, out_tok_spec),
+                               _named(mesh, cspecs)),
+                donate_argnums=(1,))
+            lowered = step.lower(pshapes, specs["caches"], specs["tokens"],
+                                 specs["pos"])
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+    # ------------------------------------------------------------------
+    # Analyses
+    # ------------------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover - backend-dependent
+        record["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower())}
+    except Exception as e:  # pragma: no cover
+        record["cost_analysis"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes(hlo)
+        record["hlo_chars"] = len(hlo)
+        from repro.launch.hlo_analysis import analyze
+        record["hlo_analysis"] = analyze(hlo).as_dict()
+        del hlo
+    except Exception as e:  # pragma: no cover
+        record["collectives"] = {"error": str(e)}
+
+    record["ok"] = True
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             seq_par: bool = True, remat: bool = True,
+             tag: str = "", attn_mode: str = "gather",
+             moe_mode: str = "global", kv_dtype: str = "") -> dict:
+    reason = skip_reason(get_config(arch), shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": reason, "ok": True}
+    try:
+        return lower_cell(arch, shape_name, multi_pod, seq_par, remat, tag,
+                          attn_mode, moe_mode, kv_dtype)
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-par", type=int, default=1)
+    ap.add_argument("--remat", type=int, default=1)
+    ap.add_argument("--attn", default="gather",
+                    choices=["gather", "ulysses"])
+    ap.add_argument("--moe", default="global", choices=["global", "ep"])
+    ap.add_argument("--kv", default="", choices=["", "bf16", "int8"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            rec = run_cell(arch, shape_name, args.multi_pod,
+                           bool(args.seq_par), bool(args.remat), args.tag,
+                           args.attn, args.moe, args.kv)
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            suffix = f"-{args.tag}" if args.tag else ""
+            fname = out_dir / f"{arch}--{shape_name}--{mesh_tag}{suffix}.json"
+            fname.write_text(json.dumps(rec, indent=1))
+            status = ("SKIP" if rec.get("skipped")
+                      else "OK" if rec.get("ok") else "FAIL")
+            print(f"[{status}] {arch} × {shape_name} × {mesh_tag}"
+                  + (f"  compile={rec.get('compile_s')}s"
+                     if "compile_s" in rec else "")
+                  + (f"  {rec.get('error', '')}" if not rec.get("ok")
+                     else ""), flush=True)
+            n_fail += 0 if rec.get("ok") else 1
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

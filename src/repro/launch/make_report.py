@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.make_report > report.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import list_archs
+from repro.configs.shapes import SHAPES
+from repro.launch.roofline import (RESULTS_DIR, load_record, model_flops,
+                                   roofline_from_record, summarize)
+
+
+def _gb(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(mesh: str, tag: str = "") -> str:
+    rows = ["| arch | shape | status | compile s | args GB/dev | "
+            "temp GB/dev | collective ops (count) |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in list_archs():
+        for shape in SHAPES:
+            rec = load_record(arch, shape, mesh, tag)
+            if rec is None:
+                continue
+            if rec.get("skipped"):
+                rows.append(f"| {arch} | {shape} | SKIP (sub-quadratic "
+                            f"attention required) | — | — | — | — |")
+                continue
+            if not rec.get("ok"):
+                rows.append(f"| {arch} | {shape} | **FAIL** | — | — | — | "
+                            f"{rec.get('error', '')[:60]} |")
+                continue
+            mem = rec.get("memory_analysis", {})
+            colls = rec.get("hlo_analysis", {}).get("per_collective", {})
+            coll_str = ", ".join(
+                f"{k}×{int(v['count'])}" for k, v in sorted(colls.items()))
+            rows.append(
+                f"| {arch} | {shape} | OK | {rec.get('compile_s', '?')} "
+                f"| {_gb(mem.get('argument_size_in_bytes', 0))} "
+                f"| {_gb(mem.get('temp_size_in_bytes', 0))} "
+                f"| {coll_str or '—'} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str, tag: str = "",
+                   flash_adjust: bool = False) -> str:
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | "
+            "bound | MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in summarize(mesh, tag, flash_adjust=flash_adjust):
+        rows.append(r.row())
+    return "\n".join(rows)
+
+
+def perf_compare_table() -> str:
+    """Baseline vs optimized per-cell step-time bound comparison."""
+    rows = ["| arch | shape | baseline step ms (bound) | optimized step "
+            "ms (bound) | +pallas-flash ms | Δ total |",
+            "|---|---|---|---|---|---|"]
+    base = {(r.arch, r.shape): r for r in summarize("16x16", "")}
+    opt = {(r.arch, r.shape): r for r in summarize("16x16", "opt")}
+    fl = {(r.arch, r.shape): r
+          for r in summarize("16x16", "opt", flash_adjust=True)}
+    for key, b in base.items():
+        o = opt.get(key)
+        f = fl.get(key)
+        if o is None:
+            continue
+        gain = b.step_s / f.step_s if f and f.step_s else 1.0
+        rows.append(
+            f"| {key[0]} | {key[1]} | {b.step_s*1e3:.1f} ({b.bound}) "
+            f"| {o.step_s*1e3:.1f} ({o.bound}) "
+            f"| {f.step_s*1e3:.1f} | {gain:.2f}× |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print("## Dry-run — 16×16 (single pod, 256 chips), baseline\n")
+    print(dryrun_table("16x16"))
+    print("\n## Dry-run — 2×16×16 (two pods, 512 chips), baseline\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Roofline — baseline (16×16)\n")
+    print(roofline_table("16x16"))
+    print("\n## Roofline — optimized (ulysses + EP MoE, 16×16)\n")
+    print(roofline_table("16x16", "opt"))
+    print("\n## Roofline — optimized + pallas-flash adjustment\n")
+    print(roofline_table("16x16", "opt", flash_adjust=True))
+    print("\n## Baseline vs optimized\n")
+    print(perf_compare_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first backend
+init, and only dryrun.py is allowed to set the 512-device XLA flag).
+
+Axes:
+  pod   — cross-pod data parallelism (DCN): gradients all-reduce here;
+          candidates for top-k + error-feedback compression.
+  data  — in-pod FSDP axis: batch, parameter/optimizer sharding.
+  model — TP/EP/SP axis: heads, FFN hidden, experts, vocab, sequence.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,193 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e-class, per brief):
+    197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI
+
+Terms, per (arch × shape × mesh), all in seconds *per step*:
+    compute    = HLO_FLOPs            / (chips · peak)
+    memory     = HLO_bytes            / (chips · hbm_bw)
+    collective = collective_bytes     / (chips · link_bw)
+
+FLOPs / bytes / collective bytes come from ``hlo_analysis`` (per-device
+program, loop trip counts multiplied through — XLA's own cost_analysis
+under-counts while bodies) scaled ×chips for the global figure. The
+dominant term is the bottleneck the §Perf loop iterates on.
+
+MODEL_FLOPS (the "useful" fraction):
+    train  : 6 · N(active) · tokens  (+ 12·L·S²·H·hd attention term)
+    prefill: 2 · N(active) · tokens  (+ attention term)
+    decode : 2 · N(active) · batch   (+ 4·L·S·H·hd cache-attention term)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    bound: str
+    step_s: float                 # max of the three (no-overlap bound)
+    roofline_frac: float          # compute_s / step_s ("% of roofline")
+    per_collective: dict
+    note: str = ""
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} "
+                f"| {self.collective_s*1e3:.2f} | {self.bound} "
+                f"| {self.useful_ratio:.2f} | {self.roofline_frac*100:.0f}% |")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytical 'useful' FLOPs per step."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    B, S = shape.global_batch, shape.seq_len
+
+    # Attention score/value FLOPs (not in 6·N·D).
+    hd = cfg.hd()
+    n_attn_layers = sum(0 if cfg.is_ssm_layer(i) else 1
+                        for i in range(cfg.n_layers))
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        attn_per_tok_pair = 2 * cfg.n_heads * (qk_dim + cfg.v_head_dim)
+    else:
+        attn_per_tok_pair = 4 * cfg.n_heads * hd
+
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6 * n_active * tokens
+        flops += 3 * n_attn_layers * attn_per_tok_pair * B * S * S / 2
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2 * n_active * tokens
+        flops += n_attn_layers * attn_per_tok_pair * B * S * S / 2
+    else:  # decode: one token per sequence, attention over S cache
+        flops = 2 * n_active * B
+        flops += n_attn_layers * attn_per_tok_pair * B * S
+    return float(flops)
+
+
+def load_record(arch: str, shape: str, mesh: str,
+                tag: str = "", out_dir: Path = RESULTS_DIR
+                ) -> Optional[dict]:
+    suffix = f"-{tag}" if tag else ""
+    f = out_dir / f"{arch}--{shape}--{mesh}{suffix}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def attention_score_bytes(rec: dict, chunk: int = 1024) -> float:
+    """HBM traffic of materialized attention score/probability chunks —
+    the buffers the Pallas flash kernel (kernels/flash_attention.py)
+    keeps in VMEM. Identified from the per-shape breakdown: 4-D dot /
+    fusion outputs whose last dim is the attention chunk size.
+
+    Used for the 'pallas-flash' adjusted memory term in §Perf: the
+    kernel exists and is validated in interpret mode; the dry-run
+    compiles the XLA fallback (CPU cannot codegen TPU Pallas), so the
+    adjustment is applied analytically and transparently here."""
+    hlo = rec.get("hlo_analysis") or {}
+    total = 0.0
+    for ent in hlo.get("top_shapes", []):
+        op_shape = ent["op_shape"]
+        if not op_shape.startswith(("dot", "fusion")):
+            continue
+        dims = op_shape.split("[")[-1].rstrip("]").split(",")
+        if len(dims) == 4 and dims[-1] == str(chunk):
+            total += ent["bytes"]
+    return total
+
+
+def roofline_from_record(rec: dict, flash_adjust: bool = False
+                         ) -> Optional[Roofline]:
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    hlo = rec.get("hlo_analysis")
+    if not hlo:
+        return None
+    chips = rec["chips"]
+    # hlo_analysis numbers are per-device; wall-clock per step:
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    bytes_acc = hlo["bytes_accessed"]
+    note = ""
+    if flash_adjust:
+        adj = attention_score_bytes(rec)
+        if adj:
+            bytes_acc -= adj
+            note = f"pallas-flash −{adj:.2e} B score traffic"
+    memory_s = bytes_acc / HBM_BW
+    collective_s = hlo["collective_bytes"] / LINK_BW
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = hlo["flops"] * chips
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, model_flops=mf, hlo_flops=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        bound=bound, step_s=step_s,
+        roofline_frac=compute_s / step_s if step_s else 0.0,
+        per_collective=hlo.get("per_collective", {}), note=note)
+
+
+def summarize(mesh: str = "16x16", tag: str = "",
+              out_dir: Path = RESULTS_DIR,
+              flash_adjust: bool = False) -> list[Roofline]:
+    from repro.configs import list_archs
+    out = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            rec = load_record(arch, shape, mesh, tag, out_dir)
+            if rec is None:
+                continue
+            r = roofline_from_record(rec, flash_adjust)
+            if r is not None:
+                out.append(r)
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = summarize(args.mesh, args.tag)
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bound | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(r.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""LM architecture zoo: every assigned architecture family in pure JAX.
+
+- layers:    RMSNorm, Dense (+WBS quant mode), rotary embeddings.
+- attention: GQA (full + chunked-flash), qk-norm, biases, MLA (+absorbed
+             decode), KV caches (bf16 / int8 stochastic-quantized).
+- moe:       sort-based top-k dispatch with capacity, shared experts.
+- ssm:       Mamba-2 SSD (chunked scan) + recurrent decode.
+- blocks:    transformer / mamba / hybrid blocks, scanned layer stacks.
+- lm:        CausalLM & EncDecLM: init, train loss, prefill, decode.
+- frontend:  audio/vision stub embeddings (the assigned [audio]/[vlm]
+             entries specify the backbone; frontends are stubs per brief).
+"""
+from repro.models import attention, blocks, layers, lm, moe, ssm
+
+__all__ = ["attention", "blocks", "layers", "lm", "moe", "ssm"]

@@ -1,0 +1,562 @@
+"""Attention: GQA (full + chunked-flash), qk-norm, biases, MLA, KV caches.
+
+Chunked-flash is the pure-JAX online-softmax attention (scan over KV
+chunks carrying running max / denominator / accumulator); it bounds the
+live score tensor to (B, H, S_q, chunk) — required for the 32k prefill
+cells to fit HBM. On real TPU hardware the same schedule maps to a Pallas
+flash kernel; HLO structure (and hence the roofline terms) is equivalent.
+
+KV caches support bf16 and int8 with *stochastic rounding* — the paper's
+replay-buffer quantizer (eq. 4-6) applied to the decode cache, which is
+what makes the yi-34b/llava decode_32k cells fit in 16 GB/chip (see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (full and chunked)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool, q_offset: int = 0,
+                   kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q (B,Sq,H,dh), k/v (B,Sk,Kh,dh). Returns (B,Sq,H,dv).
+
+    GQA is computed with grouped einsums (q reshaped to (…,Kh,G,dh)) —
+    never materializing the H/Kh-times repeated K/V, which at yi-34b
+    decode_32k would be a 3.8 GB/layer buffer (§Perf)."""
+    B, Sq, H, dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k
+                        ).astype(jnp.float32) * scale   # (B,Kh,G,Sq,Sk)
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        si = jnp.arange(Sk)[None, :]
+        scores = jnp.where(si <= qi, scores, NEG_INF)
+    if kv_len is not None:
+        si = jnp.arange(Sk)
+        mask = si[None, :] < kv_len[:, None]            # (B, Sk)
+        scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash schedule in JAX).
+
+    Memory: O(B·H·Sq·chunk) live scores instead of O(B·H·Sq·Sk).
+    """
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    Kh = k.shape[2]
+    if Sk % chunk != 0:                    # pad KV to a chunk multiple
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    k = _repeat_kv(k, H // Kh)
+    v = _repeat_kv(v, H // Kh)
+    kc = k.reshape(B, n_chunks, chunk, H, dh)
+    vc = v.reshape(B, n_chunks, chunk, H, v.shape[-1])
+    scale = dh ** -0.5
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kj, vj, j = inp
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kj
+                            ).astype(jnp.float32) * scale
+        ki = j * chunk + jnp.arange(chunk)[None, :]
+        valid = ki < Sk
+        if causal:
+            valid = valid & (ki <= qi)
+        scores = jnp.where(valid[None, None, :, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vj).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, v.shape[-1]), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)   # (B,Sq,H,dv)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (memory-bounded backward)
+# ---------------------------------------------------------------------------
+# lax.scan-based online softmax alone is NOT enough for training: scan
+# saves its per-chunk carries (acc/m/l) for the backward pass, which costs
+# O(n_chunks · B·H·Sq·dh) — 20+ GB/device at yi-34b train_4k. The fix is
+# the FlashAttention recipe: forward saves only (q, k, v, out, lse);
+# backward recomputes P chunk-by-chunk and accumulates dq/dk/dv.
+# (EXPERIMENTS.md §Perf iteration 1.)
+
+def _flash_fwd_impl(q, k, v, causal: bool, chunk: int, sk_true: int):
+    """q (B,H,Sq,dh); k,v (B,H,Sk,dh|dv). Returns out (B,H,Sq,dv), lse."""
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    scale = dh ** -0.5
+    n_chunks = Sk // chunk
+    kc = k.reshape(B, H, n_chunks, chunk, -1)
+    vc = v.reshape(B, H, n_chunks, chunk, -1)
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj).astype(jnp.float32) * scale
+        ki = j * chunk + jnp.arange(chunk)[None, :]
+        valid = ki < sk_true
+        if causal:
+            valid = valid & (ki <= qi)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # p materializes in the compute dtype (bf16 on TPU): the exp and
+        # convert fuse into one kernel, so the f32 probabilities never
+        # hit HBM — half the dominant buffer (§Perf iteration 3). Row
+        # sums still accumulate in f32.
+        p = jnp.exp(s - m_new[..., None]).astype(q.dtype)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.astype(jnp.float32).sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, v.shape[-1]), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+         jnp.arange(n_chunks)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal: bool, chunk: int, sk_true: int):
+    return _flash_fwd_impl(q, k, v, causal, chunk, sk_true)[0]
+
+
+def _flash_fwd(q, k, v, causal, chunk, sk_true):
+    out, lse = _flash_fwd_impl(q, k, v, causal, chunk, sk_true)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, chunk, sk_true, res, dout):
+    q, k, v, out, lse = res
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    scale = dh ** -0.5
+    n_chunks = Sk // chunk
+    kc = k.reshape(B, H, n_chunks, chunk, -1)
+    vc = v.reshape(B, H, n_chunks, chunk, -1)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                # (B,H,Sq)
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(dq, inp):
+        kj, vj, j = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj).astype(jnp.float32) * scale
+        ki = j * chunk + jnp.arange(chunk)[None, :]
+        valid = ki < sk_true
+        if causal:
+            valid = valid & (ki <= qi)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        # bf16 materialization for p and ds (f32 math stays inside the
+        # producing fusions) — §Perf iteration 3.
+        p = jnp.exp(s - lse[..., None]).astype(q.dtype)     # (B,H,q,k)
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, dout)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dout, vj).astype(jnp.float32)
+        ds = (p.astype(jnp.float32) * (dp - delta[..., None])
+              ).astype(q.dtype)
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kj
+                             ).astype(jnp.float32) * scale
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+        return dq, (dk_j.astype(k.dtype), dv_j.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        body, dq0, (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+                    jnp.arange(n_chunks)))
+    dk = jnp.moveaxis(dk_c, 0, 2).reshape(B, H, Sk, -1)
+    dv = jnp.moveaxis(dv_c, 0, 2).reshape(B, H, Sk, -1)
+    return dq.astype(q.dtype), dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool, chunk: int = 1024) -> jax.Array:
+    """(B,Sq,H,dh) layout wrapper; pads KV to a chunk multiple."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    Kh = k.shape[2]
+    k = _repeat_kv(k, H // Kh)
+    v = _repeat_kv(v, H // Kh)
+    if Sk % chunk != 0:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _flash(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                 jnp.swapaxes(v, 1, 2), causal, chunk, Sk)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def sdpa(q, k, v, causal: bool, chunk: int, q_offset: int = 0,
+         kv_len=None):
+    """Dispatch: flash (custom-vjp online softmax) for long KV, full
+    otherwise."""
+    if k.shape[1] > chunk and kv_len is None and q_offset == 0:
+        return flash_attention(q, k, v, causal, chunk)
+    return full_attention(q, k, v, causal, q_offset, kv_len)
+
+
+# ---------------------------------------------------------------------------
+# GQA block-level attention with projections
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    hd = cfg.hd()
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    std = D ** -0.5
+    from repro.utils import truncated_normal_init as tn
+    p = {
+        "wq": tn(ks[0], (D, cfg.n_heads * hd), std, cfg.dtype),
+        "wk": tn(ks[1], (D, cfg.n_kv_heads * hd), std, cfg.dtype),
+        "wv": tn(ks[2], (D, cfg.n_kv_heads * hd), std, cfg.dtype),
+        "wo": tn(ks[3], (cfg.n_heads * hd, D), std, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.dtype)
+    return p
+
+
+def gqa_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, causal: bool = True,
+                  kv: Optional[tuple] = None,
+                  kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention (kv=None) or cross-attention (kv=(keys_src, ...)).
+
+    x (B,S,D); positions (B,S) or (S,).
+    """
+    B, S, D = x.shape
+    hd = cfg.hd()
+    q = dense(x, p["wq"], p.get("bq"), cfg.quant_mode)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    if kv is None:
+        src = x
+        src_pos = positions
+    else:
+        src = kv[0]
+        src_pos = kv_positions
+    k = dense(src, p["wk"], p.get("bk"), cfg.quant_mode)
+    v = dense(src, p["wv"], p.get("bv"), cfg.quant_mode)
+    k = k.reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rmsnorm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rmsnorm_eps)
+    if kv is None:                       # rope only for self-attention
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, S)),
+                       cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(src_pos, (B, src.shape[1])),
+                       cfg.rope_theta)
+    from repro.distributed.context import act_constraint, ulysses_enabled
+    if kv is None and ulysses_enabled(cfg.n_heads):
+        # Ulysses: all-to-all reshard (seq-sharded → head-sharded) around
+        # the attention op — 1× tensor volume instead of the P× per-chunk
+        # K/V all-gather. KV heads are expanded first so every shard owns
+        # its heads' full-sequence K/V.
+        k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        q = act_constraint(q, "bshd")
+        k = act_constraint(k, "bshd")
+        v = act_constraint(v, "bshd")
+        out = sdpa(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+        out = act_constraint(out, "bshd")
+    else:
+        from repro.distributed.context import current_context
+        ctx = current_context()
+        if kv is None and ctx is not None and ctx.attn_mode == "ulysses":
+            # Ulysses requested but heads don't divide the axis: fall
+            # back to an *explicit bf16* K/V gather — anchoring the
+            # all-gather on the low-precision tensor halves its bytes vs
+            # letting the partitioner gather post-f32-convert (§Perf).
+            k = act_constraint(k, "bshd_full")
+            v = act_constraint(v, "bshd_full")
+        out = sdpa(q, k, v, causal=causal and kv is None,
+                   chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return dense(out, p["wo"], quant_mode=cfg.quant_mode)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    batch: int
+    max_len: int
+    dtype: str = "bf16"     # bf16 | int8
+
+
+def init_kv_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
+    hd = cfg.hd()
+    kvd = cfg.n_kv_heads * hd
+    shape = (spec.batch, spec.max_len, kvd)
+    if spec.dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:2] + (1,), jnp.float32),
+            "v_scale": jnp.zeros(shape[:2] + (1,), jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def _quantize_kv(x: jax.Array, key: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Per-token int8 with stochastic rounding — the paper's replay-buffer
+    quantizer (eq. 4-6) applied to the KV cache."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    z = x / safe
+    fl = jnp.floor(z)
+    frac = z - fl
+    r = jax.random.uniform(key, x.shape)
+    q = jnp.where(r < frac, fl + 1.0, fl)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), \
+        scale.astype(jnp.float32)
+
+
+def cache_insert(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, rng: Optional[jax.Array] = None) -> dict:
+    """Write one token's k/v (B, 1, kvd) at position ``pos`` (scalar)."""
+    if "k_scale" in cache:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        r1, r2 = jax.random.split(rng)
+        kq, ks = _quantize_kv(k_new.astype(jnp.float32), r1)
+        vq, vs = _quantize_kv(v_new.astype(jnp.float32), r2)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, pos, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, pos, 0)),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0)),
+    }
+
+
+def cache_read(cache: dict) -> tuple[jax.Array, jax.Array]:
+    if "k_scale" in cache:
+        k = cache["k"].astype(jnp.bfloat16) \
+            * cache["k_scale"].astype(jnp.bfloat16)
+        v = cache["v"].astype(jnp.bfloat16) \
+            * cache["v_scale"].astype(jnp.bfloat16)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def init_mla_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    from repro.utils import truncated_normal_init as tn
+    D = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_down": tn(ks[0], (D, qr), D ** -0.5, cfg.dtype),
+        "q_norm": jnp.ones((qr,), cfg.dtype),
+        "q_up": tn(ks[1], (qr, H * (dn + dr)), qr ** -0.5, cfg.dtype),
+        "kv_down": tn(ks[2], (D, kvr + dr), D ** -0.5, cfg.dtype),
+        "kv_norm": jnp.ones((kvr,), cfg.dtype),
+        "kv_up": tn(ks[3], (kvr, H * (dn + dv)), kvr ** -0.5, cfg.dtype),
+        "wo": tn(ks[4], (H * dv, D), (H * dv) ** -0.5, cfg.dtype),
+    }
+
+
+def mla_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, causal: bool = True) -> jax.Array:
+    """Training/prefill MLA: expand latents to per-head keys/values."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = dense(rms_norm(dense(x, p["q_down"], quant_mode=cfg.quant_mode),
+                       p["q_norm"], cfg.rmsnorm_eps),
+              p["q_up"], quant_mode=cfg.quant_mode)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv = dense(x, p["kv_down"], quant_mode=cfg.quant_mode)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    kv_up = dense(rms_norm(c_kv, p["kv_norm"], cfg.rmsnorm_eps),
+                  p["kv_up"], quant_mode=cfg.quant_mode)
+    kv_up = kv_up.reshape(B, S, H, dn + dv)
+    k_nope, v = kv_up[..., :dn], kv_up[..., dn:]
+
+    posb = jnp.broadcast_to(positions, (B, S))
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, posb, cfg.rope_theta)       # (B,S,dr) shared
+    k_rope = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # NOTE: softmax scale uses the full qk dim (dn + dr).
+    from repro.distributed.context import act_constraint, ulysses_enabled
+    if ulysses_enabled(cfg.n_heads):
+        qf = act_constraint(qf, "bshd")
+        kf = act_constraint(kf, "bshd")
+        v = act_constraint(v, "bshd")
+        out = sdpa(qf, kf, v, causal=causal, chunk=cfg.attn_chunk)
+        out = act_constraint(out, "bshd")
+    else:
+        out = sdpa(qf, kf, v, causal=causal, chunk=cfg.attn_chunk)
+    return dense(out.reshape(B, S, H * dv), p["wo"],
+                 quant_mode=cfg.quant_mode)
+
+
+def init_mla_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
+    """MLA caches the *latent* (kv_lora_rank) + roped key (dr) — the memory
+    win that makes deepseek-v3 decode_32k fit."""
+    return {
+        "c_kv": jnp.zeros((spec.batch, spec.max_len, cfg.kv_lora_rank),
+                          jnp.bfloat16),
+        "k_rope": jnp.zeros((spec.batch, spec.max_len,
+                             cfg.qk_rope_head_dim), jnp.bfloat16),
+    }
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed-matrix MLA decode: attention runs in the 512-d latent space
+    (W_UK folded into q, W_UV applied after) — O(S·kv_rank) per token
+    instead of O(S·H·head_dim)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    q = dense(rms_norm(dense(x, p["q_down"], quant_mode=cfg.quant_mode),
+                       p["q_norm"], cfg.rmsnorm_eps),
+              p["q_up"], quant_mode=cfg.quant_mode)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+
+    kv = dense(x, p["kv_down"], quant_mode=cfg.quant_mode)
+    c_new = rms_norm(kv[..., :kvr], p["kv_norm"], cfg.rmsnorm_eps)
+    kr_new = apply_rope(kv[..., kvr:], posb, cfg.rope_theta)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(jnp.bfloat16), (0, pos, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(jnp.bfloat16), (0, pos, 0)),
+    }
+
+    # Absorb W_UK into the query: q_abs (B,S,H,kvr).
+    w_uk = p["kv_up"].reshape(kvr, H, dn + dv)[..., :dn]   # (kvr, H, dn)
+    q_abs = jnp.einsum("bshd,khd->bshk", q_nope,
+                       w_uk.astype(q_nope.dtype))
+    scale = (dn + dr) ** -0.5
+    c_all = cache["c_kv"]
+    kr_all = cache["k_rope"]
+    scores = (jnp.einsum("bshk,blk->bhsl", q_abs, c_all.astype(q_abs.dtype))
+              + jnp.einsum("bshr,blr->bhsl", q_rope,
+                           kr_all.astype(q_rope.dtype))
+              ).astype(jnp.float32) * scale
+    kv_len = jnp.broadcast_to(pos + 1, (B,))
+    mask = jnp.arange(c_all.shape[1])[None, :] < kv_len[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    lat = jnp.einsum("bhsl,blk->bshk", probs, c_all.astype(x.dtype))
+    w_uv = p["kv_up"].reshape(kvr, H, dn + dv)[..., dn:]   # (kvr,H,dv)
+    out = jnp.einsum("bshk,khv->bshv", lat, w_uv.astype(lat.dtype))
+    return dense(out.reshape(B, S, H * dv), p["wo"],
+                 quant_mode=cfg.quant_mode), cache
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array, rng: Optional[jax.Array] = None
+               ) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B,1,D), cache over max_len. Returns (out, cache).
+    """
+    B, S, D = x.shape
+    hd = cfg.hd()
+    q = dense(x, p["wq"], p.get("bq"), cfg.quant_mode)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = dense(x, p["wk"], p.get("bk"), cfg.quant_mode)
+    v = dense(x, p["wv"], p.get("bv"), cfg.quant_mode)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    vh = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rmsnorm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rmsnorm_eps)
+    posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    cache = cache_insert(cache, k.reshape(B, S, -1), vh.reshape(B, S, -1),
+                         pos, rng)
+    k_all, v_all = cache_read(cache)
+    L = k_all.shape[1]
+    k_all = k_all.reshape(B, L, cfg.n_kv_heads, hd)
+    v_all = v_all.reshape(B, L, cfg.n_kv_heads, hd)
+    kv_len = jnp.broadcast_to(pos + 1, (B,))
+    out = full_attention(q, k_all, v_all, causal=False, kv_len=kv_len)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return dense(out, p["wo"], quant_mode=cfg.quant_mode), cache

@@ -1,0 +1,303 @@
+"""Layer blocks and scanned stacks for every architecture family.
+
+Layer = pre-norm mixer (attention / MLA / SSD / MiRU) + pre-norm FFN
+(SwiGLU dense or MoE). Identical layers are stacked (leading dim L) and
+executed with lax.scan (+ per-layer remat) — this is what keeps the HLO
+small enough to compile 61-72 layer configs and bounds activation memory
+to one layer.
+
+Hybrid (jamba) uses a scanned *superblock* of period ``attn_every``: the
+slot structure inside a superblock is static (7×SSD + 1×attention;
+MoE on odd slots), superblocks scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import act_constraint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import rms_norm, swiglu, dense
+from repro.utils import truncated_normal_init as tn
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# MiRU mixer (ablation option; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def init_miru_mixer(key: jax.Array, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_h": tn(k1, (D, D), D ** -0.5, cfg.dtype),
+            "u_h": tn(k2, (D, D), D ** -0.5, cfg.dtype),
+            "b_h": jnp.zeros((D,), cfg.dtype),
+            "w_out": tn(k3, (D, D), D ** -0.5, cfg.dtype)}
+
+
+def miru_mixer(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    from repro.kernels import ops as kops
+    B, S, D = x.shape
+    xw = (x.reshape(-1, D) @ p["w_h"].astype(x.dtype)).reshape(B, S, D) \
+        + p["b_h"].astype(x.dtype)
+    h0 = jnp.zeros((B, D), jnp.float32)
+    h_all, _ = kops.miru_scan(xw.astype(jnp.float32),
+                              p["u_h"].astype(jnp.float32), h0,
+                              beta=0.8, lam=0.5)
+    return dense(h_all.astype(x.dtype), p["w_out"],
+                 quant_mode=cfg.quant_mode)
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_ffn_params(key: jax.Array, cfg: ModelConfig, is_moe: bool) -> dict:
+    if is_moe:
+        return init_moe(key, cfg)
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": tn(k1, (D, F), D ** -0.5, cfg.dtype),
+            "w_up": tn(k2, (D, F), D ** -0.5, cfg.dtype),
+            "w_down": tn(k3, (F, D), F ** -0.5, cfg.dtype)}
+
+
+def init_moe(key, cfg):
+    return moe_mod.init_moe_params(key, cfg)
+
+
+def init_layer_params(key: jax.Array, cfg: ModelConfig, is_ssm: bool,
+                      is_moe: bool, cross_attn: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    p: dict = {"norm1": jnp.ones((D,), cfg.dtype)}
+    if is_ssm:
+        p["mixer"] = ssm_mod.init_ssm_params(ks[0], cfg)
+    elif cfg.mixer == "miru":
+        p["mixer"] = init_miru_mixer(ks[0], cfg)
+    elif cfg.use_mla:
+        p["mixer"] = attn.init_mla_params(ks[0], cfg)
+    else:
+        p["mixer"] = attn.init_gqa_params(ks[0], cfg)
+    if cross_attn:
+        p["norm_x"] = jnp.ones((D,), cfg.dtype)
+        p["cross"] = attn.init_gqa_params(ks[1], cfg)
+    has_ffn = cfg.d_ff > 0 or is_moe
+    if has_ffn:
+        p["norm2"] = jnp.ones((D,), cfg.dtype)
+        p["ffn"] = init_ffn_params(ks[2], cfg, is_moe)
+    return p
+
+
+def layer_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, is_ssm: bool, is_moe: bool,
+                  causal: bool = True,
+                  memory: Optional[jax.Array] = None,
+                  memory_positions: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    h = rms_norm(x, p["norm1"], cfg.rmsnorm_eps)
+    if is_ssm:
+        mixed = ssm_mod.mamba2_forward(p["mixer"], cfg, h)
+    elif cfg.mixer == "miru":
+        mixed = miru_mixer(p["mixer"], cfg, h)
+    elif cfg.use_mla:
+        mixed = attn.mla_attention(p["mixer"], cfg, h, positions, causal)
+    else:
+        mixed = attn.gqa_attention(p["mixer"], cfg, h, positions, causal)
+    x = x + mixed.astype(x.dtype)
+    if memory is not None:
+        h = rms_norm(x, p["norm_x"], cfg.rmsnorm_eps)
+        x = x + attn.gqa_attention(p["cross"], cfg, h, positions,
+                                   causal=False, kv=(memory,),
+                                   kv_positions=memory_positions
+                                   ).astype(x.dtype)
+    if "ffn" in p:
+        h = rms_norm(x, p["norm2"], cfg.rmsnorm_eps)
+        if is_moe:
+            x = x + moe_mod.moe_ffn(p["ffn"], cfg, h).astype(x.dtype)
+        else:
+            x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                           p["ffn"]["w_down"], cfg.quant_mode
+                           ).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Scanned homogeneous stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key: jax.Array, cfg: ModelConfig, n_layers: int,
+               is_ssm: bool, is_moe: bool, cross_attn: bool = False
+               ) -> PyTree:
+    keys = jax.random.split(key, n_layers)
+    layers = [init_layer_params(k, cfg, is_ssm, is_moe, cross_attn)
+              for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def stack_forward(stacked: PyTree, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, is_ssm: bool, is_moe: bool,
+                  causal: bool = True, memory=None, memory_positions=None
+                  ) -> jax.Array:
+    fn = functools.partial(layer_forward, cfg=cfg, positions=positions,
+                           is_ssm=is_ssm, is_moe=is_moe, causal=causal,
+                           memory=memory,
+                           memory_positions=memory_positions)
+
+    def body(carry, layer_p):
+        return act_constraint(fn(layer_p, x=carry), "btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def stack_decode(stacked: PyTree, caches: PyTree, cfg: ModelConfig,
+                 x: jax.Array, pos: jax.Array, is_ssm: bool,
+                 rngs: Optional[jax.Array] = None,
+                 cross_kv: Optional[PyTree] = None,
+                 enc_len: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, PyTree]:
+    """One-token decode through a scanned stack; caches are stacked (L,…)."""
+
+    def body(carry, inp):
+        h_in = carry
+        layer_p, cache_l, extra = inp
+        h = rms_norm(h_in, layer_p["norm1"], cfg.rmsnorm_eps)
+        if is_ssm:
+            mixed, new_cache = ssm_mod.mamba2_decode(
+                layer_p["mixer"], cfg, h, cache_l)
+        elif cfg.use_mla:
+            mixed, new_cache = attn.mla_decode(
+                layer_p["mixer"], cfg, h, cache_l, pos)
+        else:
+            mixed, new_cache = attn.gqa_decode(
+                layer_p["mixer"], cfg, h, cache_l, pos)
+        h_in = h_in + mixed.astype(h_in.dtype)
+        if cross_kv is not None:
+            hq = rms_norm(h_in, layer_p["norm_x"], cfg.rmsnorm_eps)
+            hd = cfg.hd()
+            B = hq.shape[0]
+            q = dense(hq, layer_p["cross"]["wq"]).reshape(
+                B, 1, cfg.n_heads, hd)
+            k_m, v_m = extra
+            k_m = k_m.reshape(B, -1, cfg.n_kv_heads, hd)
+            v_m = v_m.reshape(B, -1, cfg.n_kv_heads, hd)
+            o = attn.full_attention(q, k_m, v_m, causal=False,
+                                    kv_len=enc_len)
+            h_in = h_in + dense(o.reshape(B, 1, -1),
+                                layer_p["cross"]["wo"]).astype(h_in.dtype)
+        if "ffn" in layer_p:
+            h = rms_norm(h_in, layer_p["norm2"], cfg.rmsnorm_eps)
+            if "router" in layer_p["ffn"]:
+                h_in = h_in + moe_mod.moe_ffn(layer_p["ffn"], cfg, h
+                                              ).astype(h_in.dtype)
+            else:
+                f = layer_p["ffn"]
+                h_in = h_in + swiglu(h, f["w_gate"], f["w_up"], f["w_down"],
+                                     cfg.quant_mode).astype(h_in.dtype)
+        return h_in, new_cache
+
+    xs = (stacked, caches, cross_kv) if cross_kv is not None \
+        else (stacked, caches, jnp.zeros((jax.tree.leaves(stacked)[0]
+                                          .shape[0],)))
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (jamba) superblock
+# ---------------------------------------------------------------------------
+
+def init_superblock(key: jax.Array, cfg: ModelConfig) -> dict:
+    """One period of ``attn_every`` layers with static slot structure."""
+    period = cfg.attn_every
+    ks = jax.random.split(key, period)
+    return {f"slot{j}": init_layer_params(
+        ks[j], cfg, is_ssm=cfg.is_ssm_layer(j), is_moe=cfg.is_moe_layer(j))
+        for j in range(period)}
+
+
+def init_hybrid_stack(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    assert cfg.n_layers % cfg.attn_every == 0
+    n_super = cfg.n_layers // cfg.attn_every
+    keys = jax.random.split(key, n_super)
+    blocks = [init_superblock(k, cfg) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def hybrid_forward(stacked: PyTree, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array) -> jax.Array:
+    period = cfg.attn_every
+
+    def body(carry, sb):
+        h = carry
+        for j in range(period):
+            h = layer_forward(sb[f"slot{j}"], cfg, h, positions,
+                              is_ssm=cfg.is_ssm_layer(j),
+                              is_moe=cfg.is_moe_layer(j))
+        return act_constraint(h, "btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def init_hybrid_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_super = cfg.n_layers // cfg.attn_every
+    spec = attn.CacheSpec(batch, max_len, cfg.kv_cache_dtype)
+    caches = {}
+    for j in range(cfg.attn_every):
+        if cfg.is_ssm_layer(j):
+            one = ssm_mod.init_ssm_cache(cfg, batch)
+        else:
+            one = attn.init_kv_cache(cfg, spec)
+        caches[f"slot{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape)
+            .copy() if hasattr(a, "shape") else a, one)
+    return caches
+
+
+def hybrid_decode(stacked: PyTree, caches: dict, cfg: ModelConfig,
+                  x: jax.Array, pos: jax.Array
+                  ) -> tuple[jax.Array, dict]:
+    period = cfg.attn_every
+
+    def body(carry, inp):
+        h_in = carry
+        sb, cache_sb = inp
+        new_cache_sb = {}
+        for j in range(period):
+            lp = sb[f"slot{j}"]
+            h = rms_norm(h_in, lp["norm1"], cfg.rmsnorm_eps)
+            if cfg.is_ssm_layer(j):
+                mixed, nc = ssm_mod.mamba2_decode(lp["mixer"], cfg, h,
+                                                  cache_sb[f"slot{j}"])
+            else:
+                mixed, nc = attn.gqa_decode(lp["mixer"], cfg, h,
+                                            cache_sb[f"slot{j}"], pos)
+            new_cache_sb[f"slot{j}"] = nc
+            h_in = h_in + mixed.astype(h_in.dtype)
+            if "ffn" in lp:
+                h = rms_norm(h_in, lp["norm2"], cfg.rmsnorm_eps)
+                if "router" in lp["ffn"]:
+                    h_in = h_in + moe_mod.moe_ffn(lp["ffn"], cfg, h
+                                                  ).astype(h_in.dtype)
+                else:
+                    f = lp["ffn"]
+                    h_in = h_in + swiglu(h, f["w_gate"], f["w_up"],
+                                         f["w_down"], cfg.quant_mode
+                                         ).astype(h_in.dtype)
+        return h_in, new_cache_sb
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches

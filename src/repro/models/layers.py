@@ -1,0 +1,91 @@
+"""Primitive layers shared by every architecture."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import truncated_normal_init
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+          quant_mode: str = "none") -> jax.Array:
+    """Linear layer. quant_mode="wbs" routes through the paper's
+    weighted-bit-streaming crossbar kernel (int8 sign-magnitude inputs,
+    bit-plane matmul, fused ADC) — the M2RU crossbar as a deployable
+    quantized execution mode for any projection in the zoo."""
+    if quant_mode == "wbs":
+        from repro.kernels import ops as kops
+        # Normalize activations into the crossbar's [-1, 1] drive range,
+        # run WBS, undo the scale. absmax is a cheap fused reduction.
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
+        y = kops.wbs_dense((x / s).astype(jnp.float32),
+                           w.astype(jnp.float32), n_bits=8,
+                           adc_bits=None) * s
+        y = y.astype(x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int, dtype,
+               bias: bool = False, stddev: Optional[float] = None) -> dict:
+    if stddev is None:
+        stddev = d_in ** -0.5
+    p = {"w": truncated_normal_init(key, (d_in, d_out), stddev, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x (..., S, H, hd) or (..., S, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                    # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                        # (..., S, H, hd)
+        ang = ang[..., None, :]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, quant_mode: str = "none") -> jax.Array:
+    h = jax.nn.silu(dense(x, w_gate, quant_mode=quant_mode)) \
+        * dense(x, w_up, quant_mode=quant_mode)
+    return dense(h, w_down, quant_mode=quant_mode)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+             b_up=None, b_down=None, quant_mode: str = "none") -> jax.Array:
+    h = jax.nn.gelu(dense(x, w_up, b_up, quant_mode=quant_mode))
+    return dense(h, w_down, b_down, quant_mode=quant_mode)

@@ -1,0 +1,246 @@
+"""Top-level language models: init / train loss / prefill / decode.
+
+Families
+  dense | moe | vlm | audio : decoder-only transformer (GQA or MLA mixers,
+                              dense or MoE FFN, optional modality prefix)
+  ssm                       : mamba2 stack
+  hybrid                    : jamba superblocks
+  encdec                    : encoder (bidirectional) + decoder (causal +
+                              cross-attention)
+
+Prefill returns logits over the full prompt (compute roofline of the
+prefill cell); decode_step consumes a pre-filled cache (decode cells pass
+it as an input ShapeDtypeStruct in the dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import act_constraint
+from repro.models import attention as attn
+from repro.models import blocks
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense, rms_norm
+from repro.utils import softmax_cross_entropy_masked, truncated_normal_init \
+    as tn
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    D = cfg.d_model
+    p: dict = {
+        "embed": tn(ks[0], (cfg.vocab, D), 0.02, cfg.dtype),
+        "final_norm": jnp.ones((D,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = tn(ks[1], (D, cfg.vocab), D ** -0.5, cfg.dtype)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = tn(ks[2], (D, D), D ** -0.5, cfg.dtype)
+
+    if cfg.is_encoder_decoder:
+        p["encoder"] = blocks.init_stack(ks[3], cfg, cfg.n_enc_layers,
+                                         is_ssm=False, is_moe=False)
+        p["enc_norm"] = jnp.ones((D,), cfg.dtype)
+        p["decoder"] = blocks.init_stack(ks[4], cfg, cfg.n_layers,
+                                         is_ssm=False, is_moe=False,
+                                         cross_attn=True)
+    elif cfg.layer_pattern == "hybrid":
+        p["layers"] = blocks.init_hybrid_stack(ks[3], cfg)
+    elif cfg.layer_pattern == "ssm":
+        p["layers"] = blocks.init_stack(ks[3], cfg, cfg.n_layers,
+                                        is_ssm=True, is_moe=False)
+    elif cfg.n_experts > 0:
+        if cfg.first_dense_layers:
+            p["dense_layers"] = blocks.init_stack(
+                ks[3], cfg, cfg.first_dense_layers, is_ssm=False,
+                is_moe=False)
+        p["layers"] = blocks.init_stack(
+            ks[4], cfg, cfg.n_layers - cfg.first_dense_layers,
+            is_ssm=False, is_moe=True)
+    else:
+        p["layers"] = blocks.init_stack(ks[3], cfg, cfg.n_layers,
+                                        is_ssm=False, is_moe=False)
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStructs of the full parameter tree (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(p: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def _lm_logits(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, p["final_norm"], cfg.rmsnorm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    return dense(x, p["lm_head"], quant_mode=cfg.quant_mode)
+
+
+def _prefix_embeds(p: dict, cfg: ModelConfig, batch: dict
+                   ) -> Optional[jax.Array]:
+    """Modality-stub prefix (precomputed frame/patch embeddings)."""
+    key = {"audio": "frames", "vision": "patches"}.get(cfg.frontend)
+    if key is None or key not in batch:
+        return None
+    return dense(batch[key].astype(cfg.dtype), p["frontend_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(p: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Returns logits (B, S_total, V); text logits are the last S_text."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = act_constraint(_embed_tokens(p, cfg, tokens), "btd")
+
+    if cfg.is_encoder_decoder:
+        frames = batch["frames"].astype(cfg.dtype)
+        mem = dense(frames, p["frontend_proj"]) \
+            if cfg.frontend != "none" else frames
+        mem_pos = jnp.arange(mem.shape[1])
+        mem = blocks.stack_forward(p["encoder"], cfg, mem, mem_pos,
+                                   is_ssm=False, is_moe=False, causal=False)
+        mem = rms_norm(mem, p["enc_norm"], cfg.rmsnorm_eps)
+        pos = jnp.arange(S)
+        x = blocks.stack_forward(p["decoder"], cfg, x, pos, is_ssm=False,
+                                 is_moe=False, causal=True, memory=mem,
+                                 memory_positions=mem_pos)
+        return _lm_logits(p, cfg, x)
+
+    prefix = _prefix_embeds(p, cfg, batch)
+    if prefix is not None:
+        x = jnp.concatenate([prefix, x], axis=1)
+    pos = jnp.arange(x.shape[1])
+
+    if cfg.layer_pattern == "hybrid":
+        x = blocks.hybrid_forward(p["layers"], cfg, x, pos)
+    elif cfg.layer_pattern == "ssm":
+        x = blocks.stack_forward(p["layers"], cfg, x, pos, is_ssm=True,
+                                 is_moe=False)
+    elif cfg.n_experts > 0:
+        if "dense_layers" in p:
+            x = blocks.stack_forward(p["dense_layers"], cfg, x, pos,
+                                     is_ssm=False, is_moe=False)
+        x = blocks.stack_forward(p["layers"], cfg, x, pos, is_ssm=False,
+                                 is_moe=True)
+    else:
+        x = blocks.stack_forward(p["layers"], cfg, x, pos, is_ssm=False,
+                                 is_moe=False)
+
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:, :]
+    x = act_constraint(x, "btd")
+    return act_constraint(_lm_logits(p, cfg, x), "btv")
+
+
+def loss_fn(p: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits = forward(p, cfg, batch)
+    return softmax_cross_entropy_masked(
+        logits.astype(jnp.float32), batch["labels"], batch["mask"])
+
+
+def prefill(p: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Inference prefill: forward logits over the prompt (no grad)."""
+    return forward(p, cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> PyTree:
+    spec = attn.CacheSpec(batch, max_len, cfg.kv_cache_dtype)
+
+    def stacked(n, one):
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), one)
+
+    if cfg.is_encoder_decoder:
+        kvd = cfg.n_kv_heads * cfg.hd()
+        return {
+            "self": stacked(cfg.n_layers, attn.init_kv_cache(cfg, spec)),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, enc_len, kvd),
+                                 jnp.bfloat16),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, enc_len, kvd),
+                                 jnp.bfloat16),
+            "enc_len": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.layer_pattern == "hybrid":
+        return blocks.init_hybrid_caches(cfg, batch, max_len)
+    if cfg.layer_pattern == "ssm":
+        return stacked(cfg.n_layers, ssm_mod.init_ssm_cache(cfg, batch))
+    if cfg.use_mla:
+        one = attn.init_mla_cache(cfg, spec)
+        if cfg.first_dense_layers:
+            return {"dense": stacked(cfg.first_dense_layers, one),
+                    "moe": stacked(cfg.n_layers - cfg.first_dense_layers,
+                                   one)}
+        return stacked(cfg.n_layers, one)
+    one = attn.init_kv_cache(cfg, spec)
+    if cfg.n_experts > 0 and cfg.first_dense_layers:
+        return {"dense": stacked(cfg.first_dense_layers, one),
+                "moe": stacked(cfg.n_layers - cfg.first_dense_layers, one)}
+    return stacked(cfg.n_layers, one)
+
+
+def decode_step(p: dict, cfg: ModelConfig, caches: PyTree,
+                tokens: jax.Array, pos: jax.Array
+                ) -> tuple[jax.Array, PyTree]:
+    """One new token for every sequence. tokens (B, 1); pos scalar int32
+    (current write position; same for all rows in the dry-run cells)."""
+    x = _embed_tokens(p, cfg, tokens)
+
+    if cfg.is_encoder_decoder:
+        x, new_self = blocks.stack_decode(
+            p["decoder"], caches["self"], cfg, x, pos, is_ssm=False,
+            cross_kv=(caches["cross_k"], caches["cross_v"]),
+            enc_len=caches["enc_len"])
+        caches = dict(caches, self=new_self)
+        return _lm_logits(p, cfg, x), caches
+
+    if cfg.layer_pattern == "hybrid":
+        x, new_caches = blocks.hybrid_decode(p["layers"], caches, cfg, x,
+                                             pos)
+        return _lm_logits(p, cfg, x), new_caches
+
+    if cfg.layer_pattern == "ssm":
+        x, new_caches = blocks.stack_decode(p["layers"], caches, cfg, x,
+                                            pos, is_ssm=True)
+        return _lm_logits(p, cfg, x), new_caches
+
+    if cfg.n_experts > 0 and cfg.first_dense_layers:
+        x, new_dense = blocks.stack_decode(p["dense_layers"],
+                                           caches["dense"], cfg, x, pos,
+                                           is_ssm=False)
+        x, new_moe = blocks.stack_decode(p["layers"], caches["moe"], cfg,
+                                         x, pos, is_ssm=False)
+        return _lm_logits(p, cfg, x), {"dense": new_dense, "moe": new_moe}
+
+    x, new_caches = blocks.stack_decode(p["layers"], caches, cfg, x, pos,
+                                        is_ssm=False)
+    return _lm_logits(p, cfg, x), new_caches
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -1,0 +1,254 @@
+"""Mamba-2 (SSD — state-space duality) sequence mixer.
+
+Training/prefill: the chunked SSD algorithm (Dao & Gu 2024, §6): intra-chunk
+quadratic attention-like term + inter-chunk recurrence over chunk states.
+Decode: the linear recurrence h ← dA·h + dBx, one token per step.
+
+Layer I/O follows mamba2: in_proj → [z | x | B | C | dt], depthwise causal
+conv over [x|B|C], SSD over heads of size ``ssm_head_dim``, gated RMSNorm,
+out_proj.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, rms_norm
+from repro.utils import truncated_normal_init as tn
+
+
+def _dims(cfg: ModelConfig) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return {"d_in": d_in, "nheads": nheads, "ngroups": cfg.ssm_groups,
+            "dstate": cfg.ssm_state, "hd": cfg.ssm_head_dim,
+            "dconv": cfg.ssm_conv}
+
+
+def init_ssm_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = _dims(cfg)
+    D = cfg.d_model
+    conv_dim = d["d_in"] + 2 * d["ngroups"] * d["dstate"]
+    proj_out = 2 * d["d_in"] + 2 * d["ngroups"] * d["dstate"] + d["nheads"]
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": tn(ks[0], (D, proj_out), D ** -0.5, cfg.dtype),
+        "conv_w": tn(ks[1], (d["dconv"], conv_dim), 0.1, cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, d["nheads"])
+                         ).astype(jnp.float32),
+        "dt_bias": jnp.zeros((d["nheads"],), jnp.float32),
+        "d_skip": jnp.ones((d["nheads"],), jnp.float32),
+        "norm": jnp.ones((d["d_in"],), cfg.dtype),
+        "out_proj": tn(ks[2], (d["d_in"], D), d["d_in"] ** -0.5, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., l) → (..., l, l) with out[..., i, j] = Σ_{j<k<=i} x[k],
+    −inf above the diagonal (lower-triangular decay matrix)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(l)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD over a full sequence.
+
+    x (b, l, h, p); dt (b, l, h) softplus-ed step; a_log (h,) decay;
+    B, C (b, l, g, n) with heads grouped g | h. Returns (y (b,l,h,p),
+    final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = x.shape[1]
+    c = lp // chunk
+
+    # Chunked views. dA (b, h, c, l): per-step log decay.
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = B.reshape(b, c, chunk, g, n)
+    Cc = C.reshape(b, c, chunk, g, n)
+    dA = (-jnp.exp(a_log)[None, None, None, :] * dtc)   # (b,c,l,h) ≤ 0
+    dA = jnp.moveaxis(dA, -1, 1)                        # (b,h,c,l)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    Br = jnp.repeat(Bc, rep, axis=3)                    # (b,c,l,h,n)
+    Cr = jnp.repeat(Cc, rep, axis=3)
+
+    # 1. Intra-chunk (quadratic attention-like) term.
+    L = jnp.exp(_segsum(dA))                            # (b,h,c,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bhcls", Cr, Br)   # (b,h,c,l,s)
+    M = scores * L
+    xdt = xc * dtc[..., None]                           # (b,c,l,h,p)
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", M, xdt)
+
+    # 2. Per-chunk final states: decay-to-end ⊗ B ⊗ x.
+    decay_end = jnp.exp(dA_cs[..., -1:] - dA_cs)        # (b,h,c,l)
+    states = jnp.einsum("bhcl,bclhn,bclhp->bchpn",
+                        decay_end, Br, xdt)             # (b,c,h,p,n)
+
+    # 3. Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(dA_cs[..., -1])               # (b,h,c)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_new, dec = inp                                # (b,h,p,n),(b,h)
+        s = s_new + dec[..., None, None] * s_prev
+        return s, s_prev                                # emit state *before*
+
+    init = h0 if h0 is not None else jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 2, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (b,c,h,p,n)
+
+    # 4. State → output within each chunk.
+    decay_in = jnp.exp(dA_cs)                           # (b,h,c,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       Cr, prev_states.astype(x.dtype), decay_in)
+    y = (y_diag + y_off).reshape(b, lp, h, p)[:, :l]
+    return y, final.astype(x.dtype)
+
+
+def ssd_recurrent_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                       a_log: jax.Array, B_t: jax.Array, C_t: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    """One decode step. state (b,h,p,n); x_t (b,h,p); dt_t (b,h);
+    B_t, C_t (b,g,n). Returns (y_t (b,h,p), new_state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Br = jnp.repeat(B_t, rep, axis=1)                   # (b,h,n)
+    Cr = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(-jnp.exp(a_log)[None, :] * dt_t)       # (b,h)
+    dBx = jnp.einsum("bhn,bhp->bhpn", Br, x_t * dt_t[..., None])
+    new_state = dA[..., None, None] * state + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cr)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 layer
+# ---------------------------------------------------------------------------
+
+def _split_proj(zxbcdt: jax.Array, d: dict):
+    d_in, g, n, nh = d["d_in"], d["ngroups"], d["dstate"], d["nheads"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * g * n]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def mamba2_forward(p: dict, cfg: ModelConfig, u: jax.Array,
+                   ) -> jax.Array:
+    """u (B, S, D) → (B, S, D). Training/prefill path (chunked SSD)."""
+    d = _dims(cfg)
+    b, s, _ = u.shape
+    zxbcdt = dense(u, p["in_proj"], quant_mode=cfg.quant_mode)
+    z, xBC, dt = _split_proj(zxbcdt, d)
+
+    # Depthwise causal conv over [x|B|C].
+    w = p["conv_w"]                                     # (dconv, conv_dim)
+    pad = jnp.pad(xBC, ((0, 0), (d["dconv"] - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * w[i][None, None, :]
+               for i in range(d["dconv"]))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+
+    x = xBC[..., :d["d_in"]].reshape(b, s, d["nheads"], d["hd"])
+    Bm = xBC[..., d["d_in"]:d["d_in"] + d["ngroups"] * d["dstate"]
+             ].reshape(b, s, d["ngroups"], d["dstate"])
+    Cm = xBC[..., d["d_in"] + d["ngroups"] * d["dstate"]:
+             ].reshape(b, s, d["ngroups"], d["dstate"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+
+    # Ulysses-for-SSM (§Perf iteration 15): the inter-chunk recurrence is
+    # sequential along seq — under sequence parallelism GSPMD must gather
+    # every chunk state to every device (77 GB/dev at mamba2 train). SSD
+    # states are per-head independent, so reshard seq→heads (all-to-all)
+    # around the scan and each device runs its heads' full-sequence
+    # recurrence locally.
+    from repro.distributed.context import act_constraint, ulysses_enabled
+    uly = ulysses_enabled(d["nheads"])
+    if uly:
+        # Pin x seq-sharded first: without the anchor the heads-sharded
+        # constraint back-propagates through the conv and gathers the
+        # full-sequence conv buffer on every device.
+        x = act_constraint(x, "bshd_seq")
+        x = act_constraint(x, "bshd")
+        dt = act_constraint(dt, "bsh")
+        Bm = act_constraint(Bm, "bs__")
+        Cm = act_constraint(Cm, "bs__")
+
+    y, _ = ssd_chunked(x, dt.astype(x.dtype), p["a_log"], Bm, Cm)
+    if uly:
+        y = act_constraint(y, "bshd")
+    y = y.astype(u.dtype) + x.astype(u.dtype) \
+        * p["d_skip"][None, None, :, None].astype(u.dtype)
+    y = y.reshape(b, s, d["d_in"])
+    y = rms_norm(y * jax.nn.silu(z.astype(u.dtype)), p["norm"],
+                 cfg.rmsnorm_eps)
+    return dense(y, p["out_proj"], quant_mode=cfg.quant_mode)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = _dims(cfg)
+    conv_dim = d["d_in"] + 2 * d["ngroups"] * d["dstate"]
+    return {
+        "conv": jnp.zeros((batch, d["dconv"] - 1, conv_dim), cfg.dtype),
+        "ssm": jnp.zeros((batch, d["nheads"], d["hd"], d["dstate"]),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, u: jax.Array, cache: dict
+                  ) -> tuple[jax.Array, dict]:
+    """One-token decode. u (B, 1, D)."""
+    d = _dims(cfg)
+    b = u.shape[0]
+    zxbcdt = dense(u[:, 0, :], p["in_proj"], quant_mode=cfg.quant_mode)
+    z, xBC, dt = _split_proj(zxbcdt, d)
+
+    conv_buf = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    w = p["conv_w"]
+    conv = jnp.einsum("btc,tc->bc", conv_buf, w)
+    xBC_t = jax.nn.silu(conv + p["conv_b"])
+    new_conv = conv_buf[:, 1:, :]
+
+    x_t = xBC_t[..., :d["d_in"]].reshape(b, d["nheads"], d["hd"])
+    B_t = xBC_t[..., d["d_in"]:d["d_in"] + d["ngroups"] * d["dstate"]
+                ].reshape(b, d["ngroups"], d["dstate"])
+    C_t = xBC_t[..., d["d_in"] + d["ngroups"] * d["dstate"]:
+                ].reshape(b, d["ngroups"], d["dstate"])
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+
+    y, new_ssm = ssd_recurrent_step(
+        cache["ssm"], x_t.astype(jnp.float32), dt_t, p["a_log"],
+        B_t.astype(jnp.float32), C_t.astype(jnp.float32))
+    y = y.astype(u.dtype) + x_t * p["d_skip"][None, :, None].astype(u.dtype)
+    y = y.reshape(b, d["d_in"])
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rmsnorm_eps)
+    out = dense(y, p["out_proj"], quant_mode=cfg.quant_mode)
+    return out[:, None, :], {"conv": new_conv, "ssm": new_ssm}

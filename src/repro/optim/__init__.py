@@ -1,0 +1,22 @@
+"""Self-contained optimizer stack (no optax dependency).
+
+- optimizers:  GradientTransformation-style: sgd, adam, adamw, chain,
+               clip_by_global_norm, schedules.
+- qstate:      8-bit block-quantized Adam moments (for ≥300 B configs).
+- sparsify:    K-WTA gradient sparsification (the paper's ζ) as a transform.
+- compression: top-k + error-feedback gradient compression (cross-pod DP).
+"""
+from repro.optim.optimizers import (Optimizer, sgd, adam, adamw, chain,
+                                    clip_by_global_norm, apply_updates,
+                                    scale, scale_by_adam, add_decayed_weights,
+                                    cosine_schedule, warmup_cosine)
+from repro.optim.qstate import adam_8bit
+from repro.optim.sparsify import kwta_sparsify
+from repro.optim.compression import topk_compress_error_feedback
+
+__all__ = [
+    "Optimizer", "sgd", "adam", "adamw", "chain", "clip_by_global_norm",
+    "apply_updates", "scale", "scale_by_adam", "add_decayed_weights",
+    "cosine_schedule", "warmup_cosine", "adam_8bit", "kwta_sparsify",
+    "topk_compress_error_feedback",
+]

@@ -1,0 +1,204 @@
+"""Minimal optax-style gradient-transformation optimizers.
+
+An ``Optimizer`` is (init, update):
+    state          = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params         = apply_updates(params, updates)
+
+Everything is jit-able and shard-transparent (states inherit the sharding
+of their parameters under pjit — required for the FSDP dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]],
+                     tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Primitive transforms
+# ---------------------------------------------------------------------------
+
+def scale(factor) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> Optimizer:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        lr = schedule(count)
+        return jax.tree.map(lambda g: g * -lr, grads), count + 1
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads)]
+        gnorm = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+        factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                  moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+        return AdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        grads32 = jax.tree.map(lambda g: g.astype(moment_dtype), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads32)
+        bc1 = 1 - b1 ** count.astype(moment_dtype)
+        bc2 = 1 - b2 ** count.astype(moment_dtype)
+        updates = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return updates, AdamState(count, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask_fn: Optional[Callable[[str], bool]] = None
+                        ) -> Optimizer:
+    """AdamW-style decoupled weight decay. ``mask_fn(path)`` may exclude
+    biases/norms; by default only tensors with ndim >= 2 decay."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights needs params")
+
+        def add_wd(g, p):
+            if p.ndim >= 2:
+                return g + weight_decay * p.astype(g.dtype)
+            return g
+
+        return jax.tree.map(add_wd, grads, params), state
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Canonical recipes
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    if momentum == 0.0:
+        return scale(-lr)
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, vel, params=None):
+        vel = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+        return jax.tree.map(lambda v: -lr * v, vel), vel
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return chain(scale_by_adam(b1, b2, eps), scale(-lr))
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: Optional[float] = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """LM-training default: clip → adam → weight decay → lr.
+
+    ``lr`` may be a float or a schedule ``step -> lr``.
+    """
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam(b1, b2, eps, moment_dtype))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    if callable(lr):
+        parts.append(scale_by_schedule(lr))
+    else:
+        parts.append(scale(-lr))
+    return chain(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    min_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+    return schedule
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_frac: float = 0.05) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

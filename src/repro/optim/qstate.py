@@ -1,0 +1,129 @@
+"""8-bit block-quantized Adam moments (memory-bound giant-model configs).
+
+For the ≥300 B assigned architectures (deepseek-v3-671b, jamba-1.5-large)
+fp32 Adam moments alone exceed per-chip HBM even at 256-way sharding.
+This transform stores (m, v) as int8 codes with per-block fp32 absmax
+scales (block = 128 along the LAST dim), an ~8× reduction.
+
+Moments are *shape-preserving*: codes keep the parameter's rank (last dim
+padded to the block multiple), so under pjit they inherit the parameter's
+PartitionSpec verbatim — a flat layout would force a full re-shard
+(all-gather of the entire moment tensor) between the optimizer update and
+the parameter application, measured at 436 GB/device on deepseek-v3
+(§Perf iteration log).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer, chain, scale, \
+    clip_by_global_norm, add_decayed_weights
+
+PyTree = Any
+_BLOCK = 128
+
+
+def _padded(n: int) -> int:
+    return n + (-n) % _BLOCK
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """float (..., N) → (int8 codes (..., Np), fp32 scales (..., Np/B))."""
+    n = x.shape[-1]
+    pad = _padded(n) - n
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*xp.shape[:-1], -1, _BLOCK)
+    scales = jnp.max(jnp.abs(blocks), axis=-1)
+    safe = jnp.where(scales == 0, 1.0, scales)[..., None]
+    codes = jnp.clip(jnp.round(blocks / safe * 127.0), -127, 127
+                     ).astype(jnp.int8)
+    return codes.reshape(*xp.shape), scales
+
+
+def _dequantize(codes: jax.Array, scales: jax.Array, n: int) -> jax.Array:
+    blocks = codes.reshape(*codes.shape[:-1], -1, _BLOCK)
+    x = blocks.astype(jnp.float32) * (scales / 127.0)[..., None]
+    return x.reshape(*codes.shape)[..., :n]
+
+
+class QMoment(NamedTuple):
+    codes: jax.Array   # int8, param shape with padded last dim
+    scales: jax.Array  # fp32, (..., padded/_BLOCK)
+
+
+class Adam8bitState(NamedTuple):
+    count: jax.Array
+    mu: PyTree   # of QMoment
+    nu: PyTree   # of QMoment
+
+
+def _qzeros(p: jax.Array) -> QMoment:
+    shp = p.shape if p.ndim else (1,)
+    padded = shp[:-1] + (_padded(shp[-1]),)
+    return QMoment(jnp.zeros(padded, jnp.int8),
+                   jnp.zeros(padded[:-1] + (padded[-1] // _BLOCK,),
+                             jnp.float32))
+
+
+def scale_by_adam_8bit(b1: float = 0.9, b2: float = 0.95,
+                       eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(_qzeros, params)
+        nu = jax.tree.map(_qzeros, params)
+        return Adam8bitState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        # |m̂/√v̂| ≤ 1/√(1−b2) for stationary gradients; block-quantized v
+        # can round small entries to 0 while m keeps quantization noise,
+        # exploding the ratio — element-wise clipping at the theoretical
+        # bound restores stability (the bitsandbytes recipe).
+        u_clip = 1.5 / float(np.sqrt(1.0 - b2))
+
+        def upd(g, qm, qv):
+            shp = g.shape if g.ndim else (1,)
+            n = shp[-1]
+            gf = g.reshape(shp).astype(jnp.float32)
+            m = _dequantize(qm.codes, qm.scales, n)
+            v = _dequantize(qv.codes, qv.scales, n)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            u = ((m / bc1) / (jnp.sqrt(v / bc2) + eps)).reshape(g.shape)
+            u = jnp.clip(u, -u_clip, u_clip)
+            return u, QMoment(*_quantize(m)), QMoment(*_quantize(v))
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        outs = [upd(g, m, v) for g, m, v in zip(flat_g, flat_m, flat_v)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        mu = treedef.unflatten([o[1] for o in outs])
+        nu = treedef.unflatten([o[2] for o in outs])
+        return updates, Adam8bitState(count, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adam_8bit(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+              weight_decay: float = 0.1,
+              max_grad_norm: Optional[float] = 1.0) -> Optimizer:
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam_8bit(b1, b2, eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(scale(-lr) if not callable(lr) else
+                 _schedule_scale(lr))
+    return chain(*parts)
+
+
+def _schedule_scale(lr_fn):
+    from repro.optim.optimizers import scale_by_schedule
+    return scale_by_schedule(lr_fn)

@@ -1,0 +1,47 @@
+"""K-WTA gradient sparsification as an optimizer transform — the paper's ζ.
+
+Wraps any optimizer: gradients are sparsified (per-tensor global top-k by
+magnitude) *before* the inner update, exactly as Algorithm 1 lines 19-21
+apply ζ before the SGD write. On M2RU this cuts memristor write traffic
+~47 %; at datacenter scale the same transform cuts gradient all-reduce
+payload (see optim.compression for the error-feedback variant).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kwta import kwta_global
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def kwta_sparsify(inner: Optimizer, keep_frac: float = 0.57,
+                  min_size: int = 64) -> Optimizer:
+    """Apply ζ(·) with ``keep_frac`` to every gradient tensor with more than
+    ``min_size`` elements (scalars/biases pass through untouched, as the
+    hardware only sparsifies crossbar writes)."""
+    if not (0.0 < keep_frac <= 1.0):
+        raise ValueError("keep_frac in (0,1]")
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params=None):
+        def zeta(g):
+            if g.size <= min_size or g.ndim < 2:
+                return g
+            return kwta_global(g, keep_frac)
+
+        sparse = jax.tree.map(zeta, grads)
+        return inner.update(sparse, state, params)
+
+    return Optimizer(init, update)
+
+
+def write_masks(updates: PyTree) -> PyTree:
+    """Which synapses receive a write this step (for EnduranceTracker)."""
+    return jax.tree.map(lambda u: u != 0, updates)

@@ -1,0 +1,4 @@
+"""Serving: batched decode engine."""
+from repro.serve.engine import ServeEngine, ServeConfig
+
+__all__ = ["ServeEngine", "ServeConfig"]

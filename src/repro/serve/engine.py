@@ -1,0 +1,149 @@
+"""Batched decode engine with slot-based continuous batching.
+
+A fixed pool of B slots shares one cache allocation. Requests occupy free
+slots; each engine step decodes one token for every active slot; finished
+sequences (EOS or max_len) free their slot for the next queued request.
+This is the slot/page-lite serving pattern (vLLM-style without paging —
+the cache is contiguous per slot, sized to max_len).
+
+The decode step is a single jit'd function (params, caches, tokens, pos)
+so the same compiled executable serves every batch composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 256
+    eos_token: int = 0
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig,
+                 params: Any):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.caches = lm.init_cache(cfg, scfg.batch_slots, scfg.max_len)
+        self.slot_req: list[Optional[Request]] = \
+            [None] * scfg.batch_slots
+        self.slot_pos = np.zeros(scfg.batch_slots, dtype=np.int64)
+        self.queue: deque[Request] = deque()
+        self._rng = jax.random.PRNGKey(scfg.seed)
+
+        cfg_ = cfg
+
+        def step_fn(params, caches, tokens, pos):
+            logits, caches = lm.decode_step(params, cfg_, caches, tokens,
+                                            pos)
+            return logits[:, -1, :], caches
+
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 32) -> Request:
+        req = Request(rid=len(self.queue) + 1000 * self.steps_run,
+                      prompt=list(prompt), max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.batch_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = 0
+                # Prefill the prompt token-by-token through the decode
+                # path (single compiled executable; a production engine
+                # adds a chunked-prefill fast path).
+                for t in req.prompt[:-1]:
+                    self._advance_slot(slot, t, sample=False)
+                req.tokens = []
+                req.pending_token = req.prompt[-1]
+
+    def _advance_slot(self, slot: int, token: int, sample: bool) -> int:
+        toks = np.zeros((self.scfg.batch_slots, 1), np.int32)
+        toks[slot, 0] = token
+        pos = jnp.int32(int(self.slot_pos[slot]))
+        logits, self.caches = self._step(self.params, self.caches,
+                                         jnp.asarray(toks), pos)
+        self.slot_pos[slot] += 1
+        if not sample:
+            return -1
+        return self._pick(logits[slot])
+
+    def _pick(self, logits: jax.Array) -> int:
+        if self.scfg.greedy:
+            return int(jnp.argmax(logits))
+        self._rng, sub = jax.random.split(self._rng)
+        return int(jax.random.categorical(
+            sub, logits / self.scfg.temperature))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Advance every active slot one token. Returns #active slots."""
+        self._admit()
+        active = [s for s in range(self.scfg.batch_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        # One batched decode for all active slots (idle slots get pad).
+        toks = np.zeros((self.scfg.batch_slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            toks[s, 0] = req.pending_token if not req.tokens \
+                else req.tokens[-1]
+        # All slots in the dry-run share pos; per-slot pos differs here,
+        # so step slots grouped by position.
+        by_pos: dict[int, list[int]] = {}
+        for s in active:
+            by_pos.setdefault(int(self.slot_pos[s]), []).append(s)
+        for pos_val, slots in by_pos.items():
+            t = np.zeros((self.scfg.batch_slots, 1), np.int32)
+            for s in slots:
+                t[s, 0] = toks[s, 0]
+            logits, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(t),
+                jnp.int32(pos_val))
+            for s in slots:
+                req = self.slot_req[s]
+                nxt = self._pick(logits[s])
+                req.tokens.append(nxt)
+                self.slot_pos[s] += 1
+                if (nxt == self.scfg.eos_token
+                        or len(req.tokens) >= req.max_new
+                        or self.slot_pos[s] >= self.scfg.max_len - 1):
+                    req.done = True
+                    self.slot_req[s] = None
+        self.steps_run += 1
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

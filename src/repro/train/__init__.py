@@ -1,0 +1,5 @@
+"""Training loop, checkpointing, fault tolerance."""
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Trainer, TrainConfig
+
+__all__ = ["CheckpointManager", "Trainer", "TrainConfig"]

@@ -1,0 +1,182 @@
+"""The training loop: gradient accumulation, checkpoint/restart, fault
+tolerance, logging. Mesh-agnostic: pass shardings for a production mesh
+or nothing for single-device runs (tests, examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as optim_mod
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import ShardedBatcher
+from repro.models import lm
+from repro.train.checkpoint import CheckpointManager
+from repro.train.faults import HealthMonitor, PreemptionGuard
+from repro.utils import tree_size
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    grad_accum: int = 1
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    seed: int = 0
+    # Paper-derived options:
+    kwta_grad_keep: Optional[float] = None    # ζ sparsification
+    grad_compression_keep: Optional[float] = None  # cross-pod top-k + EF
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 batcher: ShardedBatcher,
+                 params: Optional[PyTree] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.batcher = batcher
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = params if params is not None \
+            else lm.init_params(key, cfg)
+
+        schedule = optim_mod.warmup_cosine(tcfg.lr, tcfg.warmup_steps,
+                                           tcfg.steps)
+        opt = optim_mod.adamw(schedule, weight_decay=tcfg.weight_decay,
+                              max_grad_norm=tcfg.max_grad_norm)
+        if tcfg.kwta_grad_keep is not None:
+            opt = optim_mod.kwta_sparsify(opt, tcfg.kwta_grad_keep)
+        if tcfg.grad_compression_keep is not None:
+            opt = optim_mod.topk_compress_error_feedback(
+                opt, tcfg.grad_compression_keep)
+        self.optimizer = opt
+        self.opt_state = opt.init(self.params)
+
+        self.step = 0
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints) \
+            if tcfg.checkpoint_dir else None
+        self.monitor = HealthMonitor()
+        self.history: list[dict] = []
+        self._jit_step = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self) -> Callable:
+        cfg = self.cfg
+        accum = self.tcfg.grad_accum
+        optimizer = self.optimizer
+
+        def one_grad(params, batch):
+            return jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, batch))(params)
+
+        def train_step(params, opt_state, batch):
+            if accum == 1:
+                loss, grads = one_grad(params, batch)
+            else:
+                # Microbatch split along the batch axis.
+                def micro(carry, mb):
+                    loss_sum, g_sum = carry
+                    l, g = one_grad(params, mb)
+                    return (loss_sum + l,
+                            jax.tree.map(jnp.add, g_sum, g)), None
+
+                micro_batches = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+                zeros = jax.tree.map(jnp.zeros_like, params)
+                (loss, grads), _ = jax.lax.scan(
+                    micro, (jnp.zeros(()), zeros), micro_batches)
+                loss = loss / accum
+                grads = jax.tree.map(lambda g: g / accum, grads)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = optim_mod.apply_updates(params, updates)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(
+                g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+            return params, opt_state, loss, gnorm
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self) -> bool:
+        """Auto-restore from the latest checkpoint (restart-after-failure
+        path). Returns True if restored."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        step, tree, extra = self.ckpt.restore()
+        self.params = _cast_tree(tree["params"], self.params)
+        self.opt_state = _cast_tree(tree["opt"], self.opt_state)
+        self.step = step
+        if "data" in extra:
+            self.batcher.load_state_dict(extra["data"])
+        return True
+
+    def save(self, async_: bool = True) -> None:
+        if self.ckpt is None:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        extra = {"data": self.batcher.state_dict()}
+        if async_:
+            self.ckpt.save_async(self.step, tree, extra)
+        else:
+            self.ckpt.save(self.step, tree, extra)
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            guard: Optional[PreemptionGuard] = None) -> list[dict]:
+        target = self.step + (steps if steps is not None
+                              else self.tcfg.steps)
+        while self.step < target:
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.batcher.next().items()}
+            self.params, self.opt_state, loss, gnorm = self._jit_step(
+                self.params, self.opt_state, batch)
+            loss = float(loss)
+            dt = time.time() - t0
+            self.step += 1
+            straggler = self.monitor.record(self.step, dt)
+            rec = {"step": self.step, "loss": loss,
+                   "grad_norm": float(gnorm), "sec": round(dt, 4),
+                   "straggler": straggler}
+            self.history.append(rec)
+            if self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d}  loss {loss:.4f}  "
+                      f"gnorm {float(gnorm):.3f}  {dt*1e3:.0f} ms",
+                      flush=True)
+            if self.ckpt and self.step % self.tcfg.checkpoint_every == 0:
+                self.save()
+            if guard is not None and guard.requested:
+                self.save(async_=False)
+                print(f"preempted at step {self.step}; checkpoint saved",
+                      flush=True)
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history
+
+    @property
+    def n_params(self) -> int:
+        return tree_size(self.params)
+
+
+def _cast_tree(loaded: PyTree, like: PyTree) -> PyTree:
+    """Match restored host arrays to the live tree's dtypes/structure."""
+    flat_like, treedef = jax.tree.flatten(like)
+    flat_loaded = jax.tree.leaves(loaded)
+    assert len(flat_like) == len(flat_loaded), \
+        (len(flat_like), len(flat_loaded))
+    cast = [jnp.asarray(a, dtype=b.dtype)
+            for a, b in zip(flat_loaded, flat_like)]
+    return jax.tree.unflatten(treedef, cast)

@@ -1,0 +1,151 @@
+"""Crossbar, WBS, ADC, endurance models (§IV, §V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analog.adc import adc_quantize, total_hold_droop
+from repro.analog.crossbar import CrossbarSpec, program, update, vmm
+from repro.analog.endurance import (EnduranceTracker, lifespan_years,
+                                    paper_lifespan_check)
+from repro.analog.wbs import (WBSSpec, bit_planes, ideal_gains,
+                              quantize_signed, wbs_vmm)
+
+
+# ---------------------------------------------------------------------------
+# Crossbar
+# ---------------------------------------------------------------------------
+
+def test_conductance_window():
+    spec = CrossbarSpec()
+    assert spec.g_on == pytest.approx(1 / 2e6)
+    assert spec.g_off == pytest.approx(1 / 20e6)
+    assert spec.g_ref == pytest.approx(0.5 * (spec.g_on + spec.g_off))
+
+
+def test_program_roundtrip_ideal():
+    spec = CrossbarSpec(write_sigma=0.0, read_sigma=0.0)
+    w = jnp.array([[0.5, -0.5], [1.0, -1.0]])
+    state = program(jax.random.PRNGKey(0), w, spec)
+    np.testing.assert_allclose(state.to_weights(), w, rtol=1e-6)
+
+
+def test_program_clips_to_window():
+    spec = CrossbarSpec(write_sigma=0.0)
+    w = jnp.array([[5.0, -5.0]])          # beyond w_clip
+    state = program(jax.random.PRNGKey(0), w, spec)
+    np.testing.assert_allclose(jnp.abs(state.to_weights()), 1.0, rtol=1e-6)
+
+
+def test_write_variability_magnitude():
+    spec = CrossbarSpec(write_sigma=0.10)
+    w = jnp.full((64, 64), 0.5)
+    state = program(jax.random.PRNGKey(0), w, spec)
+    got = state.to_weights()
+    # 10 % conductance noise maps to weight-domain spread around 0.5.
+    assert 0.01 < float(jnp.std(got)) < 0.3
+    assert abs(float(got.mean()) - 0.5) < 0.05
+
+
+def test_vmm_matches_matmul_ideal():
+    spec = CrossbarSpec(write_sigma=0.0, read_sigma=0.0)
+    w = 0.8 * jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    w = jnp.clip(w, -1, 1)
+    state = program(jax.random.PRNGKey(1), w, spec)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (4, 16))
+    np.testing.assert_allclose(vmm(None, x, state), x @ w, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_update_only_writes_nonzero():
+    spec = CrossbarSpec(write_sigma=0.0)
+    w = jnp.zeros((4, 4))
+    state = program(jax.random.PRNGKey(0), w, spec)
+    dw = jnp.zeros((4, 4)).at[1, 2].set(0.25)
+    new = update(jax.random.PRNGKey(1), state, dw)
+    diff = new.to_weights() - state.to_weights()
+    assert float(jnp.abs(diff).sum()) == pytest.approx(
+        float(jnp.abs(diff[1, 2])), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# WBS (eqs. 11-19)
+# ---------------------------------------------------------------------------
+
+def test_bit_planes_reconstruct():
+    code = jnp.arange(256, dtype=jnp.uint8)
+    planes = bit_planes(code, 8)
+    weights = 2.0 ** jnp.arange(7, -1, -1)
+    rec = jnp.einsum("k,k...->...", weights, planes)
+    np.testing.assert_array_equal(rec, code.astype(jnp.float32))
+
+
+def test_gains_geometric_series():
+    """Σ 2^-k = 1 − 2^-nb (eq. 18)."""
+    for nb in (4, 8):
+        g = ideal_gains(nb)
+        assert float(g.sum()) == pytest.approx(1 - 2.0 ** -nb)
+
+
+def test_wbs_vmm_ideal_equals_fixed_point():
+    spec = WBSSpec(n_bits=8, gain_sigma=0.0, adc_bits=None)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (16, 32),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    y = wbs_vmm(x, w, spec)
+    sign, code = quantize_signed(x, 8)
+    x_hat = sign.astype(jnp.float32) * code.astype(jnp.float32) / 255.0
+    np.testing.assert_allclose(y, x_hat @ w, rtol=1e-4, atol=1e-5)
+
+
+def test_wbs_gain_noise_perturbs():
+    spec = WBSSpec(n_bits=8, gain_sigma=0.05, adc_bits=None)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 16),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    y0 = wbs_vmm(x, w, WBSSpec(n_bits=8, adc_bits=None))
+    y1 = wbs_vmm(x, w, spec, key=jax.random.PRNGKey(2))
+    rel = float(jnp.abs(y1 - y0).max() / jnp.abs(y0).max())
+    assert 0 < rel < 0.2
+
+
+# ---------------------------------------------------------------------------
+# ADC / integrator
+# ---------------------------------------------------------------------------
+
+def test_adc_quantize_grid():
+    v = jnp.linspace(-3, 3, 77)
+    q = adc_quantize(v, 8, 4.0)
+    step = 8.0 / 256
+    np.testing.assert_allclose(q / step, jnp.round(q / step), atol=1e-5)
+    assert float(jnp.abs(q - v).max()) <= step / 2 + 1e-6
+
+
+def test_hold_droop_below_paper_budget():
+    """Paper: ΔV < 10.5 µV (< 0.1 LSB) over 200 ns."""
+    assert total_hold_droop() < 10.5e-6
+
+
+# ---------------------------------------------------------------------------
+# Endurance / lifespan (§VI-B)
+# ---------------------------------------------------------------------------
+
+def test_tracker_counts_and_cdf():
+    t = EnduranceTracker(endurance=100)
+    t.record_update({"w": np.array([[1, 0], [1, 1]], bool)})
+    t.record_update({"w": np.array([[1, 0], [0, 0]], bool)})
+    assert t.mean_writes() == pytest.approx((2 + 0 + 1 + 1) / 4)
+    xs, cdf = t.write_cdf(n_points=4)
+    assert cdf[-1] == 1.0
+    assert t.overstressed_fraction(1000) > 0  # rate 1/update × 1000 > 100
+
+
+def test_lifespan_scaling_matches_paper():
+    """Write-rate halving ≈ doubles lifetime: 6.9 → ~12-13 yr (§VI-B)."""
+    chk = paper_lifespan_check()
+    assert 11.0 < chk["sparse_years_scaling"] < 14.0
+    assert abs(chk["write_reduction"] - 0.47) < 0.02
+    # Absolute anchor: uniform writes at 1 kHz with 1e9 endurance.
+    yrs = lifespan_years(1.0, endurance=1e9, update_period_s=1e-3)
+    assert yrs == pytest.approx(1e9 * 1e-3 / (365.25 * 24 * 3600),
+                                rel=1e-6)

@@ -1,0 +1,72 @@
+"""Data pipeline: determinism, restart-safety, task streams."""
+import numpy as np
+
+from repro.data.pipeline import ShardedBatcher
+from repro.data.synthetic import (lm_token_batch, make_permuted_tasks,
+                                  make_split_tasks)
+
+
+def test_batcher_deterministic():
+    def gen(rng, step):
+        return {"x": rng.integers(0, 100, 8)}
+
+    a = ShardedBatcher(gen, seed=3)
+    b = ShardedBatcher(gen, seed=3)
+    for _ in range(5):
+        np.testing.assert_array_equal(a.next()["x"], b.next()["x"])
+
+
+def test_batcher_restart_resumes_exactly():
+    def gen(rng, step):
+        return {"x": rng.integers(0, 1000, 4)}
+
+    a = ShardedBatcher(gen, seed=0)
+    seq = [a.next()["x"] for _ in range(6)]
+    state = a.state_dict()
+
+    b = ShardedBatcher(gen, seed=99)         # wrong seed on purpose
+    b.load_state_dict({"step": 3, "seed": 0})
+    for i in range(3, 6):
+        np.testing.assert_array_equal(b.next()["x"], seq[i])
+    assert state["step"] == 6
+
+
+def test_batches_differ_across_steps():
+    def gen(rng, step):
+        return {"x": rng.integers(0, 10**6, 16)}
+
+    a = ShardedBatcher(gen, seed=0)
+    x0 = a.next()["x"]
+    x1 = a.next()["x"]
+    assert not np.array_equal(x0, x1)
+
+
+def test_permuted_tasks_structure():
+    tasks = make_permuted_tasks(0, n_tasks=3, n_train=50, n_test=20)
+    assert len(tasks) == 3
+    t0 = tasks[0]
+    assert t0.x_train.shape == (50, 28, 28)
+    assert t0.x_train.min() >= 0 and t0.x_train.max() <= 1
+    # Same underlying data, different pixel permutations.
+    a = tasks[0].x_train.reshape(50, -1)
+    b = tasks[1].x_train.reshape(50, -1)
+    assert not np.allclose(a, b)
+    np.testing.assert_allclose(np.sort(a, axis=1), np.sort(b, axis=1),
+                               atol=1e-6)
+
+
+def test_split_tasks_binary_head():
+    tasks = make_split_tasks(0, n_tasks=4, n_train=40, n_test=10)
+    for t in tasks:
+        assert set(np.unique(t.y_train)) <= {0, 1}
+        assert t.x_train.shape[1:] == (16, 32)
+
+
+def test_lm_token_batch_shapes_and_structure():
+    rng = np.random.default_rng(0)
+    b = lm_token_batch(rng, 4, 32, vocab=1000)
+    assert b["tokens"].shape == (4, 32)
+    assert b["labels"].shape == (4, 32)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert b["mask"][:, -1].sum() == 0
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 1000

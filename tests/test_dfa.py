@@ -1,0 +1,152 @@
+"""DFA-through-time (Algorithm 1): correctness, learning, alignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfa as D
+from repro.core.miru import (MiRUConfig, init_dfa_feedback,
+                             init_miru_params, miru_forward)
+from repro.data.synthetic import make_permuted_tasks
+from repro.utils import accuracy
+
+CFG = MiRUConfig(n_x=28, n_h=64, n_y=10)
+
+
+def _setup(seed=0):
+    params = init_miru_params(jax.random.PRNGKey(seed), CFG)
+    psi = init_dfa_feedback(jax.random.PRNGKey(seed + 1), CFG)
+    task = make_permuted_tasks(seed, n_tasks=1, n_train=400,
+                               n_test=200)[0]
+    return params, psi, task
+
+
+def test_output_layer_gradient_exact():
+    """DFA's readout gradient IS the true gradient (lines 9-10)."""
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train[:64])
+    y = jnp.asarray(task.y_train[:64])
+    _, g_dfa = D.dfa_grads(params, psi, CFG, x, y)
+    _, g_bp = D.bptt_grads(params, CFG, x, y)
+    np.testing.assert_allclose(g_dfa["w_o"], g_bp["w_o"], rtol=2e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(g_dfa["b_o"], g_bp["b_o"], rtol=2e-4,
+                               atol=1e-6)
+
+
+def test_hidden_grads_shapes_finite():
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train[:32])
+    y = jnp.asarray(task.y_train[:32])
+    loss, g = D.dfa_grads(params, psi, CFG, x, y)
+    for k, p in params.items():
+        assert g[k].shape == p.shape
+        assert bool(jnp.isfinite(g[k]).all()), k
+    assert float(loss) > 0
+
+
+def test_no_transposed_forward_weights():
+    """Structural property: hidden grads do not depend on W_o (the whole
+    point of DFA — no backward locking through the readout weights)."""
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train[:32])
+    y = jnp.asarray(task.y_train[:32])
+
+    def hidden_grad_wrt_wo(w_o):
+        p = dict(params, w_o=w_o)
+        _, g = D.dfa_grads(p, psi, CFG, x, y)
+        return jnp.sum(jnp.abs(g["w_h"]))
+
+    # d(hidden grad)/d(W_o) flows only through δ_o (the error), never
+    # through a W_oᵀ product — check the Jacobian exists but the grads
+    # match those from a *random* W_o direction, i.e. swapping Ψ changes
+    # hidden grads, swapping W_o's transpose does not enter:
+    psi2 = init_dfa_feedback(jax.random.PRNGKey(99), CFG)
+    _, g1 = D.dfa_grads(params, psi, CFG, x, y)
+    _, g2 = D.dfa_grads(params, psi2, CFG, x, y)
+    assert float(jnp.abs(g1["w_h"] - g2["w_h"]).max()) > 1e-7
+
+
+def test_dfa_learns_single_task():
+    """DFA + SGD + ζ reaches high accuracy (Fig. 4's software-DFA)."""
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train)
+    y = jnp.asarray(task.y_train)
+
+    @jax.jit
+    def step(params):
+        loss, g = D.dfa_grads(params, psi, CFG, x, y)
+        newp, _ = D.sgd_kwta_update(params, g, lr=0.2, keep_frac=0.57,
+                                    hidden_lr_scale=0.3)
+        return newp, loss
+
+    for _ in range(150):
+        params, loss = step(params)
+    logits, _ = miru_forward(params, CFG, jnp.asarray(task.x_test))
+    acc = float(accuracy(logits, jnp.asarray(task.y_test)))
+    assert acc > 0.8, acc
+
+
+def test_dfa_within_5pct_of_bp():
+    """The paper's headline: accuracy within ~5% of the BP baseline."""
+    from repro.optim import adam, apply_updates
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train)
+    y = jnp.asarray(task.y_train)
+    xt = jnp.asarray(task.x_test)
+    yt = jnp.asarray(task.y_test)
+
+    p_bp = dict(params)
+    opt = adam(1e-3)
+    st = opt.init(p_bp)
+
+    @jax.jit
+    def bp_step(p, st):
+        loss, g = D.bptt_grads(p, CFG, x, y)
+        up, st = opt.update(g, st, p)
+        return apply_updates(p, up), st
+
+    p_dfa = dict(params)
+
+    @jax.jit
+    def dfa_step(p, xb, yb):
+        _, g = D.dfa_grads(p, psi, CFG, xb, yb)
+        newp, _ = D.sgd_kwta_update(p, g, lr=0.2, keep_frac=0.57,
+                                    hidden_lr_scale=0.3)
+        return newp
+
+    for _ in range(150):
+        p_bp, st = bp_step(p_bp, st)
+    rng = np.random.default_rng(0)
+    xh = np.asarray(task.x_train)
+    yh = np.asarray(task.y_train)
+    for _ in range(400):          # SGD needs more passes than Adam
+        idx = rng.integers(0, xh.shape[0], 64)
+        p_dfa = dfa_step(p_dfa, jnp.asarray(xh[idx]), jnp.asarray(yh[idx]))
+    acc_bp = float(accuracy(miru_forward(p_bp, CFG, xt)[0], yt))
+    acc_dfa = float(accuracy(miru_forward(p_dfa, CFG, xt)[0], yt))
+    assert acc_bp - acc_dfa < 0.07, (acc_bp, acc_dfa)
+
+
+def test_kwta_update_sparsity_and_masks():
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train[:32])
+    y = jnp.asarray(task.y_train[:32])
+    _, g = D.dfa_grads(params, psi, CFG, x, y)
+    newp, masks = D.sgd_kwta_update(params, g, lr=0.1, keep_frac=0.5)
+    frac = float(jnp.mean(masks["w_h"].astype(jnp.float32)))
+    assert abs(frac - 0.5) < 0.02
+    # Where the mask is zero, the parameter is untouched.
+    unchanged = jnp.where(masks["w_h"], 0.0, newp["w_h"] - params["w_h"])
+    np.testing.assert_allclose(unchanged, 0.0, atol=0)
+
+
+def test_time_norm_controls_scale():
+    """Without 1/n_T the hidden grad norm scales ~n_T× larger."""
+    params, psi, task = _setup()
+    x = jnp.asarray(task.x_train[:32])
+    y = jnp.asarray(task.y_train[:32])
+    _, g_norm = D.dfa_grads(params, psi, CFG, x, y, time_norm=True)
+    _, g_raw = D.dfa_grads(params, psi, CFG, x, y, time_norm=False)
+    ratio = float(jnp.linalg.norm(g_raw["w_h"])
+                  / jnp.linalg.norm(g_norm["w_h"]))
+    assert abs(ratio - x.shape[1]) < 1e-3

@@ -1,0 +1,247 @@
+"""Per-kernel sweeps: Pallas (interpret mode on CPU) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# WBS matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (33, 70, 19), (128, 128, 128),
+                                   (130, 257, 64), (1, 5, 300)])
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_wbs_matmul_shapes(m, k, n, n_bits):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 1000 + k + n))
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = jax.random.normal(kw, (k, n))
+    sign, code = ops.quantize_inputs(x, n_bits)
+    gains = 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
+    got = ops.wbs_matmul(sign, code, w, gains)
+    want = ref.wbs_matmul_ref(sign, code, w, gains)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("w_dtype", [jnp.float32, jnp.bfloat16])
+def test_wbs_matmul_dtypes(w_dtype):
+    x = jax.random.uniform(jax.random.PRNGKey(0), (32, 48),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 24)).astype(w_dtype)
+    sign, code = ops.quantize_inputs(x, 8)
+    gains = 2.0 ** (-jnp.arange(1, 9, dtype=jnp.float32))
+    got = ops.wbs_matmul(sign, code, w, gains)
+    want = ref.wbs_matmul_ref(sign, code, w, gains)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    assert got.dtype == jnp.float32
+
+
+def test_wbs_matmul_adc():
+    x = jax.random.uniform(jax.random.PRNGKey(0), (16, 32),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.2
+    sign, code = ops.quantize_inputs(x, 8)
+    gains = 2.0 ** (-jnp.arange(1, 9, dtype=jnp.float32))
+    got = ops.wbs_matmul(sign, code, w, gains, adc_bits=8, adc_range=4.0)
+    want = ref.wbs_matmul_ref(sign, code, w, gains, adc_bits=8,
+                              adc_range=4.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # Output lands on the ADC grid.
+    step = 2 * 4.0 / 256
+    np.testing.assert_allclose(got / step, np.round(got / step), atol=1e-4)
+
+
+def test_wbs_approximates_float_matmul():
+    """Ideal gains ⇒ WBS == fixed-point matmul; error bounded by input
+    quantization (the paper's ≤5 % VMM error claim at 4-bit, Fig. 5a)."""
+    x = jax.random.uniform(jax.random.PRNGKey(2), (64, 100),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(3), (100, 32))
+    exact = x @ w
+    for n_bits, tol in [(8, 0.01), (4, 0.10)]:
+        y = ops.wbs_dense(x, w, n_bits=n_bits, adc_bits=None)
+        rel = float(jnp.abs(y - exact).max() / jnp.abs(exact).max())
+        assert rel < tol, (n_bits, rel)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 60), st.integers(1, 30))
+def test_wbs_matmul_property(m, k, n):
+    kx = jax.random.PRNGKey(m + 100 * k + 10000 * n)
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = jax.random.normal(kx, (k, n))
+    sign, code = ops.quantize_inputs(x, 6)
+    gains = 2.0 ** (-jnp.arange(1, 7, dtype=jnp.float32))
+    got = ops.wbs_matmul(sign, code, w, gains)
+    want = ref.wbs_matmul_ref(sign, code, w, gains)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MiRU fused recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h", [(1, 1, 8), (4, 28, 100), (8, 16, 128),
+                                   (3, 5, 200), (16, 32, 64)])
+def test_miru_scan_shapes(b, t, h):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b + t + h), 3)
+    xw = jax.random.normal(k1, (b, t, h))
+    u = jax.random.normal(k2, (h, h)) * 0.3
+    h0 = jax.random.normal(k3, (b, h)) * 0.5
+    got_h, got_p = ops.miru_scan(xw, u, h0, beta=0.8, lam=0.5)
+    want_h, want_p = ref.miru_scan_ref(xw, u, h0, beta=0.8, lam=0.5)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("beta,lam", [(1.0, 0.0), (0.5, 0.9), (0.05, 0.5)])
+def test_miru_scan_coefficients(beta, lam):
+    xw = jax.random.normal(jax.random.PRNGKey(0), (4, 10, 32))
+    u = jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.3
+    h0 = jnp.zeros((4, 32))
+    got_h, _ = ops.miru_scan(xw, u, h0, beta=beta, lam=lam)
+    want_h, _ = ref.miru_scan_ref(xw, u, h0, beta=beta, lam=lam)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+
+
+def test_miru_scan_matches_cell_semantics():
+    """Kernel == the core library's lax.scan forward (same recurrence)."""
+    from repro.core.miru import MiRUConfig, init_miru_params, miru_forward
+    cfg = MiRUConfig(n_x=12, n_h=48, n_y=5, beta=0.7, lam=0.4)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (6, 9, 12))
+    logits_ref, aux_ref = miru_forward(params, cfg, x, use_fused=False)
+    logits_fused, aux_fused = miru_forward(params, cfg, x, use_fused=True)
+    np.testing.assert_allclose(logits_fused, logits_ref, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(aux_fused["h_all"], aux_ref["h_all"],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention forward (Pallas)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk,h,dh,kh", [(16, 16, 2, 8, 2),
+                                           (40, 40, 4, 16, 2),
+                                           (128, 256, 2, 32, 1),
+                                           (33, 65, 4, 16, 4)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_fwd_vs_full(sq, sk, h, dh, kh, causal):
+    from repro.models.attention import full_attention
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk + h), 3)
+    q = jax.random.normal(ks[0], (2, sq, h, dh))
+    k = jax.random.normal(ks[1], (2, sk, kh, dh))
+    v = jax.random.normal(ks[2], (2, sk, kh, dh))
+    if causal and sk != sq:
+        pytest.skip("causal requires square here")
+    want = full_attention(q, k, v, causal)
+    got, lse = ops.flash_attention_fwd(q, k, v, causal, bq=16, bk=16)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    assert lse.shape == (2, h, sq)
+    assert bool(jnp.isfinite(lse).all())
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("sq,sk", [(32, 32), (64, 128)])
+def test_flash_bwd_kernels_vs_autodiff(causal, sq, sk):
+    """dq/dkv Pallas kernels == jax.grad through full attention."""
+    from repro.kernels.flash_attention import (flash_attention_bwd_pallas,
+                                               flash_attention_fwd_pallas)
+    from repro.models.attention import full_attention
+    if causal and sq != sk:
+        pytest.skip("causal requires square")
+    BH, dh = 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk), 4)
+    q = jax.random.normal(ks[0], (BH, sq, dh))
+    k = jax.random.normal(ks[1], (BH, sk, dh))
+    v = jax.random.normal(ks[2], (BH, sk, dh))
+    do = jax.random.normal(ks[3], (BH, sq, dh))
+    out, lse = flash_attention_fwd_pallas(q, k, v, causal=causal, bq=16,
+                                          bk=16, interpret=True)
+    dq, dk, dv = flash_attention_bwd_pallas(q, k, v, out, lse, do,
+                                            causal=causal, bq=16, bk=16,
+                                            interpret=True)
+
+    def f(q_, k_, v_):
+        o = full_attention(q_[:, :, None, :], k_[:, :, None, :],
+                           v_[:, :, None, :], causal)
+        return jnp.sum(o[:, :, 0, :] * do)
+
+    want = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for got, ref_g in zip((dq, dk, dv), want):
+        np.testing.assert_allclose(got, ref_g, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_fwd_dtypes():
+    from repro.models.attention import full_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 32, 2, 16)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 32, 2, 16)).astype(jnp.bfloat16)
+    want = full_attention(q, k, v, True)
+    got, _ = ops.flash_attention_fwd(q, k, v, True, bq=16, bk=16)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=3e-2,
+                               atol=3e-2)
+    assert got.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# k-WTA
+# ---------------------------------------------------------------------------
+
+def _separated(key, r, n):
+    """Rows with well-separated distinct magnitudes (no bisection ties)."""
+    base = jnp.linspace(0.1, 10.0, n)
+    perm = jax.vmap(lambda k: jax.random.permutation(k, base))(
+        jax.random.split(key, r))
+    signs = jnp.where(
+        jax.random.bernoulli(key, 0.5, (r, n)), 1.0, -1.0)
+    return perm * signs
+
+
+@pytest.mark.parametrize("r,n,k", [(1, 16, 4), (8, 100, 57), (5, 333, 1),
+                                   (16, 64, 63), (3, 128, 128)])
+def test_kwta_exact_on_separated(r, n, k):
+    x = _separated(jax.random.PRNGKey(r * n + k), r, n)
+    got = ops.kwta(x, k)
+    want = ref.kwta_ref(x, k)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    if k < n:
+        assert (np.count_nonzero(np.asarray(got), axis=1) == k).all()
+
+
+def test_kwta_1d_and_preserves_values():
+    x = _separated(jax.random.PRNGKey(0), 1, 50)[0]
+    y = ops.kwta(x, 7)
+    nz = np.nonzero(np.asarray(y))[0]
+    assert len(nz) == 7
+    np.testing.assert_array_equal(np.asarray(y)[nz], np.asarray(x)[nz])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(2, 200), st.data())
+def test_kwta_property(r, n, data):
+    k = data.draw(st.integers(1, n))
+    x = _separated(jax.random.PRNGKey(r * 7919 + n), r, n)
+    got = ops.kwta(x, k)
+    # Winners are the top-k magnitudes; nonzeros preserved from input.
+    mag = np.abs(np.asarray(x))
+    got_np = np.asarray(got)
+    for row in range(r):
+        nz = np.nonzero(got_np[row])[0]
+        assert len(nz) == min(k, n)
+        kth = np.sort(mag[row])[-k]
+        assert (mag[row][nz] >= kth - 1e-6).all()
+
+
+def test_kwta_core_vs_kernel():
+    """core.kwta (exact jnp) and the kernel agree on separated inputs."""
+    from repro.core.kwta import kwta as core_kwta
+    x = _separated(jax.random.PRNGKey(5), 4, 80)
+    np.testing.assert_allclose(ops.kwta(x, 20),
+                               core_kwta(x, k=20, axis=-1), atol=0)

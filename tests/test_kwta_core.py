@@ -1,0 +1,68 @@
+"""core.kwta — exact ζ semantics and softmax approximation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kwta import kwta, kwta_global, kwta_mask, kwta_softmax
+
+
+def test_mask_counts_exact_with_ties():
+    x = jnp.array([[3.0, 1.0, 1.0, 1.0, 0.5]])
+    m = kwta_mask(x, 3, by_magnitude=False)
+    assert int(m.sum()) == 3
+    assert bool(m[0, 0])
+    # ties broken by position: indices 1,2 admitted, 3 not.
+    assert bool(m[0, 1]) and bool(m[0, 2]) and not bool(m[0, 3])
+
+
+def test_by_magnitude_keeps_large_negatives():
+    x = jnp.array([-5.0, 0.1, 4.0, -0.2])
+    y = kwta(x, k=2, axis=0)
+    np.testing.assert_array_equal(np.nonzero(np.asarray(y))[0], [0, 2])
+
+
+def test_keep_frac():
+    x = jnp.arange(1.0, 101.0)
+    y = kwta(x, keep_frac=0.57, axis=0)
+    assert int((y != 0).sum()) == 57
+
+
+def test_kwta_global_flattens():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 10))
+    y = kwta_global(x, 0.25)
+    assert int((y != 0).sum()) == 25
+    thr = jnp.sort(jnp.abs(x).reshape(-1))[-25]
+    assert float(jnp.abs(y[y != 0]).min()) >= float(thr) - 1e-7
+
+
+def test_kwta_softmax_mass():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 10))
+    p = kwta_softmax(logits, 3)
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (np.count_nonzero(np.asarray(p) > 1e-8, axis=1) <= 3).all()
+
+
+def test_k_edge_cases():
+    x = jnp.array([1.0, -2.0, 3.0])
+    np.testing.assert_array_equal(kwta(x, k=3, axis=0), x)
+    np.testing.assert_array_equal(kwta(x, k=0, axis=0), jnp.zeros(3))
+    with pytest.raises(ValueError):
+        kwta(x)                       # neither k nor keep_frac
+    with pytest.raises(ValueError):
+        kwta(x, k=1, keep_frac=0.5)   # both
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 64), st.data())
+def test_winners_are_topk(r, n, data):
+    k = data.draw(st.integers(1, n))
+    x = jax.random.normal(jax.random.PRNGKey(r * 131 + n), (r, n))
+    y = kwta(x, k=k)
+    mag = np.abs(np.asarray(x))
+    for row in range(r):
+        nz = np.nonzero(np.asarray(y[row]))[0]
+        assert len(nz) == k
+        kth = np.sort(mag[row])[-k]
+        assert (mag[row][nz] >= kth - 1e-7).all()

@@ -1,0 +1,119 @@
+"""MiRU cell semantics (eqs. 1-3) and compactness claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.miru import (MiRUConfig, gru_param_count, init_dfa_feedback,
+                             init_miru_params, miru_cell, miru_forward,
+                             miru_param_count)
+
+
+def _cfg(**kw):
+    base = dict(n_x=12, n_h=32, n_y=5, beta=0.8, lam=0.5)
+    base.update(kw)
+    return MiRUConfig(**base)
+
+
+def test_cell_equations():
+    """One step matches eqs. (1)-(2) computed by hand."""
+    cfg = _cfg()
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(1), (3, cfg.n_h))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, cfg.n_x))
+    h_new, pre = miru_cell(params, cfg, h, x)
+    pre_hand = x @ params["w_h"] + (cfg.beta * h) @ params["u_h"] \
+        + params["b_h"]
+    h_hand = cfg.lam * h + (1 - cfg.lam) * jnp.tanh(pre_hand)
+    np.testing.assert_allclose(pre, pre_hand, rtol=1e-6)
+    np.testing.assert_allclose(h_new, h_hand, rtol=1e-6)
+
+
+def test_forward_shapes_and_intermediates():
+    cfg = _cfg()
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 7, cfg.n_x))
+    logits, aux = miru_forward(params, cfg, x)
+    assert logits.shape == (4, cfg.n_y)
+    assert aux["h_all"].shape == (4, 7, cfg.n_h)
+    assert aux["h_prev"].shape == (4, 7, cfg.n_h)
+    # h_prev is h_all shifted by one (h⁰ = 0).
+    np.testing.assert_allclose(aux["h_prev"][:, 1:], aux["h_all"][:, :-1],
+                               rtol=1e-6)
+    np.testing.assert_allclose(aux["h_prev"][:, 0], 0.0, atol=0)
+
+
+def test_lam_extremes():
+    """λ→0: h = tanh path only; λ large: h barely moves (paper §II-B)."""
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 5, 12))
+    cfg0 = _cfg(lam=0.0)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg0)
+    _, aux0 = miru_forward(params, cfg0, x)
+    pre0 = aux0["pre"]
+    np.testing.assert_allclose(aux0["h_all"], jnp.tanh(pre0), rtol=1e-6)
+
+    cfg9 = _cfg(lam=0.95)
+    _, aux9 = miru_forward(params, cfg9, x)
+    # With strong update coefficient the state changes slowly.
+    assert float(jnp.abs(jnp.diff(aux9["h_all"], axis=1)).max()) < \
+        float(jnp.abs(jnp.diff(aux0["h_all"], axis=1)).max())
+
+
+def test_beta_zero_limit():
+    """β→0 removes history from the candidate (paper: 'hidden activation
+    becomes almost entirely dependent on the current input')."""
+    cfg = _cfg(beta=1e-6)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 4, cfg.n_x))
+    _, aux = miru_forward(params, cfg, x)
+    pre_direct = x @ params["w_h"] + params["b_h"]
+    np.testing.assert_allclose(aux["pre"], pre_direct, atol=1e-4)
+
+
+def test_param_count_vs_gru():
+    """MiRU removes the two gate weight sets: ~3× fewer recurrent-core
+    parameters than GRU (the paper's compactness claim)."""
+    cfg = _cfg(n_x=28, n_h=100, n_y=10)
+    miru_n = miru_param_count(cfg)
+    gru_n = gru_param_count(28, 100, 10)
+    core_miru = 28 * 100 + 100 * 100 + 100
+    core_gru = 3 * core_miru
+    assert gru_n - miru_n == core_gru - core_miru
+    assert miru_n == 28 * 100 + 100 * 100 + 100 + 100 * 10 + 10
+
+
+def test_invalid_coefficients_rejected():
+    with pytest.raises(ValueError):
+        _cfg(beta=0.0)
+    with pytest.raises(ValueError):
+        _cfg(lam=1.0)
+
+
+def test_kwta_readout():
+    cfg = _cfg(readout_k=2)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 6, cfg.n_x))
+    logits, _ = miru_forward(params, cfg, x)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Only ~k classes carry probability mass.
+    mass_top2 = jnp.sort(probs, axis=-1)[:, -2:].sum(-1)
+    assert float(mass_top2.min()) > 0.99
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.05, 1.0), st.floats(0.0, 0.95))
+def test_state_bounded(beta, lam):
+    """Hidden state stays in (-1, 1): convex combos of tanh outputs."""
+    cfg = _cfg(beta=beta, lam=lam)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(1), (2, 20, cfg.n_x))
+    _, aux = miru_forward(params, cfg, x)
+    assert float(jnp.abs(aux["h_all"]).max()) <= 1.0
+
+
+def test_psi_shape_and_frozen_scale():
+    cfg = _cfg()
+    psi = init_dfa_feedback(jax.random.PRNGKey(3), cfg)
+    assert psi.shape == (cfg.n_y, cfg.n_h)
+    assert 0.1 < float(jnp.std(psi)) < 1.0

@@ -1,0 +1,47 @@
+"""Serving engine: slots, continuous batching, determinism."""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
+
+
+def _engine(slots=4, max_len=32):
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(cfg, ServeConfig(batch_slots=slots, max_len=max_len,
+                                        eos_token=-1), params), cfg
+
+
+def test_single_request():
+    eng, cfg = _engine()
+    req = eng.submit([1, 2, 3], max_new=5)
+    eng.run_until_drained()
+    assert req.done
+    assert len(req.tokens) == 5
+    assert all(0 <= t < cfg.vocab for t in req.tokens)
+
+
+def test_more_requests_than_slots():
+    eng, _ = _engine(slots=2)
+    reqs = [eng.submit([i + 1, i + 2], max_new=4) for i in range(5)]
+    eng.run_until_drained()
+    assert all(r.done and len(r.tokens) == 4 for r in reqs)
+
+
+def test_greedy_deterministic():
+    outs = []
+    for _ in range(2):
+        eng, _ = _engine()
+        req = eng.submit([5, 6, 7, 8], max_new=6)
+        eng.run_until_drained()
+        outs.append(req.tokens)
+    assert outs[0] == outs[1]
+
+
+def test_prompt_conditioning_changes_output():
+    eng, _ = _engine()
+    r1 = eng.submit([1, 2, 3, 4], max_new=6)
+    r2 = eng.submit([90, 91, 92, 93], max_new=6)
+    eng.run_until_drained()
+    assert r1.tokens != r2.tokens

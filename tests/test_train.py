@@ -1,0 +1,115 @@
+"""Trainer, checkpointing (atomic/async/elastic), fault tolerance."""
+import json
+import os
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import ShardedBatcher
+from repro.data.synthetic import lm_token_batch
+from repro.train import CheckpointManager, TrainConfig, Trainer
+from repro.train.faults import HealthMonitor, PreemptionGuard
+
+
+def _mk_trainer(tmp_path, steps=20, seed=0, checkpoint_every=5, **kw):
+    cfg = get_smoke_config("qwen2-0.5b")
+
+    def gen(rng, step):
+        return lm_token_batch(rng, 4, 16, cfg.vocab)
+
+    tcfg = TrainConfig(steps=steps, lr=1e-3, warmup_steps=2,
+                       checkpoint_every=checkpoint_every, log_every=1000,
+                       checkpoint_dir=str(tmp_path), seed=seed, **kw)
+    return Trainer(cfg, tcfg, ShardedBatcher(gen, seed=seed))
+
+
+def test_loss_decreases(tmp_path):
+    t = _mk_trainer(tmp_path, steps=40)
+    hist = t.run()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_restart_bit_identical(tmp_path):
+    """Crash/restart: the restored trainer reproduces the uninterrupted
+    run exactly (deterministic data pipeline + exact state restore)."""
+    # checkpoint_every large: the explicit save at step 10 is the only
+    # checkpoint, so the restored twin resumes exactly there.
+    a = _mk_trainer(tmp_path / "a", steps=20, checkpoint_every=1000)
+    a.run(steps=10)
+    a.save(async_=False)
+    a.run(steps=10)
+    uninterrupted = [h["loss"] for h in a.history[10:]]
+
+    b = _mk_trainer(tmp_path / "a", steps=20, checkpoint_every=1000)
+    assert b.maybe_restore()
+    assert b.step == 10
+    b.run(steps=10)
+    restarted = [h["loss"] for h in b.history]
+    np.testing.assert_allclose(restarted, uninterrupted, rtol=1e-6)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    ck = CheckpointManager(tmp_path, keep=2)
+    tree = {"params": {"w": jnp.arange(8.0)}}
+    ck.save(1, tree)
+    ck.save(2, tree)
+    ck.save(3, tree)
+    assert ck.all_steps() == [2, 3]          # keep=2 GC'd step 1
+    assert not list(tmp_path.glob("*.tmp"))  # no torn state left
+    step, restored, _ = ck.restore()
+    assert step == 3
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.arange(8.0))
+
+
+def test_checkpoint_async(tmp_path):
+    ck = CheckpointManager(tmp_path)
+    tree = {"w": jnp.ones((1024, 64))}
+    ck.save_async(7, tree, extra={"note": "async"})
+    ck.wait()
+    step, restored, extra = ck.restore()
+    assert step == 7 and extra["note"] == "async"
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Checkpoints are mesh-agnostic logical arrays: restore onto a
+    different sharding (here: the 1-device mesh with a new layout)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ck = CheckpointManager(tmp_path)
+    ck.save(1, {"w": jnp.arange(16.0).reshape(4, 4)})
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    _, restored, _ = ck.restore(shardings=shardings)
+    assert restored["w"].sharding == shardings["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]).reshape(-1),
+                                  np.arange(16.0))
+
+
+def test_preemption_guard_checkpoint_and_stop(tmp_path):
+    """SIGTERM mid-run → finish the in-flight step, checkpoint, exit."""
+    t = _mk_trainer(tmp_path, steps=100, checkpoint_every=1000)
+    guard = PreemptionGuard(install=False)
+    t.run(steps=3)
+    guard.requested = True                  # deterministic "signal"
+    t.run(guard=guard)                      # runs exactly one more step
+    assert t.step == 4                      # stopped at the boundary
+    assert t.ckpt.latest_step() == 4        # checkpoint saved on exit
+
+
+def test_health_monitor_straggler():
+    mon = HealthMonitor(straggler_factor=3.0)
+    for s in range(10):
+        assert not mon.record(s, 0.1)
+    assert mon.record(10, 1.0)               # 10× the EWMA
+    assert mon.straggler_events[0][0] == 10
+
+
+def test_kwta_and_compression_in_trainer(tmp_path):
+    t = _mk_trainer(tmp_path, steps=10, kwta_grad_keep=0.5,
+                    grad_compression_keep=0.5)
+    hist = t.run()
+    assert all(np.isfinite(h["loss"]) for h in hist)
