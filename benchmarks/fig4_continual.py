@@ -33,11 +33,13 @@ def run(fast: bool = True) -> dict:
             cfg = MiRUConfig(n_x=F, n_h=n_h, n_y=n_y)
             for trainer in ("adam", "dfa", "dfa_hw"):
                 t0 = time.time()
-                ccfg = ContinualConfig(trainer=trainer,
-                                       epochs_per_task=p["epochs"],
-                                       batch_size=32,
-                                       replay_capacity=512)
-                res = run_continual(cfg, ccfg, tasks)
+                # Legacy trainer strings resolve through the backend
+                # registry: "dfa_hw" ≡ DFA on the "analog" substrate.
+                tspec, rspec, backend = ContinualConfig(
+                    trainer=trainer, epochs_per_task=p["epochs"],
+                    batch_size=32, replay_capacity=512).specs()
+                res = run_continual(cfg, tspec, tasks, replay=rspec,
+                                    device=backend)
                 key = f"{stream}_nh{n_h}_{trainer}"
                 out[key] = {"MA": res["MA"],
                             "acc_after_each": res["acc_after_each"],

@@ -22,10 +22,11 @@ def run() -> dict:
     rates = {}
     for name, keep in (("dense", None), ("sparsified", 0.57)):
         t0 = time.time()
-        ccfg = ContinualConfig(trainer="dfa", epochs_per_task=4,
-                               batch_size=32, replay_capacity=256,
-                               kwta_keep_frac=keep, track_endurance=True)
-        res = run_continual(cfg, ccfg, tasks)
+        tspec, rspec, backend = ContinualConfig(
+            trainer="dfa", epochs_per_task=4, batch_size=32,
+            replay_capacity=256, kwta_keep_frac=keep,
+            track_endurance=True).specs()
+        res = run_continual(cfg, tspec, tasks, replay=rspec, device=backend)
         tracker = res["endurance"]
         rate = tracker.mean_writes() / max(tracker.updates_applied, 1)
         xs, cdf = tracker.write_cdf(64)

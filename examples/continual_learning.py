@@ -1,23 +1,37 @@
 """End-to-end driver (the paper's workload): domain-incremental continual
-learning on the M2RU accelerator model — several hundred training steps
+learning on a pluggable device substrate — several hundred training steps
 through a sequence of tasks with reservoir replay, DFA-through-time,
 K-WTA-sparsified noisy crossbar writes, WBS-quantized inference, and
 endurance tracking with a lifespan projection.
 
-    PYTHONPATH=src python examples/continual_learning.py [--trainer dfa_hw]
+The algorithm (--algo adam|dfa) and the substrate (--backend, any name in
+the repro.backends registry) compose freely; the legacy combined trainer
+strings (adam | dfa | dfa_hw) keep working via --trainer.
+
+    PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog
+    PYTHONPATH=src python examples/continual_learning.py --trainer dfa_hw   # legacy
 """
 import argparse
 
 from repro.analog.costmodel import M2RUCostModel
-from repro.core.continual import ContinualConfig, run_continual
+from repro.backends import available_backends, get_backend
+from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
+                                  run_continual)
 from repro.core.miru import MiRUConfig
 from repro.data.synthetic import make_permuted_tasks
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--trainer", default="dfa_hw",
-                    choices=["adam", "dfa", "dfa_hw"])
+    ap.add_argument("--trainer", default=None,
+                    choices=["adam", "dfa", "dfa_hw"],
+                    help="legacy combined trainer string (shim path)")
+    ap.add_argument("--algo", default=None, choices=["adam", "dfa"],
+                    help="learning rule (default: dfa)")
+    ap.add_argument("--backend", default=None,
+                    choices=list(available_backends()),
+                    help="device substrate from the backend registry "
+                         "(default: analog)")
     ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--hidden", type=int, default=100)
@@ -26,14 +40,30 @@ def main():
     tasks = make_permuted_tasks(seed=0, n_tasks=args.tasks, n_train=600,
                                 n_test=200)
     cfg = MiRUConfig(n_x=28, n_h=args.hidden, n_y=10)
-    ccfg = ContinualConfig(trainer=args.trainer,
-                           epochs_per_task=args.epochs, batch_size=32,
-                           replay_capacity=512,
-                           track_endurance=args.trainer != "adam")
+
+    if args.trainer is not None:
+        if args.algo is not None or args.backend is not None:
+            ap.error("--trainer (legacy) conflicts with --algo/--backend; "
+                     "pass one or the other")
+        # Legacy path: the flat config maps onto the specs + registry.
+        ccfg = ContinualConfig(trainer=args.trainer,
+                               epochs_per_task=args.epochs, batch_size=32,
+                               replay_capacity=512,
+                               track_endurance=args.trainer != "adam")
+        trainer, replay, backend = ccfg.specs()
+    else:
+        algo = args.algo or "dfa"
+        name = args.backend or "analog"
+        trainer = TrainerSpec(algo=algo, epochs_per_task=args.epochs,
+                              batch_size=32)
+        replay = ReplaySpec(capacity=512)
+        backend = get_backend(
+            name, spec_overrides=dict(track_endurance=algo != "adam"))
+
     n_steps = args.tasks * args.epochs * (600 // 32)
-    print(f"trainer={args.trainer}  tasks={args.tasks}  "
-          f"~{n_steps} training steps")
-    res = run_continual(cfg, ccfg, tasks)
+    print(f"algo={trainer.algo}  backend={backend.name}  "
+          f"tasks={args.tasks}  ~{n_steps} training steps")
+    res = run_continual(cfg, trainer, tasks, replay=replay, device=backend)
 
     print("\naccuracy after each task (mean over seen tasks):")
     for t, a in enumerate(res["acc_after_each"]):

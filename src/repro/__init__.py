@@ -2,6 +2,7 @@
 
 Layers:
   core/        the paper's contribution (MiRU, DFA-through-time, K-WTA, replay)
+  backends/    pluggable device substrates (ideal | wbs | analog + registry)
   analog/      mixed-signal hardware-like model + circuit cost model
   kernels/     Pallas TPU kernels (wbs_matmul, miru_scan, kwta)
   models/      LM architecture zoo (GQA/MLA/MoE/SSD/enc-dec/hybrid)

@@ -1,0 +1,29 @@
+"""Pluggable device backends — one algorithm, many substrates.
+
+- base:     the DeviceBackend protocol (vmm / quantize_readout /
+            apply_update / endurance hooks) and the DeviceSpec record.
+- registry: name-keyed factory registry (register_backend / get_backend).
+- ideal:    full-precision software substrate (the paper's baseline).
+- wbs:      WBS-quantized digital path — input quantization + ADC, no
+            device noise (isolates fixed-point error).
+- analog:   the mixed-signal M2RU crossbar — WBS + gain/read variability,
+            noisy finite-level writes, endurance accounting.
+
+Every hardware-aware entry point (the continual trainer, model
+``quant_mode``, kernels dispatch, benchmarks) resolves substrates through
+this registry; adding device physics means registering a backend, not
+adding an ``elif``. See docs/backends.md.
+"""
+from repro.backends.base import DeviceBackend, DeviceSpec
+from repro.backends.registry import (available_backends, get_backend,
+                                     register_backend, unregister_backend)
+from repro.backends.ideal import IdealBackend
+from repro.backends.wbs import WBSBackend
+from repro.backends.analog import AnalogBackend
+
+__all__ = [
+    "DeviceBackend", "DeviceSpec",
+    "available_backends", "get_backend", "register_backend",
+    "unregister_backend",
+    "IdealBackend", "WBSBackend", "AnalogBackend",
+]

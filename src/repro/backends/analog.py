@@ -1,0 +1,108 @@
+"""Mixed-signal crossbar substrate — the full M2RU accelerator model.
+
+Extends the WBS digital path with `CrossbarSpec`-driven device physics:
+
+  forward  — per-plane memristor-ratio gain variability (``gain_sigma``),
+             optional per-access conductance read noise
+             (``crossbar.read_sigma``), fused ADC readout.
+  write    — §V-B device-to-device write variation on every programmed
+             synapse (``crossbar.write_sigma``), optional finite
+             programming resolution (``crossbar.write_levels``, the Ziksa
+             pulse quantization), clip to the crossbar's dynamic range.
+  lifetime — per-device write counting through the endurance tracker;
+             only nonzero updates (post K-WTA sparsification upstream)
+             cost write pulses.
+
+The default spec mirrors the paper's §V-B calibration as used by the
+Fig. 4 hardware runs: 8-bit WBS drive, 8-bit ADC, 2 % plane-gain
+variability, 10 % write variability, |w| ≤ 1.5. Read variability is
+carried by the plane gains by default (``read_sigma=0``); set
+``crossbar.read_sigma`` to add per-access conductance noise on top.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog.crossbar import CrossbarSpec
+from repro.backends.base import DeviceSpec, PyTree
+from repro.backends.registry import register_backend
+from repro.backends.wbs import WBSBackend
+
+
+@register_backend("analog")
+class AnalogBackend(WBSBackend):
+    name = "analog"
+
+    @classmethod
+    def default_spec(cls) -> DeviceSpec:
+        return DeviceSpec(input_bits=8, adc_bits=8, adc_range=4.0,
+                          gain_sigma=0.02, weight_clip=1.5,
+                          crossbar=CrossbarSpec(write_sigma=0.10,
+                                                read_sigma=0.0,
+                                                w_clip=1.5))
+
+    @property
+    def crossbar(self) -> CrossbarSpec:
+        # Fallback mirrors default_spec: read variability is carried by the
+        # plane gains unless a CrossbarSpec explicitly opts into read_sigma.
+        return self.spec.crossbar if self.spec.crossbar is not None \
+            else CrossbarSpec(read_sigma=0.0, w_clip=self._weight_scale())
+
+    def _weight_scale(self) -> float:
+        # One source of truth for the logical dynamic range: an explicit
+        # DeviceSpec.weight_clip wins, else the crossbar's own w_clip.
+        if self.spec.weight_clip:
+            return self.spec.weight_clip
+        if self.spec.crossbar is not None:
+            return self.spec.crossbar.w_clip
+        return 1.0
+
+    # ------------------------------------------------------------------
+    def vmm(self, drive: jax.Array, weights: jax.Array,
+            key: Optional[jax.Array] = None) -> jax.Array:
+        cb = self.crossbar
+        k_read = k_gain = key
+        if key is not None and cb.read_sigma > 0:
+            k_read, k_gain = jax.random.split(key)
+            # Cycle-to-cycle conductance variation: each access sees a
+            # perturbed effective weight (crossbar.vmm's read model, in
+            # logical-weight units).
+            weights = weights * (1.0 + cb.read_sigma
+                                 * jax.random.normal(k_read, weights.shape))
+        return super().vmm(drive, weights, k_gain)
+
+    # ------------------------------------------------------------------
+    def apply_update(self, params: PyTree, updates: PyTree,
+                     key: Optional[jax.Array] = None
+                     ) -> tuple[PyTree, PyTree]:
+        """In-situ training write. Only nonzero update entries receive
+        write pulses (the K-WTA sparsifier upstream decides which); each
+        pulse lands with multiplicative write noise, optionally snaps to
+        the finite programming grid, and the result is clipped to the
+        crossbar's dynamic range."""
+        cb = self.crossbar
+        clip = self._weight_scale()
+        if key is None:
+            raise ValueError("analog apply_update needs a PRNG key "
+                             "(write variability is stochastic)")
+        keys = jax.random.split(key, len(params))
+        new_params, applied = {}, {}
+        for kw, (name, p) in zip(keys, sorted(params.items())):
+            dw = updates[name]
+            noise = 1.0 + cb.write_sigma * jax.random.normal(kw, dw.shape)
+            dw = jnp.where(dw != 0, dw * noise, 0.0)
+            w = p + dw
+            if cb.write_levels is not None:
+                # Finite programming resolution: written devices snap to
+                # the conductance grid (write_levels points across the
+                # logical range [-clip, clip]); untouched devices keep
+                # their analog value.
+                step = 2.0 * clip / (cb.write_levels - 1)
+                w = jnp.where(dw != 0, jnp.round(w / step) * step, w)
+            w = jnp.clip(w, -clip, clip)
+            new_params[name] = w
+            applied[name] = w - p
+        return new_params, applied

@@ -1,0 +1,117 @@
+"""Device-backend protocol — the seam between *algorithm* and *substrate*.
+
+The paper's core claim is that one recurrence (MiRU + DFA-through-time)
+runs on very different substrates: an ideal software model, a WBS-quantized
+digital path, and the full mixed-signal crossbar with write variability and
+endurance limits. A :class:`DeviceBackend` captures everything a substrate
+contributes to training and inference:
+
+  vmm(drive, weights, key)        forward matrix–vector product — where
+                                  input quantization, bit-streaming, gain
+                                  variability and read noise live.
+  quantize_readout(pre)           the fused output ADC, applied after the
+                                  bias add (identity for digital paths).
+  apply_update(params, dw, key)   the weight write — write noise, finite
+                                  programming levels, dynamic-range clip.
+  record_endurance(applied)       host-side per-device write counting.
+  spec                            the :class:`DeviceSpec` describing the
+                                  substrate's knobs.
+
+Training algorithms (BPTT+Adam, DFA+SGD, …) never branch on a device name;
+they call these hooks.  New substrates register themselves with
+:func:`repro.backends.register_backend` — see ``docs/backends.md``.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.analog.crossbar import CrossbarSpec
+from repro.analog.endurance import EnduranceTracker
+
+PyTree = dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Substrate description consumed by a :class:`DeviceBackend`.
+
+    Forward-path knobs:
+      input_bits    sign-magnitude drive precision (None = full precision).
+      adc_bits      fused readout ADC precision (None = no quantization).
+      adc_range     symmetric ADC full scale, logical units.
+      gain_sigma    WBS per-plane memristor-ratio variability (§V-A).
+
+    Write-path knobs:
+      weight_clip   logical dynamic range of a stored weight (None = ∞).
+      crossbar      device physics for the write path — write_sigma,
+                    write_levels — used by the analog backend.
+
+    Bookkeeping:
+      track_endurance  attach an :class:`EnduranceTracker` to the backend.
+    """
+    input_bits: Optional[int] = None
+    adc_bits: Optional[int] = None
+    adc_range: float = 4.0
+    gain_sigma: float = 0.0
+    weight_clip: Optional[float] = None
+    crossbar: Optional[CrossbarSpec] = None
+    track_endurance: bool = False
+
+
+class DeviceBackend(abc.ABC):
+    """Abstract substrate. Subclasses implement ``vmm`` and ``apply_update``;
+    both must be jit-traceable (stochasticity explicit via PRNG keys)."""
+
+    name: str = "abstract"
+
+    def __init__(self, spec: Optional[DeviceSpec] = None):
+        self.spec = spec if spec is not None else self.default_spec()
+        self.tracker: Optional[EnduranceTracker] = \
+            EnduranceTracker() if self.spec.track_endurance else None
+
+    @classmethod
+    def default_spec(cls) -> DeviceSpec:
+        return DeviceSpec()
+
+    # ------------------------------------------------------------------
+    # Forward path
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def vmm(self, drive: jax.Array, weights: jax.Array,
+            key: Optional[jax.Array] = None) -> jax.Array:
+        """y = drive @ weights on this substrate. drive (..., n_in),
+        weights (n_in, n_out). ``key`` feeds per-access noise; backends
+        must be deterministic when it is None."""
+
+    def quantize_readout(self, pre: jax.Array) -> jax.Array:
+        """Fused output ADC, applied to the integrator output after the
+        bias add. Identity by default (digital/ideal paths)."""
+        return pre
+
+    # ------------------------------------------------------------------
+    # Write path
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def apply_update(self, params: PyTree, updates: PyTree,
+                     key: Optional[jax.Array] = None
+                     ) -> tuple[PyTree, PyTree]:
+        """Write ``updates`` (already lr-scaled and sparsified by the
+        trainer) into ``params``. Returns (new_params, applied) where
+        ``applied`` records the deltas that actually landed on devices
+        (post noise/levels/clip) for endurance accounting."""
+
+    def record_endurance(self, applied: PyTree) -> None:
+        """Host-side write counting; no-op unless the spec asked for it."""
+        if self.tracker is not None:
+            self.tracker.record_update(
+                {k: np.asarray(v != 0) for k, v in applied.items()
+                 if np.ndim(v) >= 2})
+
+    # ------------------------------------------------------------------
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} name={self.name!r} spec={self.spec}>"

@@ -1,0 +1,30 @@
+"""Ideal software substrate — full-precision matmuls, exact writes.
+
+This is the paper's software baseline: ``vmm`` is a plain matrix product
+and ``apply_update`` is the exact ``params + updates`` used by the Adam and
+DFA software trainers. Guaranteed bit-identical to the pre-backend
+``miru_forward``/``apply_updates`` paths (asserted in tests/test_backends).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.backends.base import DeviceBackend, PyTree
+from repro.backends.registry import register_backend
+from repro.optim import apply_updates
+
+
+@register_backend("ideal")
+class IdealBackend(DeviceBackend):
+    name = "ideal"
+
+    def vmm(self, drive: jax.Array, weights: jax.Array,
+            key: Optional[jax.Array] = None) -> jax.Array:
+        return drive @ weights
+
+    def apply_update(self, params: PyTree, updates: PyTree,
+                     key: Optional[jax.Array] = None
+                     ) -> tuple[PyTree, PyTree]:
+        return apply_updates(params, updates), updates

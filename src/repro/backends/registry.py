@@ -1,0 +1,76 @@
+"""Name-keyed registry of device backends.
+
+Replaces the string-keyed ``if/elif`` hardware paths: every substrate is a
+registered factory, and every entry point (continual trainer, model
+``quant_mode``, kernels dispatch, benchmarks) resolves it here.
+
+    @register_backend("my_device")
+    class MyBackend(DeviceBackend):
+        ...
+
+    backend = get_backend("my_device", spec=DeviceSpec(adc_bits=6))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+from repro.backends.base import DeviceBackend, DeviceSpec
+
+_REGISTRY: dict[str, Callable[..., DeviceBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Optional[Callable[..., DeviceBackend]] = None):
+    """Register a backend factory (usable as a class decorator).
+
+    The factory is called as ``factory(spec=...)`` and must return a
+    :class:`DeviceBackend`. Re-registering a name overwrites it (useful for
+    tests and experiment sweeps)."""
+    def _do(f):
+        _REGISTRY[name] = f
+        return f
+    return _do if factory is None else _do(factory)
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: Union[str, DeviceBackend],
+                spec: Optional[DeviceSpec] = None,
+                spec_overrides: Optional[dict[str, Any]] = None,
+                **kwargs) -> DeviceBackend:
+    """Instantiate a registered backend by name.
+
+    A fresh instance is returned per call (backends carry per-run state —
+    the endurance tracker). ``spec_overrides`` replaces individual fields
+    on top of ``spec`` (or, when ``spec`` is None, on top of the backend's
+    own default spec) — the rest of the substrate's physics is preserved.
+    Passing an existing :class:`DeviceBackend` returns it unchanged, so
+    call sites can accept either form."""
+    if isinstance(name, DeviceBackend):
+        if spec is not None or spec_overrides or kwargs:
+            raise ValueError("cannot override the configuration of an "
+                             "instantiated backend; construct a new one "
+                             "instead")
+        return name
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown device backend {name!r}; "
+            f"available: {', '.join(available_backends()) or '(none)'}"
+        ) from None
+    if spec_overrides:
+        if spec is None:
+            default_spec = getattr(factory, "default_spec", None)
+            spec = default_spec() if callable(default_spec) \
+                else factory(spec=None, **kwargs).spec
+        spec = dataclasses.replace(spec, **spec_overrides)
+    return factory(spec=spec, **kwargs)
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (test teardown helper)."""
+    _REGISTRY.pop(name, None)

@@ -1,0 +1,138 @@
+"""WBS digital substrate — quantized inputs + ADC, no device noise.
+
+Models the digital portion of the M2RU datapath: drives are sign-magnitude
+quantized to ``input_bits`` and bit-streamed (eqs. 11-19), the readout is
+ADC-quantized, weights live in a finite logical dynamic range — but there
+is no memristor variability (ideal plane gains, exact writes). This
+isolates pure quantization error from device physics (Fig. 5a's axis).
+
+Dispatch: the fused Pallas kernel (``kernels/ops.wbs_dense``) on
+accelerators; the vectorized jnp reference (``analog/wbs.wbs_vmm``) on CPU,
+where interpret-mode Pallas would be orders of magnitude slower. Both share
+the same fixed-point semantics (swept against each other in
+tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog.wbs import WBSSpec, ideal_gains, wbs_vmm
+from repro.backends.base import DeviceBackend, DeviceSpec, PyTree
+from repro.backends.registry import register_backend
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators. The sign-magnitude/ADC rounding inside the
+# quantized paths has zero gradient a.e., which would zero every hidden-weight
+# gradient under BPTT. These wrappers return the quantized value exactly on
+# the forward pass (no extra compute for inference-only callers) while the
+# backward pass sees the underlying linear op.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_matmul(y_quant: jax.Array, drive: jax.Array,
+                weights: jax.Array) -> jax.Array:
+    return y_quant
+
+
+def _ste_matmul_fwd(y_quant, drive, weights):
+    return y_quant, (drive, weights)
+
+
+def _ste_matmul_bwd(res, g):
+    drive, weights = res
+    d2 = drive.reshape(-1, drive.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    return (jnp.zeros_like(g), g @ weights.T,
+            (d2.T @ g2).astype(weights.dtype))
+
+
+_ste_matmul.defvjp(_ste_matmul_fwd, _ste_matmul_bwd)
+
+
+@jax.custom_vjp
+def _ste_identity(y_quant: jax.Array, x: jax.Array) -> jax.Array:
+    return y_quant
+
+
+def _ste_identity_fwd(y_quant, x):
+    return y_quant, None
+
+
+def _ste_identity_bwd(_res, g):
+    return jnp.zeros_like(g), g
+
+
+_ste_identity.defvjp(_ste_identity_fwd, _ste_identity_bwd)
+
+
+@register_backend("wbs")
+class WBSBackend(DeviceBackend):
+    name = "wbs"
+
+    def __init__(self, spec: Optional[DeviceSpec] = None,
+                 use_kernel: Optional[bool] = None):
+        super().__init__(spec)
+        # None = auto: Pallas kernel when compiled (non-CPU), jnp reference
+        # in interpret-mode environments.
+        self.use_kernel = use_kernel
+
+    @classmethod
+    def default_spec(cls) -> DeviceSpec:
+        return DeviceSpec(input_bits=8, adc_bits=8, adc_range=4.0,
+                          weight_clip=1.5)
+
+    # ------------------------------------------------------------------
+    def _weight_scale(self) -> float:
+        return self.spec.weight_clip if self.spec.weight_clip else 1.0
+
+    def _sample_gains(self, key: Optional[jax.Array]) -> jax.Array:
+        n_bits = self.spec.input_bits or 8
+        gains = ideal_gains(n_bits)
+        if key is not None and self.spec.gain_sigma > 0:
+            gains = gains * (1.0 + self.spec.gain_sigma
+                             * jax.random.normal(key, gains.shape))
+        return gains
+
+    def vmm(self, drive: jax.Array, weights: jax.Array,
+            key: Optional[jax.Array] = None) -> jax.Array:
+        n_bits = self.spec.input_bits or 8
+        scale = self._weight_scale()
+        w = weights / scale
+        use_kernel = self.use_kernel if self.use_kernel is not None \
+            else jax.default_backend() != "cpu"
+        if use_kernel:
+            from repro.kernels import ops as kops
+            y = kops.wbs_dense(drive, w.astype(jnp.float32), n_bits=n_bits,
+                               adc_bits=None, gains=self._sample_gains(key))
+        else:
+            wspec = WBSSpec(n_bits=n_bits, gain_sigma=self.spec.gain_sigma,
+                            adc_bits=None)
+            y = wbs_vmm(drive, w, wspec,
+                        key=key if self.spec.gain_sigma > 0 else None)
+        return _ste_matmul(jax.lax.stop_gradient(y * scale), drive, weights)
+
+    def quantize_readout(self, pre: jax.Array) -> jax.Array:
+        if self.spec.adc_bits is None:
+            return pre
+        from repro.analog.adc import adc_quantize
+        q = adc_quantize(pre, self.spec.adc_bits, self.spec.adc_range)
+        return _ste_identity(jax.lax.stop_gradient(q), pre)
+
+    # ------------------------------------------------------------------
+    def apply_update(self, params: PyTree, updates: PyTree,
+                     key: Optional[jax.Array] = None
+                     ) -> tuple[PyTree, PyTree]:
+        """Exact digital write, clipped to the logical dynamic range."""
+        clip = self.spec.weight_clip
+        new_params, applied = {}, {}
+        for name, p in sorted(params.items()):
+            w = p + updates[name]
+            if clip is not None:
+                w = jnp.clip(w, -clip, clip)
+            new_params[name] = w
+            applied[name] = w - p
+        return new_params, applied

@@ -71,7 +71,7 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     remat: bool = True
     scan_layers: bool = True
-    quant_mode: str = "none"          # none | wbs
+    quant_mode: str = "none"          # none | any repro.backends name (wbs…)
     kv_cache_dtype: str = "bf16"      # bf16 | int8 (stochastic-quantized)
     mixer: str = "default"            # default | miru (ablation, DESIGN §5)
 

@@ -14,7 +14,8 @@ from repro.core.replay import (ReservoirSampler, Xorshift32, ReplayBuffer,
                                dequantize)
 from repro.core.dfa import (dfa_grads, bptt_grads, miru_loss,
                             grad_alignment)
-from repro.core.continual import (ContinualConfig, run_continual,
+from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
+                                  miru_forward_device, run_continual,
                                   evaluate_tasks)
 
 __all__ = [
@@ -22,5 +23,6 @@ __all__ = [
     "miru_apply_readout", "kwta", "kwta_mask", "ReservoirSampler",
     "Xorshift32", "ReplayBuffer", "stochastic_quantize", "uniform_quantize",
     "dequantize", "dfa_grads", "bptt_grads", "miru_loss", "grad_alignment",
-    "ContinualConfig", "run_continual", "evaluate_tasks",
+    "ContinualConfig", "TrainerSpec", "ReplaySpec", "miru_forward_device",
+    "run_continual", "evaluate_tasks",
 ]

@@ -2,13 +2,21 @@
 
 Tasks arrive sequentially with no identity at test time and a shared output
 head. Training mixes fresh examples with reservoir-sampled, stochastically
-quantized replay. Three backends:
+quantized replay.
 
-  "adam"   — BPTT + Adam (the paper's software baseline)
-  "dfa"    — DFA-through-time + SGD + K-WTA sparsification (paper, software)
-  "dfa_hw" — DFA on the hardware-like model: WBS-quantized inputs, crossbar
-             read/write variability, ADC quantization, sparsified noisy
-             writes, endurance tracking (the M2RU accelerator)
+The run is described by three composable records plus a device backend:
+
+  TrainerSpec   the learning rule — "adam" (BPTT + Adam, the paper's
+                software baseline) or "dfa" (DFA-through-time + SGD +
+                K-WTA sparsification, Algorithm 1) — and its knobs.
+  ReplaySpec    reservoir capacity / mix ratio / quantizer precision.
+  DeviceBackend the substrate (repro.backends): "ideal", "wbs", "analog",
+                or any registered custom backend. The forward VMMs, the
+                readout ADC, and the weight writes all route through it.
+
+``ContinualConfig`` is the legacy flat record; it still accepts the old
+kwargs and the old trainer strings ("adam" | "dfa" | "dfa_hw") and maps
+them onto the new specs via :meth:`ContinualConfig.specs`.
 
 Reported: R[t, i] = accuracy on task i after training through task t;
 MA = mean of the final row (eq. 20).
@@ -16,27 +24,65 @@ MA = mean of the final row (eq. 20).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+import warnings
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analog.adc import adc_quantize
-from repro.analog.endurance import EnduranceTracker
-from repro.analog.wbs import WBSSpec, wbs_vmm
+from repro.analog.crossbar import CrossbarSpec
+from repro.backends import DeviceBackend, DeviceSpec, get_backend
 from repro.core import dfa as dfa_mod
-from repro.core.kwta import kwta_global
 from repro.core.miru import (MiRUConfig, init_dfa_feedback, init_miru_params,
                              miru_apply_readout)
 from repro.data.synthetic import TaskData
-from repro.optim import adam, apply_updates
+from repro.optim import adam
 from repro.utils import accuracy as acc_fn
+from repro.utils import softmax_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# Composable run specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainerSpec:
+    """The learning rule and its hyper-parameters."""
+    algo: str = "dfa"                   # adam | dfa
+    epochs_per_task: int = 1
+    batch_size: int = 32
+    lr: float = 0.2                     # SGD step (dfa)
+    hidden_lr_scale: float = 0.3        # per-layer update shift
+    adam_lr: float = 1e-3               # Adam step (adam)
+    kwta_keep_frac: Optional[float] = 0.57  # ζ gradient sparsification
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySpec:
+    """The rehearsal pipeline (§IV-A)."""
+    capacity: int = 512
+    ratio: float = 0.5                  # fraction of each batch from replay
+    bits: int = 4                       # stochastic-quantizer precision
+
+
+# Legacy trainer string → (algorithm, backend name).
+TRAINER_ALIASES: dict[str, tuple[str, str]] = {
+    "adam": ("adam", "ideal"),
+    "dfa": ("dfa", "ideal"),
+    "dfa_hw": ("dfa", "analog"),
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class ContinualConfig:
+    """Legacy flat config — deprecation shim over the composable specs.
+
+    New code should build TrainerSpec / ReplaySpec and a backend from
+    ``repro.backends`` directly; this record remains so existing call
+    sites (old kwargs, old trainer strings) keep working unchanged.
+    """
     trainer: str = "dfa"                # adam | dfa | dfa_hw
     epochs_per_task: int = 1
     batch_size: int = 32
@@ -57,34 +103,71 @@ class ContinualConfig:
     track_endurance: bool = False
     seed: int = 0
 
+    def specs(self) -> tuple[TrainerSpec, ReplaySpec, DeviceBackend]:
+        """Map the flat legacy record onto (TrainerSpec, ReplaySpec,
+        DeviceBackend). The old trainer strings resolve through the
+        backend registry: "dfa_hw" ≡ DFA on the "analog" backend."""
+        try:
+            algo, backend_name = TRAINER_ALIASES[self.trainer]
+        except KeyError:
+            raise ValueError(
+                f"unknown trainer {self.trainer!r}; expected one of "
+                f"{sorted(TRAINER_ALIASES)}") from None
+        trainer = TrainerSpec(algo=algo,
+                              epochs_per_task=self.epochs_per_task,
+                              batch_size=self.batch_size, lr=self.lr,
+                              hidden_lr_scale=self.hidden_lr_scale,
+                              adam_lr=self.adam_lr,
+                              kwta_keep_frac=self.kwta_keep_frac,
+                              seed=self.seed)
+        replay = ReplaySpec(capacity=self.replay_capacity,
+                            ratio=self.replay_ratio, bits=self.replay_bits)
+        if backend_name == "analog":
+            dspec = DeviceSpec(
+                input_bits=self.input_bits, adc_bits=self.adc_bits,
+                adc_range=self.adc_range, gain_sigma=self.gain_sigma,
+                weight_clip=self.weight_clip,
+                crossbar=CrossbarSpec(write_sigma=self.write_sigma,
+                                      read_sigma=0.0,
+                                      w_clip=self.weight_clip),
+                track_endurance=self.track_endurance)
+        else:
+            dspec = DeviceSpec(track_endurance=self.track_endurance)
+        return trainer, replay, get_backend(backend_name, spec=dspec)
+
 
 # ---------------------------------------------------------------------------
-# Hardware-like forward
+# Backend-parameterized forward
 # ---------------------------------------------------------------------------
 
-def hw_miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
-                    x_seq: jax.Array, key: jax.Array, ccfg: ContinualConfig
-                    ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """MiRU forward on the mixed-signal model.
+def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
+                        x_seq: jax.Array, key: jax.Array,
+                        backend: DeviceBackend
+                        ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """MiRU forward with the hidden-layer matrix products routed through a
+    device backend.
 
-    The hidden crossbar holds [W_h; U_h] on shared wordlines (Fig. 2): the
-    concatenated drive [xᵗ, β·hᵗ⁻¹] is WBS-streamed; the integrator output
-    is ADC-quantized, then the digital PWL tanh and λ-interpolation follow.
+    On the chip the hidden crossbar holds [W_h; U_h] on shared wordlines
+    (Fig. 2) and streams the concatenated drive [xᵗ, β·hᵗ⁻¹]; here the two
+    weight tiles are evaluated as separate backend VMMs with independent
+    PRNG keys — same fixed-point math (bit-identical to the software
+    ``miru_forward`` on the ideal backend), but stochastic non-idealities
+    like per-plane gain noise are drawn per tile rather than shared across
+    the concatenated crossbar as the old ``dfa_hw`` path did. The
+    integrator output is ADC-quantized by the backend after the bias add,
+    then the digital PWL tanh and λ-interpolation follow. The readout
+    (``miru_apply_readout``) stays digital — the paper's K-WTA voltage
+    readout is modeled there, not in the backend.
     """
     B, T, _ = x_seq.shape
-    w_cat = jnp.concatenate([params["w_h"], params["u_h"]], axis=0)
-    spec = WBSSpec(n_bits=ccfg.input_bits, gain_sigma=ccfg.gain_sigma,
-                   adc_bits=None)  # ADC applied after adding the bias
-    scale = ccfg.weight_clip
 
-    def step(carry, inp):
+    def step(carry, x_t):
         h, k = carry
-        x_t = inp
-        k, k1 = jax.random.split(k)
-        drive = jnp.concatenate([x_t, cfg.beta * h], axis=-1)
-        pre = wbs_vmm(drive, w_cat / scale, spec, key=k1) * scale \
+        k, k1, k2 = jax.random.split(k, 3)
+        pre = backend.vmm(x_t, params["w_h"], k1) \
+            + backend.vmm(cfg.beta * h, params["u_h"], k2) \
             + params["b_h"]
-        pre = adc_quantize(pre, ccfg.adc_bits, ccfg.adc_range)
+        pre = backend.quantize_readout(pre)
         h_tilde = jnp.tanh(pre)
         h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
         return (h_new, k), (h_new, h, pre)
@@ -99,78 +182,69 @@ def hw_miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
     return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
 
 
+def hw_miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
+                    x_seq: jax.Array, key: jax.Array, ccfg: ContinualConfig
+                    ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Deprecated: the old hardware forward. Equivalent to
+    ``miru_forward_device`` on the "analog" backend built from ``ccfg``."""
+    warnings.warn("hw_miru_forward is deprecated; use miru_forward_device "
+                  "with repro.backends.get_backend('analog')",
+                  DeprecationWarning, stacklevel=2)
+    _, _, backend = dataclasses.replace(ccfg, trainer="dfa_hw").specs()
+    return miru_forward_device(params, cfg, x_seq, key, backend)
+
+
 # ---------------------------------------------------------------------------
-# Train/eval steps (jit-compiled once per backend)
+# Train/eval steps (jit-compiled once per trainer × backend)
 # ---------------------------------------------------------------------------
 
-def _make_steps(cfg: MiRUConfig, ccfg: ContinualConfig):
-    """Build jitted (train_step, eval_fn) for the chosen backend."""
-    opt = adam(ccfg.adam_lr)
+def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
+                backend: DeviceBackend):
+    """Build jitted (train_step, eval_fn, opt) for the learning rule on the
+    given device backend. Both algorithms share one forward and one write
+    path — the backend supplies the substrate-specific pieces."""
+    opt = adam(trainer.adam_lr)
 
-    if ccfg.trainer == "adam":
+    def fwd(p, c, xs, k):
+        return miru_forward_device(p, c, xs, k, backend)
+
+    if trainer.algo == "adam":
         @jax.jit
         def train_step(params, opt_state, key, x, y):
-            loss, grads = dfa_mod.bptt_grads(params, cfg, x, y)
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-            return params, opt_state, loss, updates
+            k_fwd, k_wr = jax.random.split(key)
 
-        @jax.jit
-        def evaluate(params, key, x, y):
-            logits, _ = dfa_mod.miru_forward(params, cfg, x)
-            return acc_fn(logits, y)
+            def loss_fn(p):
+                logits, _ = fwd(p, cfg, x, k_fwd)
+                return softmax_cross_entropy(logits, y)
 
-    elif ccfg.trainer == "dfa":
-        @jax.jit
-        def train_step(params, opt_state, key, x, y):
-            psi = opt_state["psi"]
-            loss, grads = dfa_mod.dfa_grads(params, psi, cfg, x, y)
-            new_params, _ = dfa_mod.sgd_kwta_update(
-                params, grads, ccfg.lr, ccfg.kwta_keep_frac,
-                ccfg.hidden_lr_scale)
-            updates = jax.tree.map(lambda a, b: a - b, new_params, params)
-            return new_params, opt_state, loss, updates
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, opt_state_ = opt.update(grads, opt_state, params)
+            params, applied = backend.apply_update(params, updates, k_wr)
+            return params, opt_state_, loss, applied
 
-        @jax.jit
-        def evaluate(params, key, x, y):
-            logits, _ = dfa_mod.miru_forward(params, cfg, x)
-            return acc_fn(logits, y)
-
-    elif ccfg.trainer == "dfa_hw":
+    elif trainer.algo == "dfa":
         @jax.jit
         def train_step(params, opt_state, key, x, y):
             psi = opt_state["psi"]
             k_fwd, k_wr = jax.random.split(key)
-            fwd = lambda p, c, xs: hw_miru_forward(p, c, xs, k_fwd, ccfg)
-            loss, grads = dfa_mod.dfa_grads(params, psi, cfg, x, y,
-                                            forward_fn=fwd)
-            # Sparsify, then write with device variability and clip to the
-            # crossbar's dynamic range.
-            new_params = {}
-            updates = {}
-            kws = jax.random.split(k_wr, len(params))
-            hidden = ("w_h", "u_h", "b_h")
-            for kw, (name, p) in zip(kws, sorted(params.items())):
-                g = grads[name]
-                if ccfg.kwta_keep_frac is not None and g.ndim >= 2:
-                    g = kwta_global(g, ccfg.kwta_keep_frac)
-                s = ccfg.hidden_lr_scale if name in hidden else 1.0
-                dw = -ccfg.lr * s * g
-                noise = 1.0 + ccfg.write_sigma * jax.random.normal(
-                    kw, dw.shape)
-                dw = jnp.where(dw != 0, dw * noise, 0.0)
-                newp = jnp.clip(p + dw, -ccfg.weight_clip, ccfg.weight_clip)
-                new_params[name] = newp
-                updates[name] = newp - p
-            return new_params, opt_state, loss, updates
-
-        @jax.jit
-        def evaluate(params, key, x, y):
-            logits, _ = hw_miru_forward(params, cfg, x, key, ccfg)
-            return acc_fn(logits, y)
+            loss, grads = dfa_mod.dfa_grads(
+                params, psi, cfg, x, y,
+                forward_fn=lambda p, c, xs: fwd(p, c, xs, k_fwd))
+            # ζ-sparsify, scale per layer, hand the write to the device.
+            updates = dfa_mod.scaled_sparse_updates(
+                grads, trainer.lr, trainer.kwta_keep_frac,
+                trainer.hidden_lr_scale)
+            params, applied = backend.apply_update(params, updates, k_wr)
+            return params, opt_state, loss, applied
 
     else:
-        raise ValueError(f"unknown trainer {ccfg.trainer!r}")
+        raise ValueError(f"unknown trainer algo {trainer.algo!r}; "
+                         f"expected 'adam' or 'dfa'")
+
+    @jax.jit
+    def evaluate(params, key, x, y):
+        logits, _ = fwd(params, cfg, x, key)
+        return acc_fn(logits, y)
 
     return train_step, evaluate, opt
 
@@ -189,28 +263,63 @@ def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
 # Main loop
 # ---------------------------------------------------------------------------
 
-def run_continual(cfg: MiRUConfig, ccfg: ContinualConfig,
-                  tasks: list[TaskData]) -> dict[str, Any]:
+def _resolve_specs(spec: Union[ContinualConfig, TrainerSpec],
+                   replay: Optional[ReplaySpec],
+                   device: Union[str, DeviceBackend, None]
+                   ) -> tuple[TrainerSpec, ReplaySpec, DeviceBackend]:
+    if isinstance(spec, ContinualConfig):
+        if replay is not None or device is not None:
+            raise ValueError("pass either a legacy ContinualConfig or "
+                             "TrainerSpec + replay/device, not both")
+        warnings.warn(
+            "passing ContinualConfig to run_continual is deprecated; use "
+            "TrainerSpec/ReplaySpec + a repro.backends device backend",
+            DeprecationWarning, stacklevel=3)
+        return spec.specs()
+    if not isinstance(spec, TrainerSpec):
+        raise TypeError(f"expected ContinualConfig or TrainerSpec, got "
+                        f"{type(spec).__name__}")
+    backend = get_backend(device if device is not None else "ideal")
+    if backend.tracker is not None and backend.tracker.updates_applied:
+        warnings.warn(
+            "device backend carries endurance statistics from a previous "
+            "run; write counts will accumulate across runs — pass a fresh "
+            "backend for per-run statistics", stacklevel=3)
+    return (spec, replay if replay is not None else ReplaySpec(), backend)
+
+
+def run_continual(cfg: MiRUConfig,
+                  spec: Union[ContinualConfig, TrainerSpec],
+                  tasks: list[TaskData],
+                  replay: Optional[ReplaySpec] = None,
+                  device: Union[str, DeviceBackend, None] = None
+                  ) -> dict[str, Any]:
     """Train through the task sequence; return the R matrix, MA, and
-    (optionally) endurance statistics."""
+    (optionally) endurance statistics.
+
+    ``spec`` is a :class:`TrainerSpec` (with ``replay`` and ``device`` —
+    a registered backend name or instance — supplied separately), or a
+    legacy :class:`ContinualConfig` that maps onto all three.
+    """
     from repro.core.replay import ReplayBuffer
 
-    key = jax.random.PRNGKey(ccfg.seed)
+    trainer, rspec, backend = _resolve_specs(spec, replay, device)
+
+    key = jax.random.PRNGKey(trainer.seed)
     key, k_param, k_psi = jax.random.split(key, 3)
     params = init_miru_params(k_param, cfg)
     psi = init_dfa_feedback(k_psi, cfg)
 
-    train_step, evaluate, opt = _make_steps(cfg, ccfg)
-    if ccfg.trainer == "adam":
+    train_step, evaluate, opt = _make_steps(cfg, trainer, backend)
+    if trainer.algo == "adam":
         opt_state = opt.init(params)
     else:
         opt_state = {"psi": psi}
 
     T, F = tasks[0].x_train.shape[1:]
-    buffer = ReplayBuffer(ccfg.replay_capacity, (T, F),
-                          n_bits=ccfg.replay_bits, seed=ccfg.seed)
-    tracker = EnduranceTracker() if ccfg.track_endurance else None
-    host_rng = np.random.default_rng(ccfg.seed + 1)
+    buffer = ReplayBuffer(rspec.capacity, (T, F),
+                          n_bits=rspec.bits, seed=trainer.seed)
+    host_rng = np.random.default_rng(trainer.seed + 1)
 
     n_tasks = len(tasks)
     R = np.zeros((n_tasks, n_tasks))
@@ -218,35 +327,35 @@ def run_continual(cfg: MiRUConfig, ccfg: ContinualConfig,
 
     for t, task in enumerate(tasks):
         n = task.x_train.shape[0]
-        bs = ccfg.batch_size
-        for _ in range(ccfg.epochs_per_task):
+        bs = trainer.batch_size
+        for _ in range(trainer.epochs_per_task):
             order = host_rng.permutation(n)
             for s in range(0, n - bs + 1, bs):
                 idx = order[s:s + bs]
                 xb = task.x_train[idx]
                 yb = task.y_train[idx]
-                # Mix in replay (after the first task has populated it).
-                if t > 0 and buffer.size > 0 and ccfg.replay_ratio > 0:
-                    n_rep = int(round(bs * ccfg.replay_ratio))
+                # Mix in replay (after the first task has populated it);
+                # replay occupies the tail n_rep rows of the batch.
+                n_rep = 0
+                if t > 0 and buffer.size > 0 and rspec.ratio > 0:
+                    n_rep = int(round(bs * rspec.ratio))
                     if n_rep > 0:
                         xr, yr = buffer.sample(host_rng, n_rep)
                         xb = np.concatenate([xb[:bs - n_rep],
                                              xr.reshape(-1, T, F)])
                         yb = np.concatenate([yb[:bs - n_rep], yr])
                 key, k_step = jax.random.split(key)
-                params, opt_state, loss, updates = train_step(
+                params, opt_state, loss, applied = train_step(
                     params, opt_state, k_step, jnp.asarray(xb),
                     jnp.asarray(yb))
                 losses.append(float(loss))
-                if tracker is not None:
-                    tracker.record_update(
-                        {k: np.asarray(v != 0) for k, v in updates.items()
-                         if np.ndim(v) >= 2})
-                # Reservoir-sample the *fresh* examples into the buffer.
-                fresh = xb[:max(1, bs - int(round(bs * ccfg.replay_ratio)))]
-                fresh_y = yb[:fresh.shape[0]]
-                buffer.add_batch(fresh.reshape(fresh.shape[0], -1)
-                                 .reshape(fresh.shape[0], T, F), fresh_y)
+                backend.record_endurance(applied)
+                # Reservoir-sample only the *fresh* rows into the buffer —
+                # all of them (on task 0 no replay was mixed, so the whole
+                # batch is fresh; never re-offer rehearsed rows).
+                n_fresh = bs - n_rep
+                if n_fresh > 0:
+                    buffer.add_batch(xb[:n_fresh], yb[:n_fresh])
         key, k_eval = jax.random.split(key)
         R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t)
 
@@ -258,6 +367,6 @@ def run_continual(cfg: MiRUConfig, ccfg: ContinualConfig,
         "losses": losses,
         "params": params,
     }
-    if tracker is not None:
-        out["endurance"] = tracker
+    if backend.tracker is not None:
+        out["endurance"] = backend.tracker
     return out

@@ -110,30 +110,41 @@ def grad_alignment(g_dfa: dict[str, jax.Array],
     return jnp.dot(a, b) / denom
 
 
+def scaled_sparse_updates(grads: dict[str, jax.Array], lr: float,
+                          keep_frac: Optional[float] = None,
+                          hidden_lr_scale: float = 1.0,
+                          ) -> dict[str, jax.Array]:
+    """Lines 19-21: dW = −lr · ζ(∇W), with the per-layer shift.
+
+    ``hidden_lr_scale`` applies a smaller step to the DFA-driven hidden
+    weights (w_h/u_h/b_h) than to the exactly-trained readout — in hardware
+    a per-layer shift of the update magnitude, needed because the projected
+    error is only direction-aligned, not magnitude-calibrated. This is the
+    single definition of the rule — the continual trainer and
+    ``sgd_kwta_update`` both call it.
+    """
+    from repro.core.kwta import kwta_global
+    hidden = ("w_h", "u_h", "b_h")
+    updates = {}
+    for name, g in grads.items():
+        if keep_frac is not None and g.ndim >= 2:
+            g = kwta_global(g, keep_frac)
+        s = hidden_lr_scale if name in hidden else 1.0
+        updates[name] = (-lr * s) * g
+    return updates
+
+
 def sgd_kwta_update(params: dict[str, jax.Array],
                     grads: dict[str, jax.Array], lr: float,
                     keep_frac: Optional[float] = None,
                     hidden_lr_scale: float = 1.0,
                     ) -> tuple[dict[str, jax.Array], dict[str, jax.Array]]:
-    """Lines 19-21: W ← W − lr · ζ(∇W).
-
-    ``hidden_lr_scale`` applies a smaller step to the DFA-driven hidden
-    weights (w_h/u_h/b_h) than to the exactly-trained readout — in hardware
-    a per-layer shift of the update magnitude, needed because the projected
-    error is only direction-aligned, not magnitude-calibrated.
+    """W ← W + dW for the ζ-sparsified DFA step.
 
     Returns (new_params, write_masks) — the masks record which synapses were
     written, feeding the endurance tracker (§VI-B).
     """
-    from repro.core.kwta import kwta_global
-    hidden = ("w_h", "u_h", "b_h")
-    new_params = {}
-    masks = {}
-    for name, p in params.items():
-        g = grads[name]
-        if keep_frac is not None and g.ndim >= 2:
-            g = kwta_global(g, keep_frac)
-        masks[name] = (g != 0)
-        s = hidden_lr_scale if name in hidden else 1.0
-        new_params[name] = p - lr * s * g
+    updates = scaled_sparse_updates(grads, lr, keep_frac, hidden_lr_scale)
+    new_params = {name: p + updates[name] for name, p in params.items()}
+    masks = {name: (u != 0) for name, u in updates.items()}
     return new_params, masks

@@ -35,10 +35,10 @@ def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
 def quantize_inputs(x: jax.Array, n_bits: int
                     ) -> tuple[jax.Array, jax.Array]:
     """Sign-magnitude digitization of x ∈ [-1, 1] (the host-side buffer
-    write that precedes WBS streaming)."""
-    top = 2 ** n_bits - 1
-    mag = jnp.clip(jnp.round(jnp.abs(x) * top), 0, top)
-    return jnp.sign(x).astype(jnp.int8), mag.astype(jnp.uint8)
+    write that precedes WBS streaming). Alias of the canonical
+    ``repro.analog.wbs.quantize_signed``."""
+    from repro.analog.wbs import quantize_signed
+    return quantize_signed(x, n_bits)
 
 
 def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
@@ -72,6 +72,17 @@ def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
     sign, code = quantize_inputs(x2, n_bits)
     y = wbs_matmul(sign, code, w, gains, adc_bits, adc_range)
     return y.reshape(*lead, w.shape[-1])
+
+
+def device_vmm(x: jax.Array, w: jax.Array, backend="wbs",
+               key: Optional[jax.Array] = None, **backend_kwargs
+               ) -> jax.Array:
+    """Registry-dispatched VMM: route x @ w through a registered device
+    backend ("ideal" | "wbs" | "analog" | any custom registration).
+    ``backend`` is a name or a DeviceBackend instance; extra kwargs
+    (``spec``, ``spec_overrides``, …) pass through to ``get_backend``."""
+    from repro.backends import get_backend
+    return get_backend(backend, **backend_kwargs).vmm(x, w, key)
 
 
 # ---------------------------------------------------------------------------

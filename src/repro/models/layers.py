@@ -19,18 +19,29 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
 
 def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
           quant_mode: str = "none") -> jax.Array:
-    """Linear layer. quant_mode="wbs" routes through the paper's
-    weighted-bit-streaming crossbar kernel (int8 sign-magnitude inputs,
-    bit-plane matmul, fused ADC) — the M2RU crossbar as a deployable
-    quantized execution mode for any projection in the zoo."""
-    if quant_mode == "wbs":
-        from repro.kernels import ops as kops
+    """Linear layer. Any quant_mode other than "none" resolves through the
+    device-backend registry (repro.backends): "wbs" streams int8
+    sign-magnitude inputs through the bit-plane crossbar matmul — the M2RU
+    crossbar as a deployable quantized execution mode for any projection
+    in the zoo — and every registered substrate is likewise a valid mode."""
+    if quant_mode != "none":
+        from repro.backends import get_backend
+        # Inference-mode overrides on the substrate's own spec: 8-bit
+        # quantized drive, no readout ADC, unit weight scale (activation
+        # normalization handles the range). Everything else — gain noise,
+        # crossbar physics — stays the backend's (stochastic non-idealities
+        # are off here because no PRNG key is threaded: reads are the
+        # deterministic expectation).
+        backend = get_backend(quant_mode,
+                              spec_overrides=dict(input_bits=8,
+                                                  adc_bits=None,
+                                                  weight_clip=None))
         # Normalize activations into the crossbar's [-1, 1] drive range,
-        # run WBS, undo the scale. absmax is a cheap fused reduction.
+        # run the backend VMM, undo the scale. absmax is a cheap fused
+        # reduction.
         s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
-        y = kops.wbs_dense((x / s).astype(jnp.float32),
-                           w.astype(jnp.float32), n_bits=8,
-                           adc_bits=None) * s
+        y = backend.vmm((x / s).astype(jnp.float32),
+                        w.astype(jnp.float32)) * s
         y = y.astype(x.dtype)
     else:
         y = x @ w.astype(x.dtype)

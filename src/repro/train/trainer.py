@@ -47,6 +47,12 @@ class Trainer:
         self.cfg = cfg
         self.tcfg = tcfg
         self.batcher = batcher
+        # Resolve the quantized execution mode through the device-backend
+        # registry up front: an unknown name fails here, not mid-trace.
+        # (models/layers.dense builds the actual inference-specced backend.)
+        if cfg.quant_mode != "none":
+            from repro.backends import get_backend
+            get_backend(cfg.quant_mode)
         key = jax.random.PRNGKey(tcfg.seed)
         self.params = params if params is not None \
             else lm.init_params(key, cfg)

@@ -1,0 +1,27 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+hypothesis is a test-only dependency (pip install .[test]); where it is
+absent the suite must degrade gracefully — the fixed-shape tests keep
+running and only the @given sweeps are skipped. Import ``given``,
+``settings``, ``st`` from here instead of from hypothesis directly.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    settings = given
+
+    class _AnyStrategy:
+        """Stands in for hypothesis.strategies: every strategy call returns
+        None — fine, since the test is skip-marked before setup."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

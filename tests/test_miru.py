@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.miru import (MiRUConfig, gru_param_count, init_dfa_feedback,
                              init_miru_params, miru_cell, miru_forward,

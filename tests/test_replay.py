@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.replay import (ReplayBuffer, ReservoirSampler, Xorshift32,
                                dequantize, lfsr_stochastic_quantize,
