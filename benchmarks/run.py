@@ -15,7 +15,7 @@ def main() -> None:
                             table1_throughput)
     t0 = time.time()
     print("name,us_per_call,derived")
-    table1_throughput.run()
+    table1_throughput.run(fast=True)
     fig5c_latency.run()
     fig5d_power.run()
     fig5a_quant_error.run()

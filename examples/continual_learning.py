@@ -2,13 +2,14 @@
 learning on a pluggable device substrate — several hundred training steps
 through a sequence of tasks with reservoir replay, DFA-through-time,
 K-WTA-sparsified noisy crossbar writes, WBS-quantized inference, and
-endurance tracking with a lifespan projection.
+device telemetry: power, GOPS/W and the lifetime projection are metered
+from the run's own backend activity (repro.telemetry).
 
 The algorithm (--algo adam|dfa) and the substrate (--backend, any name in
 the repro.backends registry) compose freely; the legacy combined trainer
 strings (adam | dfa | dfa_hw) keep working via --trainer.
 
-    PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog
+    PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog_state
     PYTHONPATH=src python examples/continual_learning.py --trainer dfa_hw   # legacy
 """
 import argparse
@@ -19,6 +20,7 @@ from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
                                   run_continual)
 from repro.core.miru import MiRUConfig
 from repro.data.synthetic import make_permuted_tasks
+from repro.telemetry import format_report, telemetry_report
 
 
 def main():
@@ -31,10 +33,12 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=list(available_backends()),
                     help="device substrate from the backend registry "
-                         "(default: analog)")
+                         "(default: analog_state)")
     ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--hidden", type=int, default=100)
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="skip activity metering + the energy report")
     args = ap.parse_args()
 
     tasks = make_permuted_tasks(seed=0, n_tasks=args.tasks, n_train=600,
@@ -53,13 +57,15 @@ def main():
         trainer, replay, backend = ccfg.specs()
     else:
         algo = args.algo or "dfa"
-        name = args.backend or "analog"
+        name = args.backend or "analog_state"
         trainer = TrainerSpec(algo=algo, epochs_per_task=args.epochs,
                               batch_size=32)
         replay = ReplaySpec(capacity=512)
         backend = get_backend(
             name, spec_overrides=dict(track_endurance=algo != "adam"))
 
+    if not args.no_telemetry:
+        backend.telemetry.enable()
     n_steps = args.tasks * args.epochs * (600 // 32)
     print(f"algo={trainer.algo}  backend={backend.name}  "
           f"tasks={args.tasks}  ~{n_steps} training steps")
@@ -72,10 +78,21 @@ def main():
     print(f"final per-task accuracies:   "
           f"{[round(float(a), 3) for a in res['R'][-1]]}")
 
-    if "endurance" in res:
+    m = M2RUCostModel(n_h=args.hidden)
+    if backend.telemetry.enabled:
+        # Metered numbers from the run that just happened — power, GOPS/W
+        # and lifetime derived from the backend's own activity counters.
+        kind = "cmos" if backend.name == "cmos" else "analog"
+        # Lifetime only makes sense for memristive substrates — SRAM
+        # weight registers in the CMOS baseline have no endurance limit.
+        tracker = res.get("endurance") if kind == "analog" else None
+        rep = telemetry_report(backend.telemetry, model=m, kind=kind,
+                               tracker=tracker)
+        print("\ndevice telemetry (metered from this run):")
+        print(format_report(rep))
+    elif "endurance" in res:
         tracker = res["endurance"]
         rate = tracker.mean_writes() / max(tracker.updates_applied, 1)
-        m = M2RUCostModel(n_h=args.hidden)
         print(f"\nmemristor write rate: {rate:.3f} writes/device/update")
         gain = 1.0 / max(rate, 1e-9)
         print(f"lifespan gain vs dense writes: {gain:.2f}× "

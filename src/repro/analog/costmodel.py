@@ -35,6 +35,17 @@ class HardwareConstants:
     p_digital_per_unit_w: float = 9.5e-6  # interp/shift-reg per hidden unit
     p_train_extra_w: float = 8.35e-3 # projection + write-control (training)
     endurance_cycles: float = 1e9
+    # Expected endurance-consuming SET/RESET events per *selected* synapse
+    # per update. Ziksa programs in discrete conductance quanta, and a
+    # typical in-situ update moves a device by far less than one quantum,
+    # so most selected synapses don't fire a pulse on a given update.
+    # Calibrated from the paper's dense-run lifetime: 6.9 years at 10^9
+    # endurance and a 1 ms cadence with every device selected implies
+    # 10^9 · 1 ms / 6.9 yr ≈ 4.59e-3 pulses per device-update; K-WTA's
+    # ζ ≈ 0.57 selection then lands the 12.2-year figure. The telemetry
+    # lifetime projection (repro.telemetry.lifetime) multiplies metered
+    # write fractions by this rate.
+    ziksa_pulse_rate: float = 4.59e-3
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,6 +29,8 @@ class CrossbarSpec:
     read_sigma: float = 0.10     # cycle-to-cycle read variability
     w_clip: float = 1.0          # |logical weight| mapped to full window
     write_levels: Optional[int] = None  # finite programming resolution
+    prog_sigma: float = 0.0      # initial-programming variability (pairs)
+    drift_rate: float = 0.0      # per-update conductance relaxation → g_off
 
     @property
     def g_on(self) -> float:
@@ -95,6 +97,82 @@ def update(key: jax.Array, state: CrossbarState, dw: jax.Array
     g = jnp.where(dw != 0, state.g + dg * noise, state.g)
     g = jnp.clip(g, spec.g_off, spec.g_on)
     return CrossbarState(g=g, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Differential G⁺/G⁻ pairs — the conductance-domain state carried between
+# steps by the ``analog_state`` backend. A logical weight is the scaled
+# conductance difference of two tunable devices:
+#
+#     w = (G⁺ − G⁻) / (G_on − G_off) · w_clip
+#
+# Positive weights live on G⁺ (G⁻ parked at G_off), negative on G⁻. Pairs
+# are plain ``{"g_pos", "g_neg"}`` dicts so they thread through jit as
+# ordinary pytrees.
+# ---------------------------------------------------------------------------
+
+Pair = dict[str, jax.Array]
+
+
+def pair_weights(pair: Pair, spec: CrossbarSpec) -> jax.Array:
+    """Ideal (noiseless) read-back of logical weights from a pair."""
+    g_range = spec.g_on - spec.g_off
+    return (pair["g_pos"] - pair["g_neg"]) * (spec.w_clip / g_range)
+
+
+def program_pair(key: Optional[jax.Array], w: jax.Array,
+                 spec: CrossbarSpec) -> Pair:
+    """Initial programming of logical weights onto G⁺/G⁻ pairs, with
+    ``prog_sigma`` device-to-device programming variability."""
+    wn = jnp.clip(w / spec.w_clip, -1.0, 1.0)
+    g_range = spec.g_on - spec.g_off
+    g_pos = spec.g_off + jnp.maximum(wn, 0.0) * g_range
+    g_neg = spec.g_off + jnp.maximum(-wn, 0.0) * g_range
+    if key is not None and spec.prog_sigma > 0:
+        kp, kn = jax.random.split(key)
+        g_pos = g_pos * (1.0 + spec.prog_sigma
+                         * jax.random.normal(kp, g_pos.shape))
+        g_neg = g_neg * (1.0 + spec.prog_sigma
+                         * jax.random.normal(kn, g_neg.shape))
+    return {"g_pos": jnp.clip(g_pos, spec.g_off, spec.g_on),
+            "g_neg": jnp.clip(g_neg, spec.g_off, spec.g_on)}
+
+
+def update_pair(key: jax.Array, pair: Pair, dw: jax.Array,
+                spec: CrossbarSpec) -> Pair:
+    """In-situ training write in the conductance domain.
+
+    A positive logical delta potentiates G⁺, a negative one potentiates
+    G⁻ (raising G⁻ lowers the weight); only nonzero deltas cost pulses.
+    Each landed delta carries multiplicative write noise, optionally snaps
+    to the finite programming grid, and saturates at the physical window —
+    so repeated one-sided updates *lose* magnitude at the rails, a
+    conductance-domain effect the logical-weight model cannot express.
+    """
+    g_range = spec.g_on - spec.g_off
+    dg = jnp.abs(dw) / spec.w_clip * g_range
+    noise = 1.0 + spec.write_sigma * jax.random.normal(key, dw.shape)
+    dg = dg * noise
+    g_pos = jnp.where(dw > 0, pair["g_pos"] + dg, pair["g_pos"])
+    g_neg = jnp.where(dw < 0, pair["g_neg"] + dg, pair["g_neg"])
+    if spec.write_levels is not None:
+        lo, hi = spec.g_off, spec.g_on
+        step = (hi - lo) / (spec.write_levels - 1)
+        snap = lambda g: jnp.round((g - lo) / step) * step + lo
+        g_pos = jnp.where(dw > 0, snap(g_pos), g_pos)
+        g_neg = jnp.where(dw < 0, snap(g_neg), g_neg)
+    return {"g_pos": jnp.clip(g_pos, spec.g_off, spec.g_on),
+            "g_neg": jnp.clip(g_neg, spec.g_off, spec.g_on)}
+
+
+def drift_pair(pair: Pair, spec: CrossbarSpec, n_ticks: int = 1) -> Pair:
+    """Conductance relaxation toward G_off between updates: each tick
+    shrinks the programmed excess by ``drift_rate`` (retention loss)."""
+    if spec.drift_rate <= 0:
+        return pair
+    keep = (1.0 - spec.drift_rate) ** n_ticks
+    return {k: spec.g_off + (g - spec.g_off) * keep
+            for k, g in pair.items()}
 
 
 def vmm(key: Optional[jax.Array], x: jax.Array, state: CrossbarState

@@ -36,6 +36,31 @@ class EnduranceTracker:
         self.updates_applied += 1
 
     # ------------------------------------------------------------------
+    # Serialization (checkpoints) — lifetime projections survive restarts
+    # ------------------------------------------------------------------
+    TYPE_TAG = "endurance_tracker"
+
+    def state_dict(self) -> dict:
+        """Array-leaved tree for ``train.checkpoint.CheckpointManager``
+        (which persists any pytree of arrays)."""
+        return {
+            "_tree_type_": np.asarray(self.TYPE_TAG),
+            "endurance": np.asarray(self.endurance),
+            "updates_applied": np.asarray(self.updates_applied,
+                                          dtype=np.int64),
+            "counts": {name: c.copy()
+                       for name, c in self._counts.items()},
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: dict) -> "EnduranceTracker":
+        tracker = cls(endurance=float(np.asarray(state["endurance"])))
+        tracker.updates_applied = int(np.asarray(state["updates_applied"]))
+        for name, c in state.get("counts", {}).items():
+            tracker._counts[name] = np.asarray(c, dtype=np.int64).copy()
+        return tracker
+
+    # ------------------------------------------------------------------
     # Analysis
     # ------------------------------------------------------------------
     def all_counts(self) -> np.ndarray:

@@ -8,22 +8,31 @@
             device noise (isolates fixed-point error).
 - analog:   the mixed-signal M2RU crossbar — WBS + gain/read variability,
             noisy finite-level writes, endurance accounting.
+- analog_state: conductance-domain crossbar — carries programmed G⁺/G⁻
+            pairs between steps (programming noise, drift, saturation)
+            instead of re-deriving conductances from logical weights.
+- cmos:     digital 65 nm baseline — exact fixed-point datapath whose
+            metered energy anchors the paper's 29× comparison.
 
 Every hardware-aware entry point (the continual trainer, model
-``quant_mode``, kernels dispatch, benchmarks) resolves substrates through
-this registry; adding device physics means registering a backend, not
-adding an ``elif``. See docs/backends.md.
+``quant_mode``, kernels dispatch, the serve engine, benchmarks) resolves
+substrates through this registry; adding device physics means registering
+a backend, not adding an ``elif``. See docs/backends.md.
 """
 from repro.backends.base import DeviceBackend, DeviceSpec
 from repro.backends.registry import (available_backends, get_backend,
-                                     register_backend, unregister_backend)
+                                     inference_backend, register_backend,
+                                     unregister_backend)
 from repro.backends.ideal import IdealBackend
 from repro.backends.wbs import WBSBackend
 from repro.backends.analog import AnalogBackend
+from repro.backends.analog_state import AnalogStateBackend
+from repro.backends.cmos import CMOSBackend
 
 __all__ = [
     "DeviceBackend", "DeviceSpec",
-    "available_backends", "get_backend", "register_backend",
-    "unregister_backend",
-    "IdealBackend", "WBSBackend", "AnalogBackend",
+    "available_backends", "get_backend", "inference_backend",
+    "register_backend", "unregister_backend",
+    "IdealBackend", "WBSBackend", "AnalogBackend", "AnalogStateBackend",
+    "CMOSBackend",
 ]

@@ -64,15 +64,15 @@ class AnalogBackend(WBSBackend):
     def vmm(self, drive: jax.Array, weights: jax.Array,
             key: Optional[jax.Array] = None) -> jax.Array:
         cb = self.crossbar
-        k_read = k_gain = key
         if key is not None and cb.read_sigma > 0:
-            k_read, k_gain = jax.random.split(key)
             # Cycle-to-cycle conductance variation: each access sees a
             # perturbed effective weight (crossbar.vmm's read model, in
-            # logical-weight units).
-            weights = weights * (1.0 + cb.read_sigma
-                                 * jax.random.normal(k_read, weights.shape))
-        return super().vmm(drive, weights, k_gain)
+            # logical-weight units). The WBS layer draws it in-kernel on
+            # the Pallas path, or on the weight matrix on the jnp path.
+            k_read, k_gain = jax.random.split(key)
+            return super().vmm(drive, weights, k_gain,
+                               read_sigma=cb.read_sigma, read_key=k_read)
+        return super().vmm(drive, weights, key)
 
     # ------------------------------------------------------------------
     def apply_update(self, params: PyTree, updates: PyTree,

@@ -1,0 +1,144 @@
+"""Conductance-domain crossbar substrate — stateful G⁺/G⁻ pairs.
+
+The ``analog`` backend models device noise as perturbations around the
+*logical* weight matrix: every forward re-derives effective conductances
+from the trainer's weights. This backend instead carries the programmed
+conductance pairs themselves (``analog/crossbar.program_pair``) through
+the training loop as device state:
+
+  init_device_state  programs every ≥2-D weight onto G⁺/G⁻ pairs with
+                     ``crossbar.prog_sigma`` programming variability.
+  device_vmm         reads *through the pairs* (per-access read noise on
+                     each device, then WBS bit-streaming + plane gains);
+                     the logical weights are only the STE gradient path.
+  device_apply_update
+                     drifts the pairs one retention tick
+                     (``crossbar.drift_rate``), lands the noisy write
+                     pulses in the conductance domain (one-sided G⁺/G⁻
+                     potentiation, window saturation, optional Ziksa
+                     level grid), and returns the *read-back* logical
+                     weights so the trainer's view tracks the devices.
+
+With all device noise and drift at zero the conductance map is exactly
+affine, so the backend short-circuits to the parent's logical-weight
+arithmetic — this is the same computation without the float round-trip,
+and it makes ``analog_state`` bit-identical to ``analog`` in the ideal
+limit (asserted in tests/test_telemetry.py). Biases (1-D params) live in
+digital registers and take the parent's write path.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog.crossbar import (CrossbarSpec, drift_pair, pair_weights,
+                                   program_pair, update_pair)
+from repro.backends.analog import AnalogBackend
+from repro.backends.base import DeviceSpec, PyTree
+from repro.backends.registry import register_backend
+from repro.backends.wbs import WBSBackend, _ste_matmul
+
+
+@register_backend("analog_state")
+class AnalogStateBackend(AnalogBackend):
+    name = "analog_state"
+
+    @classmethod
+    def default_spec(cls) -> DeviceSpec:
+        return DeviceSpec(input_bits=8, adc_bits=8, adc_range=4.0,
+                          gain_sigma=0.02, weight_clip=1.5,
+                          crossbar=CrossbarSpec(write_sigma=0.10,
+                                                read_sigma=0.0,
+                                                w_clip=1.5,
+                                                prog_sigma=0.10))
+
+    # ------------------------------------------------------------------
+    def _ideal_device(self) -> bool:
+        """Zero noise/drift and no level grid: the conductance map is
+        exactly affine, so logical-weight arithmetic is the same
+        computation (bit-identical to the ``analog`` backend)."""
+        cb = self.crossbar
+        return (cb.write_sigma == 0.0 and cb.read_sigma == 0.0
+                and cb.prog_sigma == 0.0 and cb.drift_rate == 0.0
+                and cb.write_levels is None)
+
+    @staticmethod
+    def _is_crossbar_param(name: str, p: jax.Array) -> bool:
+        return jnp.ndim(p) >= 2
+
+    # ------------------------------------------------------------------
+    def init_device_state(self, params: PyTree,
+                          key: Optional[jax.Array] = None) -> Any:
+        cb = self.crossbar
+        names = sorted(n for n, p in params.items()
+                       if self._is_crossbar_param(n, p))
+        keys = jax.random.split(key, len(names)) if key is not None \
+            else [None] * len(names)
+        return {name: program_pair(k, params[name], cb)
+                for k, name in zip(keys, names)}
+
+    # ------------------------------------------------------------------
+    def _vmm_impl(self, drive, weights, key, state, tag):
+        if state is None or tag not in state or self._ideal_device():
+            # Ideal limit or stateless call: the parent's logical path is
+            # the exact same computation.
+            return super()._vmm_impl(drive, weights, key, state, tag)
+        cb = self.crossbar
+        pair = state[tag]
+        k_gain = key
+        if key is not None and cb.read_sigma > 0:
+            kp, kn, k_gain = jax.random.split(key, 3)
+            pair = {"g_pos": pair["g_pos"]
+                    * (1.0 + cb.read_sigma
+                       * jax.random.normal(kp, pair["g_pos"].shape)),
+                    "g_neg": pair["g_neg"]
+                    * (1.0 + cb.read_sigma
+                       * jax.random.normal(kn, pair["g_neg"].shape))}
+        w_eff = pair_weights(pair, cb)
+        # WBS bit-streaming + plane gains over the device read-back; the
+        # outer STE routes gradients to the trainer's logical weights.
+        y = WBSBackend.vmm(self, drive, w_eff, k_gain)
+        return _ste_matmul(jax.lax.stop_gradient(y), drive, weights)
+
+    # ------------------------------------------------------------------
+    def _apply_update_impl(self, params, updates, key, state):
+        if state is None or self._ideal_device():
+            new_params, applied = self.apply_update(params, updates, key)
+            if state is not None:
+                # Keep the pairs an exact mirror of the logical weights.
+                state = {n: program_pair(None, new_params[n], self.crossbar)
+                         for n in state}
+            return new_params, applied, state
+        cb = self.crossbar
+        if key is None:
+            raise ValueError("analog_state apply_update needs a PRNG key "
+                             "(write variability is stochastic)")
+        keys = jax.random.split(key, len(params))
+        new_params, applied, new_state = {}, {}, dict(state)
+        for kw, (name, p) in zip(keys, sorted(params.items())):
+            dw = updates[name]
+            if name in state:
+                pair = drift_pair(state[name], cb)       # retention tick
+                pair = update_pair(kw, pair, dw, cb)     # noisy write
+                w_read = pair_weights(pair, cb)          # device read-back
+                # Unwritten devices: carry the logical value through
+                # unchanged when there is no drift (recomputing the
+                # read-back invites FMA re-rounding that would smear
+                # phantom sub-ulp deltas over the whole array); with
+                # drift the relaxation is visible in the read-back but is
+                # not a write — ``applied`` stays exactly zero there.
+                written = dw != 0
+                w_new = w_read if cb.drift_rate > 0 \
+                    else jnp.where(written, w_read, p)
+                new_state[name] = pair
+                new_params[name] = w_new
+                applied[name] = jnp.where(written, w_new - p, 0.0)
+            else:
+                # Digital registers (biases): the parent's logical write.
+                sub_p, sub_a = AnalogBackend.apply_update(
+                    self, {name: p}, {name: dw}, kw)
+                new_params[name] = sub_p[name]
+                applied[name] = sub_a[name]
+        return new_params, applied, new_state

@@ -20,18 +20,34 @@ contributes to training and inference:
 Training algorithms (BPTT+Adam, DFA+SGD, …) never branch on a device name;
 they call these hooks.  New substrates register themselves with
 :func:`repro.backends.register_backend` — see ``docs/backends.md``.
+
+Two orthogonal layers sit on top of the raw hooks (both optional for
+substrate authors — the base class provides them):
+
+  telemetry     every backend carries a ``repro.telemetry.Telemetry``
+                accumulator (disabled by default). The ``device_*``
+                wrappers meter ADC conversions, bit pulses, crossbar
+                reads and MACs; ``record_endurance`` meters write pulses
+                from the concrete applied updates.
+  device state  substrates whose physical state is *not* the logical
+                weight matrix (the conductance-domain ``analog_state``
+                backend) thread an opaque pytree through the train loop:
+                ``init_device_state`` creates it, ``device_vmm`` reads
+                through it, ``device_apply_update`` advances it.
+                Stateless substrates return/ignore ``None``.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.analog.crossbar import CrossbarSpec
 from repro.analog.endurance import EnduranceTracker
+from repro.telemetry.meters import Telemetry
 
 PyTree = dict[str, jax.Array]
 
@@ -73,6 +89,7 @@ class DeviceBackend(abc.ABC):
         self.spec = spec if spec is not None else self.default_spec()
         self.tracker: Optional[EnduranceTracker] = \
             EnduranceTracker() if self.spec.track_endurance else None
+        self.telemetry = Telemetry(enabled=False)
 
     @classmethod
     def default_spec(cls) -> DeviceSpec:
@@ -106,11 +123,64 @@ class DeviceBackend(abc.ABC):
         (post noise/levels/clip) for endurance accounting."""
 
     def record_endurance(self, applied: PyTree) -> None:
-        """Host-side write counting; no-op unless the spec asked for it."""
+        """Host-side write counting (endurance tracker + telemetry write
+        pulses); no-op unless either was asked for."""
+        if self.tracker is None and not self.telemetry.enabled:
+            return
+        masks = {k: np.asarray(v != 0) for k, v in applied.items()
+                 if np.ndim(v) >= 2}
+        self.telemetry.meter_writes(masks)
         if self.tracker is not None:
-            self.tracker.record_update(
-                {k: np.asarray(v != 0) for k, v in applied.items()
-                 if np.ndim(v) >= 2})
+            self.tracker.record_update(masks)
+
+    # ------------------------------------------------------------------
+    # Device state (opaque pytree threaded through the train loop)
+    # ------------------------------------------------------------------
+    def init_device_state(self, params: PyTree,
+                          key: Optional[jax.Array] = None
+                          ) -> Optional[Any]:
+        """Build the substrate's physical state for ``params`` (e.g.
+        programmed conductance pairs). Stateless substrates return None."""
+        return None
+
+    # ------------------------------------------------------------------
+    # Metered entry points (what the trainers/forwards call)
+    # ------------------------------------------------------------------
+    def device_vmm(self, drive: jax.Array, weights: jax.Array,
+                   key: Optional[jax.Array] = None, *,
+                   state: Optional[Any] = None,
+                   tag: str = "") -> jax.Array:
+        """``vmm`` + activity metering + optional device-state read.
+        ``tag`` names the crossbar tile (``w_h``/``u_h``/``w_o``) so the
+        energy model can apply the chip's concurrency structure."""
+        y = self._vmm_impl(drive, weights, key, state, tag)
+        self.telemetry.meter_vmm(drive, weights, self.spec.input_bits, tag)
+        return y
+
+    def _vmm_impl(self, drive, weights, key, state, tag) -> jax.Array:
+        return self.vmm(drive, weights, key)
+
+    def device_readout(self, pre: jax.Array,
+                       tag: str = "hidden") -> jax.Array:
+        """``quantize_readout`` + ADC-conversion metering."""
+        q = self.quantize_readout(pre)
+        if self.spec.adc_bits is not None:
+            self.telemetry.meter_adc(pre, tag)
+        return q
+
+    def device_apply_update(self, params: PyTree, updates: PyTree,
+                            key: Optional[jax.Array] = None,
+                            state: Optional[Any] = None
+                            ) -> tuple[PyTree, PyTree, Optional[Any]]:
+        """``apply_update`` that also advances the device state. Write
+        pulses are metered later, host-side, in :meth:`record_endurance`
+        (only nonzero applied updates cost pulses — a data-dependent
+        count that cannot be derived at trace time)."""
+        return self._apply_update_impl(params, updates, key, state)
+
+    def _apply_update_impl(self, params, updates, key, state):
+        new_params, applied = self.apply_update(params, updates, key)
+        return new_params, applied, state
 
     # ------------------------------------------------------------------
     def __repr__(self) -> str:

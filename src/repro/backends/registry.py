@@ -13,6 +13,7 @@ registered factory, and every entry point (continual trainer, model
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional, Union
 
 from repro.backends.base import DeviceBackend, DeviceSpec
@@ -29,6 +30,7 @@ def register_backend(name: str,
     tests and experiment sweeps)."""
     def _do(f):
         _REGISTRY[name] = f
+        inference_backend.cache_clear()
         return f
     return _do if factory is None else _do(factory)
 
@@ -71,6 +73,23 @@ def get_backend(name: Union[str, DeviceBackend],
     return factory(spec=spec, **kwargs)
 
 
+@functools.lru_cache(maxsize=None)
+def inference_backend(name: str) -> DeviceBackend:
+    """Shared per-name backend instance for inference-mode model layers
+    (``models/layers.dense``, the serve engine).
+
+    Inference overrides on the substrate's own spec: 8-bit quantized
+    drive, no readout ADC, unit weight scale (activation normalization
+    handles the range); gain noise and crossbar physics stay the
+    backend's. Sharing one instance per name keeps a single telemetry
+    accumulator across every projection of a serving run — and avoids
+    re-instantiating a backend on every layer call."""
+    return get_backend(name, spec_overrides=dict(input_bits=8,
+                                                 adc_bits=None,
+                                                 weight_clip=None))
+
+
 def unregister_backend(name: str) -> None:
     """Remove a registered backend (test teardown helper)."""
     _REGISTRY.pop(name, None)
+    inference_backend.cache_clear()

@@ -98,16 +98,29 @@ class WBSBackend(DeviceBackend):
         return gains
 
     def vmm(self, drive: jax.Array, weights: jax.Array,
-            key: Optional[jax.Array] = None) -> jax.Array:
+            key: Optional[jax.Array] = None,
+            read_sigma: float = 0.0,
+            read_key: Optional[jax.Array] = None) -> jax.Array:
+        """WBS crossbar product. ``read_sigma``/``read_key`` carry
+        per-access conductance read noise (the analog backend's
+        ``crossbar.read_sigma``): on the Pallas path the noise is drawn
+        *inside* the kernel from the on-chip PRNG; the jnp reference path
+        perturbs the weight matrix up front — same statistics, one draw
+        per call instead of per access."""
         n_bits = self.spec.input_bits or 8
         scale = self._weight_scale()
-        w = weights / scale
         use_kernel = self.use_kernel if self.use_kernel is not None \
             else jax.default_backend() != "cpu"
+        if not use_kernel and read_sigma > 0 and read_key is not None:
+            weights = weights * (1.0 + read_sigma
+                                 * jax.random.normal(read_key,
+                                                     weights.shape))
+        w = weights / scale
         if use_kernel:
             from repro.kernels import ops as kops
             y = kops.wbs_dense(drive, w.astype(jnp.float32), n_bits=n_bits,
-                               adc_bits=None, gains=self._sample_gains(key))
+                               adc_bits=None, gains=self._sample_gains(key),
+                               read_sigma=read_sigma, read_key=read_key)
         else:
             wspec = WBSSpec(n_bits=n_bits, gain_sigma=self.spec.gain_sigma,
                             adc_bits=None)

@@ -34,6 +34,7 @@ import numpy as np
 from repro.analog.crossbar import CrossbarSpec
 from repro.backends import DeviceBackend, DeviceSpec, get_backend
 from repro.core import dfa as dfa_mod
+from repro.telemetry import meters
 from repro.core.miru import (MiRUConfig, init_dfa_feedback, init_miru_params,
                              miru_apply_readout)
 from repro.data.synthetic import TaskData
@@ -140,9 +141,33 @@ class ContinualConfig:
 # Backend-parameterized forward
 # ---------------------------------------------------------------------------
 
+def _meter_chip_step(backend: DeviceBackend, cfg: MiRUConfig, B: int,
+                     anchor) -> None:
+    """Per-time-step chip activity the software forward does not execute
+    but the streaming hardware does (metered ×T by the enclosing scaled
+    scope): the readout crossbar evaluates ŷᵗ every step (eq. 3) and the
+    λ-interpolator blends every candidate state. The backend-executed
+    VMMs/ADC are metered by the ``device_*`` hooks themselves."""
+    tele = backend.telemetry
+    if not tele.enabled:
+        return
+    spec = backend.spec
+    deltas = {f"{meters.MACS}/w_o": B * cfg.n_h * cfg.n_y,
+              f"{meters.VMM_ROWS}/w_o": B,
+              f"{meters.INTERP}/h": B * cfg.n_h,
+              meters.SAMPLE_STEPS: B}
+    if spec.input_bits:
+        deltas[f"{meters.BIT_PULSES}/w_o"] = B * cfg.n_h * spec.input_bits
+        deltas[f"{meters.WBS_PHASES}/w_o"] = B * spec.input_bits
+    if spec.adc_bits is not None:
+        deltas[f"{meters.ADC_CONVERSIONS}/out"] = B * cfg.n_y
+    tele.record(deltas, anchor=anchor)
+
+
 def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
                         x_seq: jax.Array, key: jax.Array,
-                        backend: DeviceBackend
+                        backend: DeviceBackend,
+                        state: Optional[Any] = None
                         ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """MiRU forward with the hidden-layer matrix products routed through a
     device backend.
@@ -158,27 +183,40 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
     then the digital PWL tanh and λ-interpolation follow. The readout
     (``miru_apply_readout``) stays digital — the paper's K-WTA voltage
     readout is modeled there, not in the backend.
+
+    ``state`` is the backend's device state (conductance pairs for
+    ``analog_state``); stateless backends ignore it. When the backend's
+    telemetry is enabled, every tile access, ADC conversion and
+    interpolation is metered — including the streamed per-step readout
+    the chip performs — and flushed jit-safely at the end.
     """
     B, T, _ = x_seq.shape
+    tele = backend.telemetry
 
     def step(carry, x_t):
         h, k = carry
         k, k1, k2 = jax.random.split(k, 3)
-        pre = backend.vmm(x_t, params["w_h"], k1) \
-            + backend.vmm(cfg.beta * h, params["u_h"], k2) \
+        pre = backend.device_vmm(x_t, params["w_h"], k1,
+                                 state=state, tag="w_h") \
+            + backend.device_vmm(cfg.beta * h, params["u_h"], k2,
+                                 state=state, tag="u_h") \
             + params["b_h"]
-        pre = backend.quantize_readout(pre)
+        pre = backend.device_readout(pre)
         h_tilde = jnp.tanh(pre)
         h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
         return (h_new, k), (h_new, h, pre)
 
     h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
-    (_, _), (h_all, h_prev, pre) = jax.lax.scan(
-        step, (h0, key), jnp.swapaxes(x_seq, 0, 1))
+    with tele.scaled(T):
+        (_, _), (h_all, h_prev, pre) = jax.lax.scan(
+            step, (h0, key), jnp.swapaxes(x_seq, 0, 1))
+        _meter_chip_step(backend, cfg, B, anchor=x_seq)
+    tele.record({meters.SEQUENCES: B}, anchor=x_seq)
     h_all = jnp.swapaxes(h_all, 0, 1)
     h_prev = jnp.swapaxes(h_prev, 0, 1)
     pre = jnp.swapaxes(pre, 0, 1)
     logits = miru_apply_readout(params, cfg, h_all[:, -1, :])
+    tele.emit_pending()
     return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
 
 
@@ -205,57 +243,63 @@ def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
     path — the backend supplies the substrate-specific pieces."""
     opt = adam(trainer.adam_lr)
 
-    def fwd(p, c, xs, k):
-        return miru_forward_device(p, c, xs, k, backend)
+    def fwd(p, c, xs, k, st):
+        return miru_forward_device(p, c, xs, k, backend, state=st)
 
     if trainer.algo == "adam":
         @jax.jit
-        def train_step(params, opt_state, key, x, y):
+        def train_step(params, opt_state, key, x, y, dev_state):
             k_fwd, k_wr = jax.random.split(key)
 
             def loss_fn(p):
-                logits, _ = fwd(p, cfg, x, k_fwd)
+                logits, _ = fwd(p, cfg, x, k_fwd, dev_state)
                 return softmax_cross_entropy(logits, y)
 
             loss, grads = jax.value_and_grad(loss_fn)(params)
             updates, opt_state_ = opt.update(grads, opt_state, params)
-            params, applied = backend.apply_update(params, updates, k_wr)
-            return params, opt_state_, loss, applied
+            params, applied, dev_state = backend.device_apply_update(
+                params, updates, k_wr, state=dev_state)
+            backend.telemetry.emit_pending()
+            return params, opt_state_, loss, applied, dev_state
 
     elif trainer.algo == "dfa":
         @jax.jit
-        def train_step(params, opt_state, key, x, y):
+        def train_step(params, opt_state, key, x, y, dev_state):
             psi = opt_state["psi"]
             k_fwd, k_wr = jax.random.split(key)
             loss, grads = dfa_mod.dfa_grads(
                 params, psi, cfg, x, y,
-                forward_fn=lambda p, c, xs: fwd(p, c, xs, k_fwd))
+                forward_fn=lambda p, c, xs: fwd(p, c, xs, k_fwd,
+                                                dev_state))
             # ζ-sparsify, scale per layer, hand the write to the device.
             updates = dfa_mod.scaled_sparse_updates(
                 grads, trainer.lr, trainer.kwta_keep_frac,
                 trainer.hidden_lr_scale)
-            params, applied = backend.apply_update(params, updates, k_wr)
-            return params, opt_state, loss, applied
+            params, applied, dev_state = backend.device_apply_update(
+                params, updates, k_wr, state=dev_state)
+            backend.telemetry.emit_pending()
+            return params, opt_state, loss, applied, dev_state
 
     else:
         raise ValueError(f"unknown trainer algo {trainer.algo!r}; "
                          f"expected 'adam' or 'dfa'")
 
     @jax.jit
-    def evaluate(params, key, x, y):
-        logits, _ = fwd(params, cfg, x, key)
+    def evaluate(params, key, x, y, dev_state):
+        logits, _ = fwd(params, cfg, x, key, dev_state)
+        backend.telemetry.emit_pending()
         return acc_fn(logits, y)
 
     return train_step, evaluate, opt
 
 
 def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
-                   upto: int) -> np.ndarray:
+                   upto: int, dev_state=None) -> np.ndarray:
     accs = np.zeros(upto + 1)
     for i, task in enumerate(tasks[:upto + 1]):
         accs[i] = float(evaluate(params, key,
                                  jnp.asarray(task.x_test),
-                                 jnp.asarray(task.y_test)))
+                                 jnp.asarray(task.y_test), dev_state))
     return accs
 
 
@@ -309,6 +353,10 @@ def run_continual(cfg: MiRUConfig,
     key, k_param, k_psi = jax.random.split(key, 3)
     params = init_miru_params(k_param, cfg)
     psi = init_dfa_feedback(k_psi, cfg)
+    # Device-state key folded off to the side so the training/eval PRNG
+    # streams stay bit-identical to the stateless backends'.
+    dev_state = backend.init_device_state(
+        params, jax.random.fold_in(key, 0x0DE5))
 
     train_step, evaluate, opt = _make_steps(cfg, trainer, backend)
     if trainer.algo == "adam":
@@ -345,9 +393,9 @@ def run_continual(cfg: MiRUConfig,
                                              xr.reshape(-1, T, F)])
                         yb = np.concatenate([yb[:bs - n_rep], yr])
                 key, k_step = jax.random.split(key)
-                params, opt_state, loss, applied = train_step(
+                params, opt_state, loss, applied, dev_state = train_step(
                     params, opt_state, k_step, jnp.asarray(xb),
-                    jnp.asarray(yb))
+                    jnp.asarray(yb), dev_state)
                 losses.append(float(loss))
                 backend.record_endurance(applied)
                 # Reservoir-sample only the *fresh* rows into the buffer —
@@ -357,7 +405,8 @@ def run_continual(cfg: MiRUConfig,
                 if n_fresh > 0:
                     buffer.add_batch(xb[:n_fresh], yb[:n_fresh])
         key, k_eval = jax.random.split(key)
-        R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t)
+        R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t,
+                                      dev_state)
 
     out: dict[str, Any] = {
         "R": R,
@@ -367,6 +416,10 @@ def run_continual(cfg: MiRUConfig,
         "losses": losses,
         "params": params,
     }
+    if dev_state is not None:
+        out["device_state"] = dev_state
     if backend.tracker is not None:
         out["endurance"] = backend.tracker
+    if backend.telemetry.enabled:
+        out["telemetry"] = backend.telemetry
     return out

@@ -43,10 +43,30 @@ def quantize_inputs(x: jax.Array, n_bits: int
 
 def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
                gains: jax.Array, adc_bits: Optional[int] = None,
-               adc_range: float = 4.0, block: int = 128) -> jax.Array:
-    """Padded/dispatched WBS crossbar matmul. See wbs_matmul_pallas."""
+               adc_range: float = 4.0, block: int = 128,
+               read_sigma: float = 0.0,
+               read_key: Optional[jax.Array] = None) -> jax.Array:
+    """Padded/dispatched WBS crossbar matmul. See wbs_matmul_pallas.
+
+    ``read_sigma``/``read_key`` model per-access conductance read noise.
+    On compiled targets the noise is drawn inside the kernel (a fresh
+    draw per weight-tile access); in interpret mode (CPU) the TPU PRNG
+    has no lowering, so the jnp reference model — one draw per weight
+    element per call — is applied to ``w`` up front.
+    """
     M, K = sign.shape
     _, N = w.shape
+    seed = None
+    if read_sigma > 0:
+        if read_key is None:
+            raise ValueError("read_sigma > 0 requires read_key")
+        if _interpret():
+            w = w * (1.0 + read_sigma
+                     * jax.random.normal(read_key, w.shape))
+            read_sigma = 0.0
+        else:
+            seed = jax.random.randint(read_key, (1,), 0, 2 ** 31 - 1,
+                                      dtype=jnp.int32)
     bm = min(block, round_up(M, 8))
     bk = min(block, round_up(K, 128))
     bn = min(block, round_up(N, 128))
@@ -56,13 +76,16 @@ def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
     w_p = _pad2(w, Kp, Np)
     y = wbs_matmul_pallas(sign_p, code_p, w_p, gains, adc_bits=adc_bits,
                           adc_range=adc_range, bm=bm, bk=bk, bn=bn,
+                          read_sigma=read_sigma, seed=seed,
                           interpret=_interpret())
     return y[:M, :N]
 
 
 def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
               adc_bits: Optional[int] = 8, adc_range: float = 4.0,
-              gains: Optional[jax.Array] = None) -> jax.Array:
+              gains: Optional[jax.Array] = None,
+              read_sigma: float = 0.0,
+              read_key: Optional[jax.Array] = None) -> jax.Array:
     """QuantMode.WBS linear layer: float activations → sign-magnitude
     codes → bit-plane crossbar matmul. x (..., K) @ w (K, N)."""
     lead = x.shape[:-1]
@@ -70,7 +93,8 @@ def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
     if gains is None:
         gains = 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
     sign, code = quantize_inputs(x2, n_bits)
-    y = wbs_matmul(sign, code, w, gains, adc_bits, adc_range)
+    y = wbs_matmul(sign, code, w, gains, adc_bits, adc_range,
+                   read_sigma=read_sigma, read_key=read_key)
     return y.reshape(*lead, w.shape[-1])
 
 
@@ -80,9 +104,10 @@ def device_vmm(x: jax.Array, w: jax.Array, backend="wbs",
     """Registry-dispatched VMM: route x @ w through a registered device
     backend ("ideal" | "wbs" | "analog" | any custom registration).
     ``backend`` is a name or a DeviceBackend instance; extra kwargs
-    (``spec``, ``spec_overrides``, …) pass through to ``get_backend``."""
+    (``spec``, ``spec_overrides``, …) pass through to ``get_backend``.
+    Activity lands on the backend's telemetry when enabled."""
     from repro.backends import get_backend
-    return get_backend(backend, **backend_kwargs).vmm(x, w, key)
+    return get_backend(backend, **backend_kwargs).device_vmm(x, w, key)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,14 @@ Dataflow per (i, j, k) grid cell (K innermost → accumulator carries):
 epilogue (k == K−1):
     out = ADC( acc · 2^nb/(2^nb − 1) )
 
+With ``read_sigma > 0`` the kernel models per-access conductance read
+noise (``CrossbarSpec.read_sigma``) *inside* the kernel: each grid cell
+seeds the on-chip PRNG from (seed, cell-id) and perturbs its weight tile
+with Box–Muller gaussians — every access to a weight element sees a fresh
+draw, with no (K, N) noise matrix materialized in HBM. The TPU PRNG has no
+CPU interpret-mode lowering, so ``ops.wbs_matmul`` applies the jnp
+reference noise model up front on CPU instead (one draw per call).
+
 Block shapes default to 128-aligned tiles (MXU native); the ops.py wrapper
 pads arbitrary shapes.
 """
@@ -25,9 +33,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _wbs_kernel(sign_ref, code_ref, w_ref, gains_ref, out_ref, acc_ref, *,
+def _uniform_01(shape):
+    """Uniform in (0, 1] from the on-chip PRNG (24-bit mantissa).
+
+    ``prng_random_bits`` yields *int32*; bitcast to uint32 before the
+    shift — an arithmetic shift on the signed view would send half of
+    all draws negative (then clamp to 2^-24, wrecking the distribution).
+    """
+    bits = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+    u = (bits >> 8).astype(jnp.float32) * (2.0 ** -24)
+    return jnp.maximum(u, 2.0 ** -24)
+
+
+def _wbs_kernel(sign_ref, code_ref, w_ref, gains_ref, *refs,
                 n_bits: int, n_k: int, adc_bits: Optional[int],
-                adc_range: float):
+                adc_range: float, read_sigma: float):
+    if read_sigma > 0:
+        seed_ref, out_ref, acc_ref = refs
+    else:
+        out_ref, acc_ref = refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -37,6 +61,17 @@ def _wbs_kernel(sign_ref, code_ref, w_ref, gains_ref, out_ref, acc_ref, *,
     sign = sign_ref[...].astype(jnp.float32)
     code = code_ref[...]
     w = w_ref[...].astype(jnp.float32)
+
+    if read_sigma > 0:
+        # Fresh per-access conductance noise: unique PRNG stream per grid
+        # cell, Box–Muller normals over the weight tile.
+        i, j = pl.program_id(0), pl.program_id(1)
+        cell = (i * pl.num_programs(1) + j) * pl.num_programs(2) + k
+        pltpu.prng_seed(seed_ref[0], cell)
+        u1 = _uniform_01(w.shape)
+        u2 = _uniform_01(w.shape)
+        z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+        w = w * (1.0 + read_sigma * z)
 
     acc = acc_ref[...]
     # One MXU matmul per bit plane, gain-weighted (the analog bit
@@ -60,14 +95,19 @@ def _wbs_kernel(sign_ref, code_ref, w_ref, gains_ref, out_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "adc_bits", "adc_range", "bm", "bk", "bn", "interpret"))
+    "adc_bits", "adc_range", "bm", "bk", "bn", "read_sigma", "interpret"))
 def wbs_matmul_pallas(sign: jax.Array, code: jax.Array, w: jax.Array,
                       gains: jax.Array, adc_bits: Optional[int] = None,
                       adc_range: float = 4.0, bm: int = 128, bk: int = 128,
-                      bn: int = 128, interpret: bool = False) -> jax.Array:
+                      bn: int = 128, read_sigma: float = 0.0,
+                      seed: Optional[jax.Array] = None,
+                      interpret: bool = False) -> jax.Array:
     """sign/code (M, K) int8/uint8, w (K, N), gains (n_bits,) → (M, N) f32.
 
     Shapes must already be multiples of the block sizes (ops.py pads).
+    ``read_sigma > 0`` requires a ``seed`` (shape (1,) int32) and a
+    compiled TPU target — the in-kernel PRNG has no interpret-mode
+    lowering (ops.py falls back to the jnp noise model on CPU).
     """
     M, K = sign.shape
     K2, N = w.shape
@@ -79,18 +119,26 @@ def wbs_matmul_pallas(sign: jax.Array, code: jax.Array, w: jax.Array,
 
     grid = (M // bm, N // bn, n_k)
     kernel = functools.partial(_wbs_kernel, n_bits=n_bits, n_k=n_k,
-                               adc_bits=adc_bits, adc_range=adc_range)
+                               adc_bits=adc_bits, adc_range=adc_range,
+                               read_sigma=read_sigma)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # sign
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # code
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w
+        pl.BlockSpec((1, n_bits), lambda i, j, k: (0, 0)),  # gains
+    ]
+    operands = [sign, code, w, gains2d]
+    if read_sigma > 0:
+        if seed is None:
+            raise ValueError("read_sigma > 0 requires a PRNG seed")
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # seed
+        operands.append(seed.astype(jnp.int32).reshape(1))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # sign
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # code
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w
-            pl.BlockSpec((1, n_bits), lambda i, j, k: (0, 0)),  # gains
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(sign, code, w, gains2d)
+    )(*operands)

@@ -89,12 +89,18 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                seq_par: bool = True, remat: bool = True,
                extra_tag: str = "", attn_mode: str = "gather",
                moe_mode: str = "global",
-               kv_dtype: str = "") -> dict:
+               kv_dtype: str = "", quant: str = "none") -> dict:
     cfg = get_config(arch)
     cfg = dataclasses.replace(cfg, remat=remat)
     if kv_dtype:
         cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
-        
+    if quant and quant != "none":
+        # Quantized execution modes resolve through the device-backend
+        # registry — fail fast on unknown substrates, before compiling.
+        from repro.backends import get_backend
+        get_backend(quant)
+        cfg = dataclasses.replace(cfg, quant_mode=quant)
+
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     batch_axes = ("pod", "data") if multi_pod else ("data",)
@@ -118,7 +124,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "n_params": int(n_params),
         "param_bytes": int(tree_bytes(pshapes)),
         "seq_par": seq_par, "remat": remat, "tag": extra_tag,
-        "fsdp": use_fsdp,
+        "fsdp": use_fsdp, "quant_mode": cfg.quant_mode,
     }
 
     record["attn_mode"] = attn_mode
@@ -245,7 +251,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              seq_par: bool = True, remat: bool = True,
              tag: str = "", attn_mode: str = "gather",
-             moe_mode: str = "global", kv_dtype: str = "") -> dict:
+             moe_mode: str = "global", kv_dtype: str = "",
+             quant: str = "none") -> dict:
     reason = skip_reason(get_config(arch), shape_name)
     if reason:
         return {"arch": arch, "shape": shape_name,
@@ -253,7 +260,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "skipped": reason, "ok": True}
     try:
         return lower_cell(arch, shape_name, multi_pod, seq_par, remat, tag,
-                          attn_mode, moe_mode, kv_dtype)
+                          attn_mode, moe_mode, kv_dtype, quant)
     except Exception as e:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
@@ -272,6 +279,10 @@ def main() -> int:
                     choices=["gather", "ulysses"])
     ap.add_argument("--moe", default="global", choices=["global", "ep"])
     ap.add_argument("--kv", default="", choices=["", "bf16", "int8"])
+    ap.add_argument("--quant", default="none",
+                    help="quantized execution substrate: any name in the "
+                         "repro.backends registry (validated before "
+                         "compile), or 'none'")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out-dir", default=str(RESULTS_DIR))
     args = ap.parse_args()
@@ -286,7 +297,7 @@ def main() -> int:
         for shape_name in shapes:
             rec = run_cell(arch, shape_name, args.multi_pod,
                            bool(args.seq_par), bool(args.remat), args.tag,
-                           args.attn, args.moe, args.kv)
+                           args.attn, args.moe, args.kv, args.quant)
             mesh_tag = "2x16x16" if args.multi_pod else "16x16"
             suffix = f"-{args.tag}" if args.tag else ""
             fname = out_dir / f"{arch}--{shape_name}--{mesh_tag}{suffix}.json"

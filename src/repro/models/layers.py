@@ -25,23 +25,20 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     crossbar as a deployable quantized execution mode for any projection
     in the zoo — and every registered substrate is likewise a valid mode."""
     if quant_mode != "none":
-        from repro.backends import get_backend
-        # Inference-mode overrides on the substrate's own spec: 8-bit
-        # quantized drive, no readout ADC, unit weight scale (activation
-        # normalization handles the range). Everything else — gain noise,
-        # crossbar physics — stays the backend's (stochastic non-idealities
-        # are off here because no PRNG key is threaded: reads are the
-        # deterministic expectation).
-        backend = get_backend(quant_mode,
-                              spec_overrides=dict(input_bits=8,
-                                                  adc_bits=None,
-                                                  weight_clip=None))
+        from repro.backends import inference_backend
+        # One shared inference-specced instance per registered name (see
+        # registry.inference_backend): 8-bit quantized drive, no readout
+        # ADC, unit weight scale. Stochastic non-idealities are off here
+        # because no PRNG key is threaded: reads are the deterministic
+        # expectation. Activity is metered on the shared instance's
+        # telemetry when enabled.
+        backend = inference_backend(quant_mode)
         # Normalize activations into the crossbar's [-1, 1] drive range,
         # run the backend VMM, undo the scale. absmax is a cheap fused
         # reduction.
         s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
-        y = backend.vmm((x / s).astype(jnp.float32),
-                        w.astype(jnp.float32)) * s
+        y = backend.device_vmm((x / s).astype(jnp.float32),
+                               w.astype(jnp.float32), tag="dense") * s
         y = y.astype(x.dtype)
     else:
         y = x @ w.astype(x.dtype)

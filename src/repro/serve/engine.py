@@ -8,17 +8,24 @@ the cache is contiguous per slot, sized to max_len).
 
 The decode step is a single jit'd function (params, caches, tokens, pos)
 so the same compiled executable serves every batch composition.
+
+The quantized execution substrate resolves through ``repro.backends``:
+``ServeConfig.device`` (any registered backend name) overrides the
+model's ``quant_mode``, and either way the engine holds the shared
+per-name inference backend instance — validated at construction, metering
+decode activity on its telemetry when ``ServeConfig.meter`` is set.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import DeviceBackend, inference_backend
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
@@ -31,6 +38,19 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # Device substrate for the quantized projections: a repro.backends
+    # registry *name*. None keeps the model config's quant_mode. The
+    # model layers resolve one shared inference instance per name, so a
+    # pre-built DeviceBackend instance cannot be honored here — register
+    # a configured backend under its own name instead (engine raises on
+    # instances rather than silently substituting the default spec).
+    device: Union[str, DeviceBackend, None] = None
+    # Enable telemetry on the substrate. Counters accumulate on the
+    # process-wide shared inference instance for this name: engines
+    # serving the same backend name share one accumulator (and once any
+    # engine enables it, later-compiled steps on that name meter too).
+    # Use distinct registered names for isolated metering.
+    meter: bool = False
 
 
 @dataclasses.dataclass
@@ -45,6 +65,29 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig,
                  params: Any):
+        # Resolve the execution substrate through the backend registry —
+        # unknown names fail here, at engine construction, not mid-decode.
+        if scfg.device is not None:
+            if isinstance(scfg.device, DeviceBackend):
+                raise TypeError(
+                    "ServeConfig.device takes a registry name, not a "
+                    "DeviceBackend instance: the model layers resolve a "
+                    "shared per-name inference instance, so a pre-built "
+                    "instance's spec would be silently ignored. Register "
+                    "your configured backend (register_backend) and pass "
+                    "its name.")
+            name = scfg.device
+            self.backend: Optional[DeviceBackend] = inference_backend(name)
+            cfg = dataclasses.replace(cfg, quant_mode=name)
+        elif cfg.quant_mode != "none":
+            self.backend = inference_backend(cfg.quant_mode)
+        else:
+            self.backend = None
+        if scfg.meter:
+            if self.backend is None:
+                raise ValueError("ServeConfig.meter requires a quantized "
+                                 "substrate (device= or quant_mode)")
+            self.backend.telemetry.enable()
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
@@ -56,14 +99,22 @@ class ServeEngine:
         self._rng = jax.random.PRNGKey(scfg.seed)
 
         cfg_ = cfg
+        backend_ = self.backend
 
         def step_fn(params, caches, tokens, pos):
             logits, caches = lm.decode_step(params, cfg_, caches, tokens,
                                             pos)
+            if backend_ is not None:
+                backend_.telemetry.emit_pending()
             return logits[:, -1, :], caches
 
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self.steps_run = 0
+
+    @property
+    def telemetry(self):
+        """The substrate's activity accumulator (None when unquantized)."""
+        return self.backend.telemetry if self.backend is not None else None
 
     # ------------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 32) -> Request:

@@ -1,0 +1,29 @@
+"""Measured device telemetry — counters → energy/latency → paper claims.
+
+The analytical circuit model (``analog/costmodel.py``) derives Table I and
+Fig. 5b/5d from closed-form expressions; this package derives the same
+numbers from *metered* backend activity: every ``DeviceBackend`` carries a
+:class:`Telemetry` accumulator whose counters are incremented by the
+protocol hooks (``device_vmm`` / ``device_readout`` / ``record_endurance``)
+during actual training runs, and the energy/lifetime models fold those
+counters into watts, GOPS/W, the 29×-vs-CMOS comparison, and the
+12.2-year lifetime projection.
+
+- meters:   the Telemetry accumulator (ADC-conversion, bit-pulse,
+            crossbar-read/write, MAC counters) with jit-safe accounting.
+- energy:   counters → joules / seconds / GOPS via HardwareConstants.
+- lifetime: EnduranceTracker write maps → lifetime projection (§VI-B).
+- report:   GOPS/W and 29×-vs-CMOS summaries for examples/benchmarks.
+"""
+from repro.telemetry.meters import Telemetry
+from repro.telemetry.energy import EnergyReport, MeteredEnergy
+from repro.telemetry.lifetime import LifetimeProjection, project_lifetime
+from repro.telemetry.report import (cmos_comparison, format_report,
+                                    telemetry_report)
+
+__all__ = [
+    "Telemetry",
+    "EnergyReport", "MeteredEnergy",
+    "LifetimeProjection", "project_lifetime",
+    "telemetry_report", "cmos_comparison", "format_report",
+]

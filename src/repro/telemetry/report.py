@@ -1,0 +1,107 @@
+"""Run-level summaries: Table I / Fig. 5d / 29×-vs-CMOS from a live run.
+
+``telemetry_report`` assembles the metered numbers next to the analytical
+cost model's so benchmarks and examples can assert agreement;
+``cmos_comparison`` reproduces the 29× efficiency claim from two metered
+runs of the same workload (analog + cmos backends); ``format_report``
+renders a human-readable block for the example drivers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.analog.costmodel import M2RUCostModel
+from repro.analog.endurance import EnduranceTracker
+from repro.telemetry.energy import MeteredEnergy, efficiency_ratio
+from repro.telemetry.lifetime import project_lifetime
+from repro.telemetry.meters import Telemetry
+
+
+def telemetry_report(telemetry: Telemetry,
+                     model: Optional[M2RUCostModel] = None,
+                     kind: str = "analog",
+                     tracker: Optional[EnduranceTracker] = None,
+                     update_period_s: float = 1e-3) -> dict:
+    """Metered Table I numbers (+ lifetime when a tracker is given), side
+    by side with the closed-form cost model for the same geometry."""
+    model = model if model is not None else M2RUCostModel()
+    energy = MeteredEnergy(model)
+    rep = energy.report(telemetry.snapshot(), kind=kind)
+    out = {
+        "kind": kind,
+        "metered": {
+            "cycles": rep.cycles,
+            "chip_time_s": rep.time_s,
+            "ops": rep.ops,
+            "power_mw": rep.power_w * 1e3,
+            "power_training_mw": rep.power_training_w * 1e3,
+            "gops": rep.gops,
+            "gops_per_w": rep.gops_per_w,
+            "pj_per_op": rep.pj_per_op,
+            "breakdown_mw": {k: v / rep.time_s * 1e3
+                             for k, v in rep.breakdown_j.items()},
+            "sample_steps": rep.sample_steps,
+            "write_pulses": rep.write_pulses,
+        },
+        "analytical": {
+            "power_mw": model.power_w() * 1e3,
+            "gops": model.gops(),
+            "gops_per_w": model.gops_per_watt(),
+            "pj_per_op": model.pj_per_op(),
+            "step_latency_us": model.step_latency_s() * 1e6,
+        },
+    }
+    if rep.sample_steps > 0:
+        out["metered"]["step_latency_us"] = rep.time_s / rep.sample_steps \
+            * 1e6
+    if tracker is not None and tracker.updates_applied:
+        out["lifetime"] = project_lifetime(
+            tracker, model.hw, update_period_s).as_dict()
+    return out
+
+
+def cmos_comparison(telemetry_analog: Telemetry, telemetry_cmos: Telemetry,
+                    model: Optional[M2RUCostModel] = None) -> dict:
+    """The 29× claim from two metered runs of the same workload."""
+    model = model if model is not None else M2RUCostModel()
+    energy = MeteredEnergy(model)
+    a = energy.analog_report(telemetry_analog.snapshot())
+    c = energy.cmos_report(telemetry_cmos.snapshot())
+    return {
+        "analog_pj_per_op": a.pj_per_op,
+        "cmos_pj_per_op": c.pj_per_op,
+        "cmos_power_mw": c.power_w * 1e3,
+        "efficiency_gain": efficiency_ratio(a, c),
+        "paper_gain": 29.0,
+    }
+
+
+def format_report(rep: dict) -> str:
+    """Printable telemetry block for the example drivers."""
+    m, a = rep["metered"], rep["analytical"]
+    lines = [
+        f"substrate: {rep['kind']}  "
+        f"(metered {m['sample_steps']:.0f} sample-steps, "
+        f"{m['ops']:.3g} ops)",
+        f"  chip time          {m['chip_time_s']*1e3:9.3f} ms  "
+        f"({m.get('step_latency_us', float('nan')):.2f} µs/step; "
+        f"model {a['step_latency_us']:.2f})",
+        f"  power              {m['power_mw']:9.2f} mW  "
+        f"(model {a['power_mw']:.2f}; training "
+        f"{m['power_training_mw']:.2f})",
+        f"  throughput         {m['gops']:9.2f} GOPS (model {a['gops']:.2f})",
+        f"  efficiency         {m['gops_per_w']:9.0f} GOPS/W "
+        f"(model {a['gops_per_w']:.0f})",
+        f"  energy/op          {m['pj_per_op']:9.2f} pJ "
+        f"(model {a['pj_per_op']:.2f})",
+    ]
+    if m["write_pulses"]:
+        lines.append(f"  write pulses       {m['write_pulses']:9.0f}")
+    if "lifetime" in rep:
+        lt = rep["lifetime"]
+        lines.append(
+            f"  projected lifetime {lt['years_mean']:9.1f} years @"
+            f"{lt['update_period_s']*1e3:.0f} ms updates "
+            f"(hot-tail {lt['years_hot_tail']:.1f}; "
+            f"{lt['writes_per_device_update']:.2f} writes/device/update)")
+    return "\n".join(lines)

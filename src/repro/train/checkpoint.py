@@ -28,6 +28,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.analog.endurance import EnduranceTracker
 from repro.utils import flatten_dict, unflatten_dict
 
 PyTree = Any
@@ -143,16 +144,33 @@ class CheckpointManager:
             tree = unflatten_dict({
                 k: jax.device_put(v, shard_flat[k]) if k in shard_flat
                 else v for k, v in flat.items()})
-        return manifest["step"], tree, manifest.get("extra", {})
+        return manifest["step"], _revive(tree), manifest.get("extra", {})
 
 
 def _as_dict(tree: PyTree) -> dict:
     """Convert NamedTuples / lists in a pytree to plain dicts for
-    path-stable serialization."""
+    path-stable serialization. Stateful host-side objects that know how
+    to serialize themselves (the endurance tracker — so lifetime
+    projections survive restarts) are converted via ``state_dict`` and
+    revived by :func:`_revive` on restore."""
+    if isinstance(tree, EnduranceTracker):
+        return _as_dict(tree.state_dict())
     if isinstance(tree, dict):
         return {str(k): _as_dict(v) for k, v in tree.items()}
     if isinstance(tree, tuple) and hasattr(tree, "_fields"):
         return {f: _as_dict(v) for f, v in zip(tree._fields, tree)}
     if isinstance(tree, (list, tuple)):
         return {str(i): _as_dict(v) for i, v in enumerate(tree)}
+    return tree
+
+
+def _revive(tree):
+    """Inverse of the ``_as_dict`` type conversions: rebuild tagged
+    subtrees (``_tree_type_`` sentinel) into their host-side objects."""
+    if isinstance(tree, dict):
+        tag = tree.get("_tree_type_")
+        if tag is not None and str(np.asarray(tag)) == \
+                EnduranceTracker.TYPE_TAG:
+            return EnduranceTracker.from_state_dict(tree)
+        return {k: _revive(v) for k, v in tree.items()}
     return tree

@@ -27,6 +27,48 @@ def test_wbs_matmul_shapes(m, k, n, n_bits):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+def test_wbs_matmul_read_sigma_zero_parity():
+    """The read-noise plumbing must be a bit-exact no-op at sigma=0 —
+    same kernel code path, no PRNG touched."""
+    x = jax.random.uniform(jax.random.PRNGKey(0), (16, 24),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (24, 8))
+    sign, code = ops.quantize_inputs(x, 8)
+    gains = 2.0 ** (-jnp.arange(1, 9, dtype=jnp.float32))
+    base = ops.wbs_matmul(sign, code, w, gains)
+    noised = ops.wbs_matmul(sign, code, w, gains, read_sigma=0.0,
+                            read_key=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(noised))
+
+
+def test_wbs_matmul_read_sigma_requires_key():
+    x = jax.random.uniform(jax.random.PRNGKey(0), (4, 8),
+                           minval=-1, maxval=1)
+    w = jnp.ones((8, 4))
+    sign, code = ops.quantize_inputs(x, 8)
+    gains = 2.0 ** (-jnp.arange(1, 9, dtype=jnp.float32))
+    with pytest.raises(ValueError, match="read_key"):
+        ops.wbs_matmul(sign, code, w, gains, read_sigma=0.1)
+
+
+def test_wbs_dense_read_sigma_perturbs_unbiased():
+    """Per-access read noise (jnp fallback on CPU): output differs per
+    key, is mean-preserving, and scales with sigma."""
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 32),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.2
+    clean = ops.wbs_dense(x, w, adc_bits=None)
+    ys = np.stack([
+        np.asarray(ops.wbs_dense(x, w, adc_bits=None, read_sigma=0.1,
+                                 read_key=jax.random.PRNGKey(10 + i)))
+        for i in range(32)])
+    assert not np.array_equal(ys[0], ys[1])             # fresh draw per key
+    np.testing.assert_allclose(ys.mean(0), np.asarray(clean),
+                               atol=0.05)               # zero-mean noise
+    spread = ys.std(0).mean()
+    assert spread > 1e-4
+
+
 @pytest.mark.parametrize("w_dtype", [jnp.float32, jnp.bfloat16])
 def test_wbs_matmul_dtypes(w_dtype):
     x = jax.random.uniform(jax.random.PRNGKey(0), (32, 48),

@@ -33,6 +33,34 @@ def test_loss_decreases(tmp_path):
     assert hist[-1]["loss"] < hist[0]["loss"]
 
 
+def test_endurance_tracker_checkpoint_roundtrip(tmp_path):
+    """Lifetime projections survive restarts: the tracker serializes
+    inside any checkpointed tree and is revived on restore."""
+    from repro.analog.endurance import EnduranceTracker
+    tracker = EnduranceTracker(endurance=5e8)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        tracker.record_update({"w_h": rng.random((4, 6)) < 0.5,
+                               "u_h": rng.random((6, 6)) < 0.5})
+    mgr = CheckpointManager(tmp_path / "ck")
+    mgr.save(7, {"params": {"w": np.ones((2, 2))}, "endurance": tracker})
+    step, tree, _ = mgr.restore()
+    assert step == 7
+    restored = tree["endurance"]
+    assert isinstance(restored, EnduranceTracker)
+    assert restored.endurance == tracker.endurance
+    assert restored.updates_applied == tracker.updates_applied
+    np.testing.assert_array_equal(restored.all_counts(),
+                                  tracker.all_counts())
+    # Lifetime projection identical across the restart boundary.
+    from repro.telemetry import project_lifetime
+    assert project_lifetime(restored).years_mean == \
+        project_lifetime(tracker).years_mean
+    # And it keeps counting after the restart.
+    restored.record_update({"w_h": np.ones((4, 6), bool)})
+    assert restored.updates_applied == 4
+
+
 def test_checkpoint_restart_bit_identical(tmp_path):
     """Crash/restart: the restored trainer reproduces the uninterrupted
     run exactly (deterministic data pipeline + exact state restore)."""
