@@ -9,6 +9,8 @@ import time
 
 
 def main() -> None:
+    # benchmarks.scenarios_grid is not in this list: it runs (gated, with
+    # its BENCH_scenarios.json artifact) in its own CI job.
     from benchmarks import (fig4_continual, fig5a_quant_error,
                             fig5b_endurance, fig5c_latency, fig5d_power,
                             kernel_bench, roofline_bench,

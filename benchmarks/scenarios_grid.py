@@ -1,0 +1,125 @@
+"""Scenario × backend grid — the continual-learning sweep, compiled.
+
+Runs the ``repro.scenarios`` suite through the compiled scan-over-tasks
+sweep on each device substrate and emits ``BENCH_scenarios.json``:
+
+  cells      avg accuracy / forgetting / BWT / FWT per scenario × backend,
+             plus live-metered mW and GOPS/W on metered substrates
+  speedup    compiled sweep vs the per-task Python loop, end-to-end
+             wall-clock on the paper's 28×100×10 config (gate: ≥ 2×)
+  parity     compiled R equals the loop's R bit-for-bit on
+             permuted × ideal (tight tolerance: exact)
+
+``--fast`` shrinks to a 2-scenario × 2-backend smoke grid for CI.
+Exit status is nonzero when the parity or ≥2× speedup gate fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.continual import ReplaySpec, TrainerSpec, run_continual
+from repro.scenarios import (build_scenario, run_compiled, run_sweep,
+                             scenario_miru_config)
+
+from benchmarks.common import emit, save_json
+
+FAST_GRID = dict(scenarios=("permuted", "rotated"),
+                 backends=("ideal", "analog_state"),
+                 sizes=dict(n_tasks=3, n_train=192, n_test=96),
+                 epochs=2, n_h=100)
+FULL_GRID = dict(scenarios=("permuted", "split", "rotated", "noisy_label",
+                            "drift", "class_incremental", "streaming"),
+                 backends=("ideal", "wbs", "analog", "analog_state",
+                           "cmos"),
+                 sizes=dict(n_tasks=4, n_train=500, n_test=200),
+                 epochs=4, n_h=100)
+
+
+def measure_speedup(epochs: int = 3, n_tasks: int = 3, n_train: int = 640
+                    ) -> dict:
+    """Per-task Python loop vs compiled scan-over-tasks, same workload
+    (28×100×10, ideal backend), end-to-end wall-clock including schedule
+    building and compilation — the honest deployment comparison."""
+    tasks = build_scenario("permuted", seed=0, n_tasks=n_tasks,
+                           n_train=n_train, n_test=128)
+    cfg = scenario_miru_config(tasks, n_h=100)
+    trainer = TrainerSpec(algo="dfa", epochs_per_task=epochs)
+    rspec = ReplaySpec(capacity=512)
+
+    t0 = time.perf_counter()
+    loop = run_continual(cfg, trainer, tasks, replay=rspec, device="ideal")
+    loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    comp = run_compiled(cfg, trainer, tasks, replay=rspec, device="ideal")
+    compiled_s = time.perf_counter() - t0
+
+    parity = bool(np.array_equal(loop["R"], comp["R"])
+                  and loop["MA"] == comp["MA"])
+    return {
+        "config": {"n_x": 28, "n_h": 100, "n_y": 10, "n_tasks": n_tasks,
+                   "n_train": n_train, "epochs": epochs,
+                   "steps": n_tasks * comp["steps_per_task"]},
+        "loop_s": loop_s,
+        "compiled_s": compiled_s,
+        "compiled_exec_s": comp["wall_s"],
+        "speedup": loop_s / compiled_s,
+        "parity_bitwise": parity,
+        "MA": comp["MA"],
+    }
+
+
+def run(fast: bool = True) -> dict:
+    p = FAST_GRID if fast else FULL_GRID
+    t0 = time.time()
+    grid = run_sweep(p["scenarios"], p["backends"],
+                     TrainerSpec(algo="dfa", epochs_per_task=p["epochs"]),
+                     ReplaySpec(capacity=512), n_h=p["n_h"],
+                     scenario_kwargs=dict(p["sizes"]))
+    for key, cell in grid["cells"].items():
+        extra = (f";{cell['power_mw']:.1f}mW;"
+                 f"{cell['gops_per_w']:.0f}GOPS/W"
+                 if "power_mw" in cell else "")
+        emit(f"scenarios/{key}", (cell.get("wall_s") or 0) * 1e6,
+             f"MA={cell['MA']:.3f};"
+             f"F={cell['metrics']['forgetting']:+.3f};"
+             f"BWT={cell['metrics']['backward_transfer']:+.3f};"
+             f"FWT={cell['metrics'].get('forward_transfer', 0):+.3f}"
+             f"{extra}")
+    grid["grid_seconds"] = time.time() - t0
+
+    sp = measure_speedup()
+    grid["speedup"] = sp
+    emit("scenarios/compiled_speedup", sp["compiled_s"] * 1e6,
+         f"{sp['speedup']:.2f}x_vs_loop({sp['loop_s']:.1f}s);"
+         f"parity={sp['parity_bitwise']}")
+    grid["gates"] = {"speedup_ge_2x": sp["speedup"] >= 2.0,
+                     "parity_bitwise": sp["parity_bitwise"]}
+    save_json("scenarios_grid", grid)
+    return grid
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="2×2 smoke grid; emit BENCH_scenarios.json")
+    ap.add_argument("--full", action="store_true",
+                    help="full 7-scenario × 5-backend grid")
+    args = ap.parse_args()
+    out = run(fast=not args.full)
+    Path("BENCH_scenarios.json").write_text(
+        json.dumps(out, indent=1, default=float))
+    print("wrote BENCH_scenarios.json")
+    ok = all(out["gates"].values())
+    if not ok:
+        print(f"GATE FAILURE: {out['gates']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

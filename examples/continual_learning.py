@@ -5,11 +5,17 @@ K-WTA-sparsified noisy crossbar writes, WBS-quantized inference, and
 device telemetry: power, GOPS/W and the lifetime projection are metered
 from the run's own backend activity (repro.telemetry).
 
-The algorithm (--algo adam|dfa) and the substrate (--backend, any name in
-the repro.backends registry) compose freely; the legacy combined trainer
-strings (adam | dfa | dfa_hw) keep working via --trainer.
+The task stream (--scenario, any name in the repro.scenarios registry),
+the algorithm (--algo adam|dfa) and the substrate (--backend, any name
+in the repro.backends registry) compose freely. By default the whole
+sequence runs compiled — one jit, scan-over-tasks
+(repro.scenarios.sweep) — and reports forgetting/transfer metrics next
+to accuracy; --loop uses the per-task Python loop instead (bit-identical
+on the ideal backend). The legacy combined trainer strings
+(adam | dfa | dfa_hw) keep working via --trainer.
 
     PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog_state
+    PYTHONPATH=src python examples/continual_learning.py --scenario rotated --seeds 3
     PYTHONPATH=src python examples/continual_learning.py --trainer dfa_hw   # legacy
 """
 import argparse
@@ -19,7 +25,9 @@ from repro.backends import available_backends, get_backend
 from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
                                   run_continual)
 from repro.core.miru import MiRUConfig
-from repro.data.synthetic import make_permuted_tasks
+from repro.scenarios import (available_scenarios, build_scenario,
+                             get_scenario, run_compiled,
+                             scenario_miru_config)
 from repro.telemetry import format_report, telemetry_report
 
 
@@ -34,16 +42,25 @@ def main():
                     choices=list(available_backends()),
                     help="device substrate from the backend registry "
                          "(default: analog_state)")
+    ap.add_argument("--scenario", default="permuted",
+                    choices=list(available_scenarios()),
+                    help="task stream from the scenario registry")
     ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--hidden", type=int, default=100)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="replicate over N seeds inside one vmapped "
+                         "compiled run (metrics mean ± std)")
+    ap.add_argument("--loop", action="store_true",
+                    help="use the per-task Python loop instead of the "
+                         "compiled scan-over-tasks sweep")
     ap.add_argument("--no-telemetry", action="store_true",
                     help="skip activity metering + the energy report")
     args = ap.parse_args()
 
-    tasks = make_permuted_tasks(seed=0, n_tasks=args.tasks, n_train=600,
-                                n_test=200)
-    cfg = MiRUConfig(n_x=28, n_h=args.hidden, n_y=10)
+    tasks = build_scenario(args.scenario, seed=0, n_tasks=args.tasks,
+                           n_train=600, n_test=200)
+    cfg = scenario_miru_config(tasks, n_h=args.hidden)
 
     if args.trainer is not None:
         if args.algo is not None or args.backend is not None:
@@ -64,12 +81,29 @@ def main():
         backend = get_backend(
             name, spec_overrides=dict(track_endurance=algo != "adam"))
 
+    # Scenario protocols can pin trainer fields (streaming is single-pass).
+    overrides = get_scenario(args.scenario).trainer_overrides
+    if overrides:
+        import dataclasses
+        trainer = dataclasses.replace(trainer, **overrides)
+
     if not args.no_telemetry:
         backend.telemetry.enable()
-    n_steps = args.tasks * args.epochs * (600 // 32)
-    print(f"algo={trainer.algo}  backend={backend.name}  "
-          f"tasks={args.tasks}  ~{n_steps} training steps")
-    res = run_continual(cfg, trainer, tasks, replay=replay, device=backend)
+    n_steps = args.tasks * trainer.epochs_per_task * (600 // 32)
+    mode = "python loop" if args.loop else "compiled scan-over-tasks"
+    print(f"scenario={args.scenario}  algo={trainer.algo}  "
+          f"backend={backend.name}  tasks={args.tasks}  "
+          f"~{n_steps} training steps  [{mode}]")
+    if args.loop:
+        if args.seeds > 1:
+            ap.error("--seeds replicates inside the compiled sweep; "
+                     "drop --loop to use it")
+        res = run_continual(cfg, trainer, tasks, replay=replay,
+                            device=backend)
+    else:
+        seeds = list(range(args.seeds)) if args.seeds > 1 else None
+        res = run_compiled(cfg, trainer, tasks, replay=replay,
+                           device=backend, seeds=seeds)
 
     print("\naccuracy after each task (mean over seen tasks):")
     for t, a in enumerate(res["acc_after_each"]):
@@ -77,6 +111,19 @@ def main():
     print(f"final mean accuracy (eq. 20): {res['MA']:.3f}")
     print(f"final per-task accuracies:   "
           f"{[round(float(a), 3) for a in res['R'][-1]]}")
+    if "metrics" in res:
+        m = res["metrics"]
+        std = res.get("metrics_std", {})
+
+        def fmt(k):
+            s = f"{m[k]:+.3f}"
+            return s + (f" ± {std[k]:.3f}" if k in std else "")
+
+        line = (f"forgetting: {fmt('forgetting')}   "
+                f"BWT: {fmt('backward_transfer')}")
+        if "forward_transfer" in m:
+            line += f"   FWT: {fmt('forward_transfer')}"
+        print(line)
 
     m = M2RUCostModel(n_h=args.hidden)
     if backend.telemetry.enabled:

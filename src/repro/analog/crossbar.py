@@ -30,7 +30,12 @@ class CrossbarSpec:
     w_clip: float = 1.0          # |logical weight| mapped to full window
     write_levels: Optional[int] = None  # finite programming resolution
     prog_sigma: float = 0.0      # initial-programming variability (pairs)
-    drift_rate: float = 0.0      # per-update conductance relaxation → g_off
+    drift_rate: float = 0.0      # per-tick conductance relaxation → g_off
+    # Retention-drift cadence: apply drift every ``drift_cadence`` updates,
+    # with ``drift_cadence`` ticks per application — total relaxation over
+    # a run is cadence-invariant ((1−rate)^N after N updates), but the
+    # per-update modeling cost amortizes. 1 = the original per-update tick.
+    drift_cadence: int = 1
 
     @property
     def g_on(self) -> float:

@@ -35,6 +35,16 @@ class EnduranceTracker:
             self.record(name, np.asarray(m))
         self.updates_applied += 1
 
+    def record_counts(self, counts: dict[str, np.ndarray],
+                      updates: int) -> None:
+        """Fold in per-device write-count maps accumulated over ``updates``
+        weight-update rounds (the compiled sweep sums its write masks
+        inside the scan and records once per run). Equivalent to
+        ``updates`` calls to :meth:`record_update` with the same totals."""
+        for name, c in counts.items():
+            self.record(name, np.asarray(c))
+        self.updates_applied += int(updates)
+
     # ------------------------------------------------------------------
     # Serialization (checkpoints) — lifetime projections survive restarts
     # ------------------------------------------------------------------

@@ -39,6 +39,7 @@ from repro.backends.analog import AnalogBackend
 from repro.backends.base import DeviceSpec, PyTree
 from repro.backends.registry import register_backend
 from repro.backends.wbs import WBSBackend, _ste_matmul
+from repro.telemetry import meters
 
 
 @register_backend("analog_state")
@@ -76,8 +77,13 @@ class AnalogStateBackend(AnalogBackend):
                        if self._is_crossbar_param(n, p))
         keys = jax.random.split(key, len(names)) if key is not None \
             else [None] * len(names)
-        return {name: program_pair(k, params[name], cb)
-                for k, name in zip(keys, names)}
+        state = {name: program_pair(k, params[name], cb)
+                 for k, name in zip(keys, names)}
+        if cb.drift_rate > 0 and cb.drift_cadence > 1:
+            # Update counter for the drift cadence — threaded through the
+            # train loop (and scans) with the pairs.
+            state["_ticks"] = jnp.zeros((), jnp.int32)
+        return state
 
     # ------------------------------------------------------------------
     def _vmm_impl(self, drive, weights, key, state, tag):
@@ -107,20 +113,49 @@ class AnalogStateBackend(AnalogBackend):
         if state is None or self._ideal_device():
             new_params, applied = self.apply_update(params, updates, key)
             if state is not None:
-                # Keep the pairs an exact mirror of the logical weights.
-                state = {n: program_pair(None, new_params[n], self.crossbar)
+                # Keep the pairs an exact mirror of the logical weights
+                # (the cadence counter, when present, carries through).
+                state = {n: (program_pair(None, new_params[n],
+                                          self.crossbar)
+                             if n in new_params else state[n])
                          for n in state}
             return new_params, applied, state
         cb = self.crossbar
         if key is None:
             raise ValueError("analog_state apply_update needs a PRNG key "
                              "(write variability is stochastic)")
+        # Retention-drift cadence: with drift_cadence == 1 every update
+        # drifts one tick (the original behavior, bit-identical); with a
+        # cadence k > 1 the counter in the device state fires every k-th
+        # update and applies k ticks at once — the same total relaxation,
+        # amortized. Telemetry meters the cadence-amortized tick per
+        # update (exact whenever k divides the update count).
+        cadence = max(int(cb.drift_cadence), 1)
+        fire = None
+        new_state = dict(state)
+        if cb.drift_rate > 0:
+            if cadence > 1:
+                ticks = state["_ticks"] + 1
+                fire = ticks >= cadence
+                new_state["_ticks"] = jnp.where(fire, 0, ticks)
+            self.telemetry.record({meters.DRIFT_TICKS: 1},
+                                  anchor=next(iter(updates.values())))
+
+        def _drift(pair):
+            if cb.drift_rate <= 0:
+                return pair
+            if cadence == 1:
+                return drift_pair(pair, cb)
+            drifted = drift_pair(pair, cb, n_ticks=cadence)
+            return {k: jnp.where(fire, drifted[k], pair[k])
+                    for k in pair}
+
         keys = jax.random.split(key, len(params))
-        new_params, applied, new_state = {}, {}, dict(state)
+        new_params, applied = {}, {}
         for kw, (name, p) in zip(keys, sorted(params.items())):
             dw = updates[name]
             if name in state:
-                pair = drift_pair(state[name], cb)       # retention tick
+                pair = _drift(state[name])               # retention tick(s)
                 pair = update_pair(kw, pair, dw, cb)     # noisy write
                 w_read = pair_weights(pair, cb)          # device read-back
                 # Unwritten devices: carry the logical value through

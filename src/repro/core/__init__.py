@@ -14,7 +14,9 @@ from repro.core.replay import (ReservoirSampler, Xorshift32, ReplayBuffer,
                                dequantize)
 from repro.core.dfa import (dfa_grads, bptt_grads, miru_loss,
                             grad_alignment)
-from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
+from repro.core.continual import (BatchSchedule, ContinualConfig,
+                                  ReplaySpec, TrainerSpec,
+                                  build_batch_schedule,
                                   miru_forward_device, run_continual,
                                   evaluate_tasks)
 
@@ -23,6 +25,7 @@ __all__ = [
     "miru_apply_readout", "kwta", "kwta_mask", "ReservoirSampler",
     "Xorshift32", "ReplayBuffer", "stochastic_quantize", "uniform_quantize",
     "dequantize", "dfa_grads", "bptt_grads", "miru_loss", "grad_alignment",
-    "ContinualConfig", "TrainerSpec", "ReplaySpec", "miru_forward_device",
-    "run_continual", "evaluate_tasks",
+    "ContinualConfig", "TrainerSpec", "ReplaySpec", "BatchSchedule",
+    "build_batch_schedule", "miru_forward_device", "run_continual",
+    "evaluate_tasks",
 ]

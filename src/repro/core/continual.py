@@ -236,18 +236,20 @@ def hw_miru_forward(params: dict[str, jax.Array], cfg: MiRUConfig,
 # Train/eval steps (jit-compiled once per trainer × backend)
 # ---------------------------------------------------------------------------
 
-def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
-                backend: DeviceBackend):
-    """Build jitted (train_step, eval_fn, opt) for the learning rule on the
-    given device backend. Both algorithms share one forward and one write
-    path — the backend supplies the substrate-specific pieces."""
+def _make_raw_steps(cfg: MiRUConfig, trainer: TrainerSpec,
+                    backend: DeviceBackend):
+    """Build *unjitted* (train_step, eval_fn, opt) for the learning rule on
+    the given device backend. Both algorithms share one forward and one
+    write path — the backend supplies the substrate-specific pieces.
+    ``run_continual`` jits these per call; the compiled scenario sweep
+    (`repro.scenarios.sweep`) traces the same functions inside its
+    scan-over-tasks, which is what keeps the two paths bit-comparable."""
     opt = adam(trainer.adam_lr)
 
     def fwd(p, c, xs, k, st):
         return miru_forward_device(p, c, xs, k, backend, state=st)
 
     if trainer.algo == "adam":
-        @jax.jit
         def train_step(params, opt_state, key, x, y, dev_state):
             k_fwd, k_wr = jax.random.split(key)
 
@@ -263,7 +265,6 @@ def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
             return params, opt_state_, loss, applied, dev_state
 
     elif trainer.algo == "dfa":
-        @jax.jit
         def train_step(params, opt_state, key, x, y, dev_state):
             psi = opt_state["psi"]
             k_fwd, k_wr = jax.random.split(key)
@@ -284,13 +285,117 @@ def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
         raise ValueError(f"unknown trainer algo {trainer.algo!r}; "
                          f"expected 'adam' or 'dfa'")
 
-    @jax.jit
     def evaluate(params, key, x, y, dev_state):
         logits, _ = fwd(params, cfg, x, key, dev_state)
         backend.telemetry.emit_pending()
         return acc_fn(logits, y)
 
     return train_step, evaluate, opt
+
+
+def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
+                backend: DeviceBackend):
+    """Jitted (train_step, eval_fn, opt) — see :func:`_make_raw_steps`."""
+    train_step, evaluate, opt = _make_raw_steps(cfg, trainer, backend)
+    return jax.jit(train_step), jax.jit(evaluate), opt
+
+
+def _init_run(cfg: MiRUConfig, trainer: TrainerSpec,
+              backend: DeviceBackend):
+    """The run's initial state — params, Ψ, device state — and the live
+    training PRNG key. One definition shared by :func:`run_continual` and
+    the compiled sweep so the two consume identical key streams."""
+    key = jax.random.PRNGKey(trainer.seed)
+    key, k_param, k_psi = jax.random.split(key, 3)
+    params = init_miru_params(k_param, cfg)
+    psi = init_dfa_feedback(k_psi, cfg)
+    # Device-state key folded off to the side so the training/eval PRNG
+    # streams stay bit-identical to the stateless backends'.
+    dev_state = backend.init_device_state(
+        params, jax.random.fold_in(key, 0x0DE5))
+    return key, params, psi, dev_state
+
+
+# ---------------------------------------------------------------------------
+# Batch schedule — the replay-mixed training stream, materialized
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchSchedule:
+    """The full train-batch stream for a task sequence.
+
+    Batch content — epoch shuffles, reservoir offers, quantized rehearsal
+    draws — is a pure function of (trainer, replay, tasks): none of it
+    depends on training state. So the entire replay-mixed stream can be
+    materialized up front, and both :func:`run_continual` (per-batch
+    Python loop) and the compiled sweep (`lax.scan` over tasks) consume
+    the *same* arrays, which is what makes their results bit-comparable.
+
+    ``x[t]`` is (S_t, B, T, F); ``y[t]`` is (S_t, B).
+    """
+    x: list[np.ndarray]
+    y: list[np.ndarray]
+
+    @property
+    def steps_per_task(self) -> list[int]:
+        return [xt.shape[0] for xt in self.x]
+
+    @property
+    def uniform(self) -> bool:
+        """True when every task has the same step count and batch shape —
+        the precondition for stacking into a scan-over-tasks."""
+        shapes = {xt.shape for xt in self.x}
+        return len(shapes) == 1
+
+
+def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
+                         tasks: list[TaskData]) -> BatchSchedule:
+    """Materialize the replay-mixed batch stream ``run_continual`` trains
+    on, consuming the host RNG streams (epoch shuffle, reservoir sampler,
+    stochastic quantizer) in exactly the order the training loop does."""
+    from repro.core.replay import ReplayBuffer
+
+    T, F = tasks[0].x_train.shape[1:]
+    bs = trainer.batch_size
+    buffer = ReplayBuffer(replay.capacity, (T, F),
+                          n_bits=replay.bits, seed=trainer.seed)
+    host_rng = np.random.default_rng(trainer.seed + 1)
+
+    xs_all: list[np.ndarray] = []
+    ys_all: list[np.ndarray] = []
+    for t, task in enumerate(tasks):
+        n = task.x_train.shape[0]
+        xs_t: list[np.ndarray] = []
+        ys_t: list[np.ndarray] = []
+        for _ in range(trainer.epochs_per_task):
+            order = host_rng.permutation(n)
+            for s in range(0, n - bs + 1, bs):
+                idx = order[s:s + bs]
+                xb = task.x_train[idx]
+                yb = task.y_train[idx]
+                # Mix in replay (after the first task has populated it);
+                # replay occupies the tail n_rep rows of the batch.
+                n_rep = 0
+                if t > 0 and buffer.size > 0 and replay.ratio > 0:
+                    n_rep = int(round(bs * replay.ratio))
+                    if n_rep > 0:
+                        xr, yr = buffer.sample(host_rng, n_rep)
+                        xb = np.concatenate([xb[:bs - n_rep],
+                                             xr.reshape(-1, T, F)])
+                        yb = np.concatenate([yb[:bs - n_rep], yr])
+                # Reservoir-sample only the *fresh* rows into the buffer —
+                # all of them (on task 0 no replay was mixed, so the whole
+                # batch is fresh; never re-offer rehearsed rows).
+                n_fresh = bs - n_rep
+                if n_fresh > 0:
+                    buffer.add_batch(xb[:n_fresh], yb[:n_fresh])
+                xs_t.append(xb)
+                ys_t.append(yb)
+        xs_all.append(np.stack(xs_t) if xs_t
+                      else np.zeros((0, bs, T, F), np.float32))
+        ys_all.append(np.stack(ys_t) if ys_t
+                      else np.zeros((0, bs), np.int32))
+    return BatchSchedule(x=xs_all, y=ys_all)
 
 
 def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
@@ -345,18 +450,9 @@ def run_continual(cfg: MiRUConfig,
     a registered backend name or instance — supplied separately), or a
     legacy :class:`ContinualConfig` that maps onto all three.
     """
-    from repro.core.replay import ReplayBuffer
-
     trainer, rspec, backend = _resolve_specs(spec, replay, device)
 
-    key = jax.random.PRNGKey(trainer.seed)
-    key, k_param, k_psi = jax.random.split(key, 3)
-    params = init_miru_params(k_param, cfg)
-    psi = init_dfa_feedback(k_psi, cfg)
-    # Device-state key folded off to the side so the training/eval PRNG
-    # streams stay bit-identical to the stateless backends'.
-    dev_state = backend.init_device_state(
-        params, jax.random.fold_in(key, 0x0DE5))
+    key, params, psi, dev_state = _init_run(cfg, trainer, backend)
 
     train_step, evaluate, opt = _make_steps(cfg, trainer, backend)
     if trainer.algo == "adam":
@@ -364,46 +460,23 @@ def run_continual(cfg: MiRUConfig,
     else:
         opt_state = {"psi": psi}
 
-    T, F = tasks[0].x_train.shape[1:]
-    buffer = ReplayBuffer(rspec.capacity, (T, F),
-                          n_bits=rspec.bits, seed=trainer.seed)
-    host_rng = np.random.default_rng(trainer.seed + 1)
+    # The replay-mixed batch stream is training-state-independent, so it
+    # is materialized up front; the compiled sweep consumes the same
+    # schedule, which keeps the two paths bit-comparable.
+    schedule = build_batch_schedule(trainer, rspec, tasks)
 
     n_tasks = len(tasks)
     R = np.zeros((n_tasks, n_tasks))
     losses: list[float] = []
 
-    for t, task in enumerate(tasks):
-        n = task.x_train.shape[0]
-        bs = trainer.batch_size
-        for _ in range(trainer.epochs_per_task):
-            order = host_rng.permutation(n)
-            for s in range(0, n - bs + 1, bs):
-                idx = order[s:s + bs]
-                xb = task.x_train[idx]
-                yb = task.y_train[idx]
-                # Mix in replay (after the first task has populated it);
-                # replay occupies the tail n_rep rows of the batch.
-                n_rep = 0
-                if t > 0 and buffer.size > 0 and rspec.ratio > 0:
-                    n_rep = int(round(bs * rspec.ratio))
-                    if n_rep > 0:
-                        xr, yr = buffer.sample(host_rng, n_rep)
-                        xb = np.concatenate([xb[:bs - n_rep],
-                                             xr.reshape(-1, T, F)])
-                        yb = np.concatenate([yb[:bs - n_rep], yr])
-                key, k_step = jax.random.split(key)
-                params, opt_state, loss, applied, dev_state = train_step(
-                    params, opt_state, k_step, jnp.asarray(xb),
-                    jnp.asarray(yb), dev_state)
-                losses.append(float(loss))
-                backend.record_endurance(applied)
-                # Reservoir-sample only the *fresh* rows into the buffer —
-                # all of them (on task 0 no replay was mixed, so the whole
-                # batch is fresh; never re-offer rehearsed rows).
-                n_fresh = bs - n_rep
-                if n_fresh > 0:
-                    buffer.add_batch(xb[:n_fresh], yb[:n_fresh])
+    for t in range(n_tasks):
+        for s in range(schedule.x[t].shape[0]):
+            key, k_step = jax.random.split(key)
+            params, opt_state, loss, applied, dev_state = train_step(
+                params, opt_state, k_step, jnp.asarray(schedule.x[t][s]),
+                jnp.asarray(schedule.y[t][s]), dev_state)
+            losses.append(float(loss))
+            backend.record_endurance(applied)
         key, k_eval = jax.random.split(key)
         R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t,
                                       dev_state)

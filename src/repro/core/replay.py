@@ -9,6 +9,7 @@ of the quantizers for the in-graph replay path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -105,6 +106,22 @@ def lfsr_stochastic_quantize(x: np.ndarray, n_bits: int, seed: int = 1
     return out.reshape(x.shape)
 
 
+@functools.partial(jax.jit, static_argnums=1)
+def _split_chain(key: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """n sequential ``key, sub = split(key)`` steps in one dispatch.
+    Returns (advanced key, (n, 2) subkeys) — bit-identical to the loop."""
+    def body(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+
+    return jax.lax.scan(body, key, None, length=n)
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def _quantize_many(xs: jax.Array, keys: jax.Array, n_bits: int) -> jax.Array:
+    return jax.vmap(lambda x, k: stochastic_quantize(x, k, n_bits))(xs, keys)
+
+
 # ---------------------------------------------------------------------------
 # Reservoir sampler + replay buffer
 # ---------------------------------------------------------------------------
@@ -167,10 +184,31 @@ class ReplayBuffer:
         return True
 
     def add_batch(self, xs: np.ndarray, ys: np.ndarray) -> int:
-        added = 0
-        for x, y in zip(xs, ys):
-            added += bool(self.add(x, int(y)))
-        return added
+        """Offer a batch to the reservoir. Equivalent to per-example
+        :meth:`add` calls bit-for-bit (same key chain, same quantizer
+        draws — asserted in tests/test_replay.py), but all accepted
+        examples are quantized in one vmapped dispatch instead of one
+        jax call per example — the schedule-building hot path."""
+        slots: list[int] = []
+        keep: list[int] = []
+        for i in range(len(xs)):
+            slot = self.sampler.offer()
+            if slot is None:
+                continue
+            slots.append(slot)
+            keep.append(i)
+        if not slots:
+            return 0
+        # The exact sequential key chain self._qkey would have walked,
+        # computed in one scan dispatch; then one vmapped quantize.
+        self._qkey, subs = _split_chain(self._qkey, len(slots))
+        q = np.asarray(_quantize_many(
+            jnp.asarray(np.ascontiguousarray(xs[keep])), subs, self.n_bits))
+        for slot, qi, i in zip(slots, q, keep):
+            self._feat[slot] = qi
+            self._label[slot] = int(ys[i])
+            self.size = min(self.size + 1, self.capacity)
+        return len(slots)
 
     def sample(self, rng: np.random.Generator, batch: int
                ) -> tuple[np.ndarray, np.ndarray]:

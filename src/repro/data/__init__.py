@@ -2,14 +2,21 @@
 
 MNIST / CIFAR-10 are not available offline; `synthetic` provides matched-
 geometry substitutes (DESIGN.md §8): permuted-prototype sequence streams
-(28 steps × 28 features, 10 classes) and split Gaussian-mixture "ResNet-18
-feature" streams (512-d), both organized as domain-incremental task
-sequences. `pipeline` provides the sharded, deterministic, restart-safe
-batch iterator used by the LM trainer.
+(28 steps × 28 features, 10 classes), split Gaussian-mixture "ResNet-18
+feature" streams (512-d), and the additional continual-learning streams
+(rotated, noisy-label, gradual drift, class-incremental, online
+streaming) registered in `repro.scenarios`. `pipeline` provides the
+sharded, deterministic, restart-safe batch iterator used by the LM
+trainer and the streaming scenario.
 """
-from repro.data.synthetic import (make_permuted_tasks, make_split_tasks,
-                                  TaskData, lm_token_batch)
+from repro.data.synthetic import (TaskData, lm_token_batch,
+                                  make_class_incremental_tasks,
+                                  make_drift_tasks, make_noisy_label_tasks,
+                                  make_permuted_tasks, make_rotated_tasks,
+                                  make_split_tasks, make_streaming_tasks)
 from repro.data.pipeline import ShardedBatcher, DataState
 
-__all__ = ["make_permuted_tasks", "make_split_tasks", "TaskData",
-           "lm_token_batch", "ShardedBatcher", "DataState"]
+__all__ = ["make_permuted_tasks", "make_split_tasks", "make_rotated_tasks",
+           "make_noisy_label_tasks", "make_drift_tasks",
+           "make_class_incremental_tasks", "make_streaming_tasks",
+           "TaskData", "lm_token_batch", "ShardedBatcher", "DataState"]

@@ -96,6 +96,204 @@ def make_split_tasks(seed: int, n_tasks: int = 5, n_train: int = 1000,
 
 
 # ---------------------------------------------------------------------------
+# Additional continual-learning streams (repro.scenarios registry)
+# ---------------------------------------------------------------------------
+
+def _rotate_images(x: np.ndarray, angle_deg: float) -> np.ndarray:
+    """Bilinear rotation of (N, side, side) images about the center.
+    Out-of-frame samples read 0 (background). angle 0 is exact identity."""
+    if angle_deg == 0.0:
+        return x.copy()
+    n, side, _ = x.shape
+    th = np.deg2rad(angle_deg)
+    c, s = np.cos(th), np.sin(th)
+    ctr = (side - 1) / 2.0
+    rr, cc = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    src_r = c * (rr - ctr) + s * (cc - ctr) + ctr
+    src_c = -s * (rr - ctr) + c * (cc - ctr) + ctr
+    r0 = np.floor(src_r).astype(np.int64)
+    c0 = np.floor(src_c).astype(np.int64)
+    fr = (src_r - r0).astype(np.float32)
+    fc = (src_c - c0).astype(np.float32)
+    out = np.zeros_like(x)
+    for dr, dc, w in ((0, 0, (1 - fr) * (1 - fc)), (0, 1, (1 - fr) * fc),
+                      (1, 0, fr * (1 - fc)), (1, 1, fr * fc)):
+        r = r0 + dr
+        col = c0 + dc
+        ok = (r >= 0) & (r < side) & (col >= 0) & (col < side)
+        rs = np.clip(r, 0, side - 1)
+        cs = np.clip(col, 0, side - 1)
+        out += (w * ok) * x[:, rs, cs]
+    return out
+
+
+def make_rotated_tasks(seed: int, n_tasks: int = 5, n_train: int = 1000,
+                       n_test: int = 400, side: int = 28,
+                       n_classes: int = 10, noise: float = 0.25,
+                       max_angle: float = 90.0) -> list[TaskData]:
+    """Rotated-image domain-incremental stream: one dataset, task t viewed
+    under a rotation of t/(n_tasks-1)·max_angle degrees. Task 0 is the
+    unrotated identity view (rotated-MNIST protocol)."""
+    rng = np.random.default_rng(seed)
+    dim = side * side
+    x_tr, y_tr, x_te, y_te = _prototype_dataset(
+        rng, n_classes, dim, n_train, n_test, noise)
+    x_tr = x_tr.reshape(-1, side, side)
+    x_te = x_te.reshape(-1, side, side)
+    angles = (np.linspace(0.0, max_angle, n_tasks) if n_tasks > 1
+              else np.zeros(1))
+    tasks = []
+    for t, ang in enumerate(angles):
+        tasks.append(TaskData(_rotate_images(x_tr, float(ang)), y_tr,
+                              _rotate_images(x_te, float(ang)), y_te,
+                              task_id=t))
+    return tasks
+
+
+def make_noisy_label_tasks(seed: int, n_tasks: int = 5, n_train: int = 1000,
+                           n_test: int = 400, side: int = 28,
+                           n_classes: int = 10, noise: float = 0.25,
+                           max_flip: float = 0.4) -> list[TaskData]:
+    """Label-noise robustness stream: a fixed domain whose *train* labels
+    are corrupted at a rate ramping 0 → max_flip across tasks (flipped
+    uniformly to another class). Test labels stay clean, so R[t, i] reads
+    how well learning survives increasingly unreliable supervision."""
+    rng = np.random.default_rng(seed)
+    dim = side * side
+    rates = (np.linspace(0.0, max_flip, n_tasks) if n_tasks > 1
+             else np.zeros(1))
+    protos = rng.uniform(0.15, 0.85, size=(n_classes, dim)).astype(np.float32)
+
+    def draw(n):
+        y = rng.integers(0, n_classes, size=n)
+        x = protos[y] + noise * rng.standard_normal((n, dim)).astype(
+            np.float32)
+        return np.clip(x, 0.0, 1.0).reshape(-1, side, side), \
+            y.astype(np.int32)
+
+    tasks = []
+    for t, rate in enumerate(rates):
+        x_tr, y_tr = draw(n_train)
+        x_te, y_te = draw(n_test)
+        flip = rng.random(n_train) < rate
+        shift = rng.integers(1, n_classes, size=n_train).astype(np.int32)
+        y_noisy = np.where(flip, (y_tr + shift) % n_classes, y_tr)
+        tasks.append(TaskData(x_tr, y_noisy.astype(np.int32), x_te, y_te,
+                              task_id=t))
+    return tasks
+
+
+def make_drift_tasks(seed: int, n_tasks: int = 5, n_train: int = 1000,
+                     n_test: int = 400, side: int = 28,
+                     n_classes: int = 10, noise: float = 0.25
+                     ) -> list[TaskData]:
+    """Gradual domain drift: class prototypes interpolate linearly from a
+    start set to an independently drawn end set across the task sequence —
+    task t samples around protos_t = (1−α_t)·A + α_t·B, α_t = t/(n−1).
+    Neighboring tasks overlap heavily; distant tasks do not."""
+    rng = np.random.default_rng(seed)
+    dim = side * side
+    protos_a = rng.uniform(0.15, 0.85, (n_classes, dim)).astype(np.float32)
+    protos_b = rng.uniform(0.15, 0.85, (n_classes, dim)).astype(np.float32)
+    alphas = (np.linspace(0.0, 1.0, n_tasks) if n_tasks > 1
+              else np.zeros(1))
+
+    tasks = []
+    for t, a in enumerate(alphas):
+        protos = ((1.0 - a) * protos_a + a * protos_b).astype(np.float32)
+
+        def draw(n):
+            y = rng.integers(0, n_classes, size=n)
+            x = protos[y] + noise * rng.standard_normal((n, dim)).astype(
+                np.float32)
+            return np.clip(x, 0.0, 1.0).reshape(-1, side, side), \
+                y.astype(np.int32)
+
+        x_tr, y_tr = draw(n_train)
+        x_te, y_te = draw(n_test)
+        tasks.append(TaskData(x_tr, y_tr, x_te, y_te, task_id=t))
+    return tasks
+
+
+def make_class_incremental_tasks(seed: int, n_tasks: int = 5,
+                                 n_train: int = 1000, n_test: int = 400,
+                                 side: int = 28, classes_per_task: int = 2,
+                                 noise: float = 0.25) -> list[TaskData]:
+    """Class-incremental stream with a (logically) expanding head: task t
+    introduces classes [t·c, (t+1)·c) with *global* labels over the full
+    n_tasks·c-way output. The model allocates the full head up front (the
+    standard compiled-friendly realization of head expansion — unseen
+    logits just stay untrained), so shapes are scan-uniform."""
+    rng = np.random.default_rng(seed)
+    dim = side * side
+    n_classes = classes_per_task * n_tasks
+    protos = rng.uniform(0.15, 0.85, (n_classes, dim)).astype(np.float32)
+
+    tasks = []
+    for t in range(n_tasks):
+        lo = t * classes_per_task
+
+        def draw(n):
+            y = lo + rng.integers(0, classes_per_task, size=n)
+            x = protos[y] + noise * rng.standard_normal((n, dim)).astype(
+                np.float32)
+            return np.clip(x, 0.0, 1.0).reshape(-1, side, side), \
+                y.astype(np.int32)
+
+        x_tr, y_tr = draw(n_train)
+        x_te, y_te = draw(n_test)
+        tasks.append(TaskData(x_tr, y_tr, x_te, y_te, task_id=t))
+    return tasks
+
+
+def make_streaming_tasks(seed: int, n_tasks: int = 6, n_train: int = 256,
+                         n_test: int = 128, side: int = 28,
+                         n_classes: int = 10, noise: float = 0.25
+                         ) -> list[TaskData]:
+    """Online single-pass streaming regime: a continuous example stream
+    chopped into ``n_tasks`` segments, each under a fresh pixel
+    permutation. Every batch is a pure function of (seed, step) — built
+    through :class:`repro.data.pipeline.ShardedBatcher` — so any segment
+    is restart-safe and bit-reproducible. The scenario registry marks this
+    stream single-pass: the sweep trains one epoch per segment regardless
+    of the trainer's ``epochs_per_task``."""
+    from repro.data.pipeline import ShardedBatcher
+
+    rng = np.random.default_rng(seed)
+    dim = side * side
+    protos = rng.uniform(0.15, 0.85, (n_classes, dim)).astype(np.float32)
+    perms = np.stack([np.arange(dim)] + [rng.permutation(dim)
+                                         for _ in range(n_tasks - 1)])
+    chunk = 64
+    steps_train = -(-n_train // chunk)          # ceil
+    steps_test = -(-n_test // chunk)
+    steps_per_seg = steps_train + steps_test
+
+    def gen(step_rng: np.random.Generator, step: int
+            ) -> dict[str, np.ndarray]:
+        seg = step // steps_per_seg
+        y = step_rng.integers(0, n_classes, size=chunk)
+        x = protos[y] + noise * step_rng.standard_normal(
+            (chunk, dim)).astype(np.float32)
+        x = np.clip(x, 0.0, 1.0)[:, perms[seg]]
+        return {"x": x.reshape(-1, side, side), "y": y.astype(np.int32)}
+
+    batcher = ShardedBatcher(gen, seed=seed)
+    tasks = []
+    for t in range(n_tasks):
+        base = t * steps_per_seg
+        tr = [batcher.peek(base + i) for i in range(steps_train)]
+        te = [batcher.peek(base + steps_train + i)
+              for i in range(steps_test)]
+        x_tr = np.concatenate([b["x"] for b in tr])[:n_train]
+        y_tr = np.concatenate([b["y"] for b in tr])[:n_train]
+        x_te = np.concatenate([b["x"] for b in te])[:n_test]
+        y_te = np.concatenate([b["y"] for b in te])[:n_test]
+        tasks.append(TaskData(x_tr, y_tr, x_te, y_te, task_id=t))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
 # LM token streams (for the architecture zoo / trainer)
 # ---------------------------------------------------------------------------
 

@@ -12,6 +12,7 @@ MoE on odd slots), superblocks scan.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Optional
 
@@ -133,6 +134,19 @@ def layer_forward(p: dict, cfg: ModelConfig, x: jax.Array,
 # Scanned homogeneous stack
 # ---------------------------------------------------------------------------
 
+def _quant_scope(cfg: ModelConfig, n: int):
+    """Telemetry scale scope for a scanned stack on a quantized substrate:
+    the layer body is traced once but the compiled scan executes it ``n``
+    times, so the per-trace meter deltas recorded by the backend's
+    ``device_vmm`` hooks must be multiplied by ``n`` (the same protocol
+    ``core/continual.py`` uses for its time scan). No-op when the model is
+    unquantized or the substrate's telemetry is disabled."""
+    if cfg.quant_mode == "none":
+        return contextlib.nullcontext()
+    from repro.backends import inference_backend
+    return inference_backend(cfg.quant_mode).telemetry.scaled(n)
+
+
 def init_stack(key: jax.Array, cfg: ModelConfig, n_layers: int,
                is_ssm: bool, is_moe: bool, cross_attn: bool = False
                ) -> PyTree:
@@ -156,7 +170,9 @@ def stack_forward(stacked: PyTree, cfg: ModelConfig, x: jax.Array,
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, stacked)
+    n_layers = jax.tree.leaves(stacked)[0].shape[0]
+    with _quant_scope(cfg, n_layers):
+        x, _ = jax.lax.scan(body, x, stacked)
     return x
 
 
@@ -206,10 +222,11 @@ def stack_decode(stacked: PyTree, caches: PyTree, cfg: ModelConfig,
                                      cfg.quant_mode).astype(h_in.dtype)
         return h_in, new_cache
 
+    n_layers = jax.tree.leaves(stacked)[0].shape[0]
     xs = (stacked, caches, cross_kv) if cross_kv is not None \
-        else (stacked, caches, jnp.zeros((jax.tree.leaves(stacked)[0]
-                                          .shape[0],)))
-    x, new_caches = jax.lax.scan(body, x, xs)
+        else (stacked, caches, jnp.zeros((n_layers,)))
+    with _quant_scope(cfg, n_layers):
+        x, new_caches = jax.lax.scan(body, x, xs)
     return x, new_caches
 
 
@@ -248,7 +265,9 @@ def hybrid_forward(stacked: PyTree, cfg: ModelConfig, x: jax.Array,
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, stacked)
+    n_super = jax.tree.leaves(stacked)[0].shape[0]
+    with _quant_scope(cfg, n_super):
+        x, _ = jax.lax.scan(body, x, stacked)
     return x
 
 
@@ -299,5 +318,7 @@ def hybrid_decode(stacked: PyTree, caches: dict, cfg: ModelConfig,
                                          ).astype(h_in.dtype)
         return h_in, new_cache_sb
 
-    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    n_super = jax.tree.leaves(stacked)[0].shape[0]
+    with _quant_scope(cfg, n_super):
+        x, new_caches = jax.lax.scan(body, x, (stacked, caches))
     return x, new_caches

@@ -1,0 +1,32 @@
+"""Continual-learning scenario suite — registry, metrics, compiled sweep.
+
+- registry: name-keyed scenario builders (permuted, split, rotated,
+            noisy_label, drift, class_incremental, streaming) all
+            emitting the ``TaskData`` shape, with per-scenario run
+            metadata (shape uniformity, trainer overrides).
+- metrics:  average accuracy, forgetting, backward/forward transfer
+            from the accuracy matrix.
+- sweep:    the compiled sweep runner — the whole task sequence inside
+            one jit (``lax.scan`` over tasks, vmapped over seeds,
+            donated buffers), bit-comparable to ``run_continual``, with
+            telemetry threaded per scenario × backend cell.
+
+See docs/scenarios.md.
+"""
+from repro.scenarios.metrics import (average_accuracy, backward_transfer,
+                                     continual_metrics, forgetting,
+                                     forward_transfer)
+from repro.scenarios.registry import (ScenarioSpec, available_scenarios,
+                                      build_scenario, get_scenario,
+                                      register_scenario,
+                                      unregister_scenario)
+from repro.scenarios.sweep import (run_compiled, run_sweep,
+                                   scenario_miru_config)
+
+__all__ = [
+    "ScenarioSpec", "available_scenarios", "build_scenario", "get_scenario",
+    "register_scenario", "unregister_scenario",
+    "average_accuracy", "backward_transfer", "continual_metrics",
+    "forgetting", "forward_transfer",
+    "run_compiled", "run_sweep", "scenario_miru_config",
+]

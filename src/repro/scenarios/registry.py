@@ -1,0 +1,141 @@
+"""Name-keyed registry of continual-learning scenarios.
+
+A *scenario* is a builder that turns (seed, sizing kwargs) into a task
+sequence — a ``list[TaskData]`` — plus the metadata the sweep runner
+needs to execute it: whether the stream is shape-uniform (the
+precondition for the compiled scan-over-tasks path) and any trainer
+overrides the protocol imposes (the online streaming regime is
+single-pass regardless of the trainer's ``epochs_per_task``).
+
+    @register_scenario("my_stream", description="...")
+    def make_my_stream(seed, n_tasks=5, n_train=1000, n_test=400, **kw):
+        return [...TaskData...]
+
+    tasks = build_scenario("my_stream", seed=0, n_tasks=3)
+
+Every builder takes ``(seed, n_tasks=..., n_train=..., n_test=...)`` so
+the sweep can size any scenario uniformly; extra knobs are
+scenario-specific keywords. See docs/scenarios.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional
+
+from repro.data.synthetic import (TaskData, make_class_incremental_tasks,
+                                  make_drift_tasks, make_noisy_label_tasks,
+                                  make_permuted_tasks, make_rotated_tasks,
+                                  make_split_tasks, make_streaming_tasks)
+
+Builder = Callable[..., list[TaskData]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A registered scenario: the builder plus how to run it."""
+    name: str
+    builder: Builder
+    description: str = ""
+    # Shape-uniform across tasks (same n_train/T/F and a fixed head) —
+    # required for the compiled scan-over-tasks sweep; non-uniform
+    # scenarios fall back to the per-task Python loop.
+    uniform: bool = True
+    # TrainerSpec fields the protocol pins (e.g. single-pass streaming
+    # forces epochs_per_task=1). Applied by the sweep on top of the
+    # caller's TrainerSpec.
+    trainer_overrides: Mapping[str, Any] = \
+        dataclasses.field(default_factory=dict)
+
+    def build(self, seed: int = 0, **kwargs) -> list[TaskData]:
+        return self.builder(seed, **kwargs)
+
+
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(name: str, *, description: str = "",
+                      uniform: bool = True,
+                      trainer_overrides: Optional[Mapping[str, Any]] = None):
+    """Register a scenario builder (usable as a decorator). Re-registering
+    a name overwrites it (tests, experiment sweeps)."""
+    def _do(builder: Builder) -> Builder:
+        _REGISTRY[name] = ScenarioSpec(
+            name=name, builder=builder, description=description,
+            uniform=uniform,
+            trainer_overrides=dict(trainer_overrides or {}))
+        return builder
+    return _do
+
+
+def unregister_scenario(name: str) -> None:
+    """Remove a registered scenario (test teardown helper)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_scenarios() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; "
+            f"available: {', '.join(available_scenarios()) or '(none)'}"
+        ) from None
+
+
+def build_scenario(name: str, seed: int = 0, **kwargs) -> list[TaskData]:
+    """Build the task sequence for a registered scenario."""
+    return get_scenario(name).build(seed, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Built-in scenarios — the streams from repro.data.synthetic
+# ---------------------------------------------------------------------------
+
+register_scenario(
+    "permuted",
+    description="Permuted-pixel domain-incremental stream (permuted-MNIST "
+                "protocol, §VI-A); task 0 is the identity permutation.",
+)(make_permuted_tasks)
+
+register_scenario(
+    "split",
+    description="Split feature-space stream: consecutive class pairs on a "
+                "shared binary head (domain-incremental split CIFAR-10).",
+)(make_split_tasks)
+
+register_scenario(
+    "rotated",
+    description="Rotated-image stream: one dataset viewed under a "
+                "per-task rotation ramping 0→max_angle degrees.",
+)(make_rotated_tasks)
+
+register_scenario(
+    "noisy_label",
+    description="Label-noise robustness stream: fixed domain, train-label "
+                "corruption ramping 0→max_flip across tasks (clean test).",
+)(make_noisy_label_tasks)
+
+register_scenario(
+    "drift",
+    description="Gradual domain drift: class prototypes interpolate from "
+                "a start to an end set across the sequence.",
+)(make_drift_tasks)
+
+register_scenario(
+    "class_incremental",
+    description="Class-incremental stream with a logically expanding "
+                "head: task t introduces classes [t·c, (t+1)·c) with "
+                "global labels over the full head.",
+)(make_class_incremental_tasks)
+
+register_scenario(
+    "streaming",
+    description="Online single-pass streaming regime: a restart-safe "
+                "(seed, step)-deterministic stream chopped into segments "
+                "under fresh permutations; each example is seen once.",
+    trainer_overrides={"epochs_per_task": 1},
+)(make_streaming_tasks)

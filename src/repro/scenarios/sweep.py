@@ -1,0 +1,400 @@
+"""Compiled scenario sweeps: the whole task sequence inside one jit.
+
+``run_continual`` drives training with a per-batch Python loop — one
+jitted dispatch per step, one per eval. This module executes the *entire*
+sequence as a ``lax.scan`` over tasks whose body is a ``lax.scan`` over
+replay-mixed batches, with the input buffers donated to XLA and an
+optional ``vmap`` over seeds. Because the batch stream is materialized by
+the same :func:`repro.core.continual.build_batch_schedule` and the step
+functions are the same :func:`repro.core.continual._make_raw_steps`
+closures, the compiled run consumes bit-identical inputs and PRNG streams
+to the Python loop — the permuted/ideal parity is asserted in
+tests/test_scenarios.py.
+
+After each task the runner evaluates *every* task (not just the seen
+prefix), so the accuracy matrix ``R_full`` also carries the
+unseen-task upper triangle that forward transfer needs; the standard
+lower-triangular ``R`` (zeros above the diagonal, as ``run_continual``
+reports) is derived from it.
+
+Telemetry is threaded through jit-exactly: the metered forward's
+interior flush is suppressed (``Telemetry.deferred``), per-trace deltas
+are multiplied by the scan/map/vmap multiplicities (``Telemetry.scaled``)
+and drained through one io_callback per compiled execution.
+Data-dependent write pulses are summed inside the scan as per-device
+count maps and folded into the telemetry/endurance tracker host-side.
+
+Scenarios whose streams are not shape-uniform across tasks cannot scan;
+:func:`run_compiled` falls back to the Python loop for those and says so
+in the result (``"compiled": False``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import DeviceBackend, get_backend
+from repro.core.continual import (ReplaySpec, TrainerSpec, _init_run,
+                                  _make_raw_steps, build_batch_schedule,
+                                  run_continual)
+from repro.core.replay import _split_chain
+from repro.data.synthetic import TaskData
+from repro.scenarios.metrics import continual_metrics
+from repro.scenarios.registry import get_scenario
+
+__all__ = ["run_compiled", "run_sweep", "scenario_miru_config"]
+
+
+# ---------------------------------------------------------------------------
+# Per-seed inputs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SeedInputs:
+    """Everything one seed's compiled run consumes."""
+    params: Any
+    opt_state: Any
+    dev_state: Any
+    xs: np.ndarray          # (n_tasks, S, B, T, F)
+    ys: np.ndarray          # (n_tasks, S, B)
+    step_keys: np.ndarray   # (n_tasks, S, 2)
+    eval_keys: np.ndarray   # (n_tasks, 2)
+
+
+def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
+                       backend: DeviceBackend, tasks: list[TaskData],
+                       opt) -> tuple[_SeedInputs, Any]:
+    """Materialize one seed's schedule, initial state and PRNG streams —
+    the exact sequences :func:`run_continual` would consume."""
+    schedule = build_batch_schedule(trainer, rspec, tasks)
+    if not schedule.uniform:
+        return None, schedule
+    key, params, psi, dev_state = _init_run(cfg, trainer, backend)
+    opt_state = opt.init(params) if trainer.algo == "adam" else {"psi": psi}
+    steps = schedule.steps_per_task
+    n_tasks = len(tasks)
+    # run_continual's key chain: per task, S step splits then one eval
+    # split — a single sequential chain, computed in one scan dispatch.
+    _, subs = _split_chain(key, sum(steps) + n_tasks)
+    subs = np.asarray(subs)
+    step_keys, eval_keys, at = [], [], 0
+    for S in steps:
+        step_keys.append(subs[at:at + S])
+        eval_keys.append(subs[at + S])
+        at += S + 1
+    return _SeedInputs(
+        params=params, opt_state=opt_state, dev_state=dev_state,
+        xs=np.stack(schedule.x), ys=np.stack(schedule.y),
+        step_keys=np.stack(step_keys), eval_keys=np.stack(eval_keys),
+    ), schedule
+
+
+# ---------------------------------------------------------------------------
+# The compiled run
+# ---------------------------------------------------------------------------
+
+def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
+                 n_tasks: int, S: int, track_writes: bool, baseline: bool):
+    raw_train, raw_eval, _ = _make_raw_steps(cfg, trainer, backend)
+    tele = backend.telemetry
+
+    def run(params, opt_state, dev_state, xs, ys, step_keys, eval_keys,
+            eval_x, eval_y):
+
+        def eval_all(p, k_eval, dstate):
+            def one(exy):
+                return raw_eval(p, k_eval, exy[0], exy[1], dstate)
+            with tele.scaled(n_tasks):
+                return jax.lax.map(one, (eval_x, eval_y))
+
+        def step_body(carry, inp):
+            p, o, d, wc = carry
+            x, y, k = inp
+            p, o, loss, applied, d = raw_train(p, o, k, x, y, d)
+            if wc is not None:
+                wc = {n: wc[n] + (applied[n] != 0).astype(jnp.int32)
+                      for n in wc}
+            return (p, o, d, wc), loss
+
+        def task_body(carry, inp):
+            xs_t, ys_t, keys_t, k_eval = inp
+            with tele.scaled(S):
+                carry, losses = jax.lax.scan(step_body, carry,
+                                             (xs_t, ys_t, keys_t))
+            p, _, d, _ = carry
+            accs = eval_all(p, k_eval, d)
+            return carry, (accs, losses)
+
+        wc0 = {n: jnp.zeros(p.shape, jnp.int32)
+               for n, p in params.items()
+               if jnp.ndim(p) >= 2} if track_writes else None
+        with tele.deferred():
+            base_row = eval_all(params, eval_keys[0], dev_state) \
+                if baseline else jnp.zeros((n_tasks,), jnp.float32)
+            with tele.scaled(n_tasks):
+                carry, (R_full, losses) = jax.lax.scan(
+                    task_body, (params, opt_state, dev_state, wc0),
+                    (xs, ys, step_keys, eval_keys))
+        tele.emit_pending()
+        params, opt_state, dev_state, wcounts = carry
+        return {"params": params, "dev_state": dev_state,
+                "R_full": R_full, "losses": losses,
+                "wcounts": wcounts, "baseline_row": base_row}
+
+    return run
+
+
+def _aggregate_seeds(per_seed: list[dict], seeds: Sequence[int]) -> dict:
+    """Cross-seed aggregation shared by the compiled and fallback paths:
+    metrics (and MA ≡ average_accuracy) become the seed mean, with a
+    ``metrics_std`` companion and the raw ``per_seed`` cells."""
+    keys = per_seed[0]["metrics"]
+    metrics = {k: float(np.mean([p["metrics"][k] for p in per_seed]))
+               for k in keys}
+    return {
+        "per_seed": per_seed,
+        "seeds": list(seeds),
+        "metrics": metrics,
+        "metrics_std": {k: float(np.std([p["metrics"][k]
+                                         for p in per_seed]))
+                        for k in keys},
+        "MA": metrics["average_accuracy"],
+    }
+
+
+def _fallback_python(cfg, trainer, tasks, rspec, backend, seeds):
+    """Non-uniform streams cannot scan: run the per-task Python loop.
+    Mirrors the compiled path's multi-seed reporting (metrics are the
+    cross-seed mean, with ``metrics_std``), minus FWT — the loop never
+    evaluates unseen tasks or the untrained baseline."""
+    runs = []
+    for s in (seeds if seeds is not None else [trainer.seed]):
+        tsp = dataclasses.replace(trainer, seed=s)
+        runs.append(run_continual(cfg, tsp, tasks, replay=rspec,
+                                  device=backend))
+    per_seed = [{"R": r["R"], "MA": r["MA"],
+                 "metrics": continual_metrics(r["R"])} for r in runs]
+    out = dict(runs[0])
+    out["compiled"] = False
+    out["metrics"] = per_seed[0]["metrics"]
+    if seeds is not None and len(runs) > 1:
+        out.update(_aggregate_seeds(per_seed, seeds))
+    return out
+
+
+def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
+                 replay: Optional[ReplaySpec] = None,
+                 device: Union[str, DeviceBackend, None] = None,
+                 *, seeds: Optional[Sequence[int]] = None,
+                 baseline: bool = True,
+                 uniform: bool = True) -> dict[str, Any]:
+    """Train through the task sequence inside one compiled program.
+
+    Same contract as :func:`run_continual` (and bit-identical ``R``/
+    ``MA``/``params`` on deterministic backends — asserted for
+    permuted × ideal in the tests), plus:
+
+      R_full        (n_tasks, n_tasks) with the unseen-task upper triangle
+      metrics       average_accuracy / forgetting / BWT (+ FWT when
+                    ``baseline``), from :mod:`repro.scenarios.metrics`
+      baseline_row  untrained-model accuracy per task (when ``baseline``)
+      compiled      False when the stream was not shape-uniform and the
+                    run fell back to the per-task Python loop
+
+    ``uniform=False`` (a :class:`ScenarioSpec` declares it) goes straight
+    to the Python-loop fallback without materializing the (ragged)
+    schedule first; ragged streams are also auto-detected either way.
+    ``seeds`` replicates the run across trainer seeds inside one
+    ``vmap``-ed program; per-seed R matrices and metric mean/std come
+    back under ``"per_seed"``/``"metrics"``. Initial-state and schedule
+    buffers are donated to XLA.
+    """
+    trainer = spec
+    if not isinstance(trainer, TrainerSpec):
+        raise TypeError("run_compiled takes a TrainerSpec; legacy "
+                        "ContinualConfig is only supported by run_continual")
+    rspec = replay if replay is not None else ReplaySpec()
+    backend = get_backend(device if device is not None else "ideal")
+    tele = backend.telemetry
+
+    test_shapes = {(t.x_test.shape, t.y_test.shape) for t in tasks}
+    seed_list = list(seeds) if seeds is not None else None
+    many = seed_list is not None and len(seed_list) > 1
+
+    if not uniform:
+        # Declared ragged (ScenarioSpec.uniform=False): skip schedule
+        # materialization and run the loop directly.
+        return _fallback_python(cfg, trainer, tasks, rspec, backend,
+                                seed_list)
+
+    _, _, opt = _make_raw_steps(cfg, trainer, backend)
+    inputs = []
+    for s in (seed_list if seed_list is not None else [trainer.seed]):
+        tsp = dataclasses.replace(trainer, seed=s)
+        inp, _ = _build_seed_inputs(cfg, tsp, rspec, backend, tasks, opt)
+        inputs.append(inp)
+    if any(i is None for i in inputs) or len(test_shapes) != 1:
+        return _fallback_python(cfg, trainer, tasks, rspec, backend,
+                                seed_list)
+
+    n_tasks = len(tasks)
+    S = inputs[0].xs.shape[1]
+    track_writes = backend.tracker is not None or tele.enabled
+    run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
+                       baseline)
+
+    eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
+    eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
+
+    def arrays(i: _SeedInputs):
+        return (i.params, i.opt_state, i.dev_state, jnp.asarray(i.xs),
+                jnp.asarray(i.ys), jnp.asarray(i.step_keys),
+                jnp.asarray(i.eval_keys))
+
+    # Donate the mutated state buffers (params; the conductance pairs).
+    # opt_state is excluded: DFA's is the pass-through Ψ and XLA declines
+    # to alias the Adam moments on CPU — donating either only warns.
+    # Vmapped leaves don't alias at all.
+    donate = (0, 2) if not many else ()
+    if many:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[arrays(i) for i in inputs])
+        fn = jax.jit(jax.vmap(run, in_axes=(0,) * 7 + (None, None)))
+        scope = tele.scaled(len(seed_list))
+    else:
+        stacked = arrays(inputs[0])
+        fn = jax.jit(run, donate_argnums=donate)
+        scope = contextlib.nullcontext()
+
+    t0 = time.perf_counter()
+    with scope:
+        res = fn(*stacked, eval_x, eval_y)
+    res = jax.tree.map(np.asarray, res)
+    wall_s = time.perf_counter() - t0
+
+    # Host-side accounting of the data-dependent write pulses the scan
+    # summed (the Python loop meters these per step in record_endurance).
+    total_steps = n_tasks * S * (len(seed_list) if many else 1)
+    wcounts = res.pop("wcounts")
+    if track_writes and wcounts:
+        counts = {k: (v.sum(axis=0) if many else v)
+                  for k, v in wcounts.items()}
+        tele.meter_write_counts(counts, total_steps)
+        if backend.tracker is not None:
+            backend.tracker.record_counts(counts, total_steps)
+
+    def summarize(R_full, base_row, losses):
+        # float64 like run_continual's R (float32 accuracies are exactly
+        # representable, so the widening keeps bit-equality with the loop).
+        R_full = np.asarray(R_full, np.float64)
+        R = np.tril(R_full)
+        return {
+            "R": R, "R_full": R_full,
+            "MA": float(R_full[-1].mean()),
+            "acc_after_each": [float(R[t, :t + 1].mean())
+                               for t in range(n_tasks)],
+            "losses": [float(v) for v in losses.reshape(-1)],
+            "metrics": continual_metrics(
+                R_full, base_row if baseline else None),
+            "baseline_row": base_row,
+        }
+
+    out: dict[str, Any]
+    if many:
+        per_seed = [summarize(res["R_full"][i], res["baseline_row"][i],
+                              res["losses"][i])
+                    for i in range(len(seed_list))]
+        out = dict(per_seed[0])
+        out.update(_aggregate_seeds(per_seed, seed_list))
+        out["params"] = jax.tree.map(lambda v: v[0], res["params"])
+    else:
+        out = summarize(res["R_full"], res["baseline_row"], res["losses"])
+        out["params"] = res["params"]
+        if res["dev_state"]:
+            out["device_state"] = res["dev_state"]
+    out["compiled"] = True
+    out["wall_s"] = wall_s
+    out["steps_per_task"] = S
+    if backend.tracker is not None:
+        out["endurance"] = backend.tracker
+    if tele.enabled:
+        out["telemetry"] = tele
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scenario × backend sweeps
+# ---------------------------------------------------------------------------
+
+def scenario_miru_config(tasks: list[TaskData], n_h: int = 100):
+    """MiRUConfig sized to a task sequence: n_x from the feature width,
+    n_y from the label range across *all* tasks (class-incremental
+    streams allocate the full expanding head up front)."""
+    from repro.core.miru import MiRUConfig
+    F = tasks[0].x_train.shape[2]
+    n_y = int(max(int(t.y_train.max()) for t in tasks)) + 1
+    return MiRUConfig(n_x=F, n_h=n_h, n_y=max(n_y, 2))
+
+
+def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
+              trainer: Optional[TrainerSpec] = None,
+              replay: Optional[ReplaySpec] = None,
+              *, seed: int = 0, seeds: Optional[Sequence[int]] = None,
+              n_h: int = 100, meter: bool = True,
+              scenario_kwargs: Optional[dict] = None) -> dict[str, Any]:
+    """The scenario × backend grid. Each cell runs the compiled sweep
+    (falling back to the Python loop for non-uniform streams) and reports
+    average accuracy, forgetting, BWT, FWT — and, when ``meter`` is set
+    and the substrate is a metered device, the live-metered power and
+    GOPS/W from ``repro.telemetry``.
+
+    Returns ``{"cells": {f"{scenario}/{backend}": cell, ...}, ...}``.
+    """
+    from repro.analog.costmodel import M2RUCostModel
+    from repro.telemetry import telemetry_report
+
+    trainer = trainer if trainer is not None else TrainerSpec()
+    skw = dict(scenario_kwargs or {})
+    cells: dict[str, Any] = {}
+    for sc_name in scenarios:
+        sc = get_scenario(sc_name)
+        tasks = sc.build(seed, **skw)
+        cfg = scenario_miru_config(tasks, n_h=n_h)
+        tsp = dataclasses.replace(trainer, **sc.trainer_overrides)
+        for be_name in backends:
+            backend = get_backend(be_name)
+            metered = meter and backend.spec.input_bits is not None
+            if metered:
+                backend.telemetry.enable()
+            res = run_compiled(cfg, tsp, tasks, replay=replay,
+                               device=backend, seeds=seeds,
+                               uniform=sc.uniform)
+            cell = {
+                "scenario": sc_name, "backend": be_name,
+                "compiled": res["compiled"],
+                "MA": res["MA"],
+                "metrics": res["metrics"],
+                "wall_s": res.get("wall_s"),
+                "R": np.asarray(res["R"]).tolist(),
+            }
+            if "metrics_std" in res:
+                cell["metrics_std"] = res["metrics_std"]
+            if metered:
+                kind = "cmos" if be_name == "cmos" else "analog"
+                rep = telemetry_report(
+                    backend.telemetry, model=M2RUCostModel(n_h=n_h),
+                    kind=kind)
+                cell["power_mw"] = rep["metered"]["power_mw"]
+                cell["gops_per_w"] = rep["metered"]["gops_per_w"]
+                cell["pj_per_op"] = rep["metered"]["pj_per_op"]
+            cells[f"{sc_name}/{be_name}"] = cell
+    return {"cells": cells,
+            "scenarios": list(scenarios), "backends": list(backends),
+            "n_h": n_h, "seed": seed,
+            "seeds": list(seeds) if seeds is not None else None}

@@ -45,6 +45,7 @@ SAMPLE_STEPS = "sample_steps"        # (sample × time-step) recurrence rows
 SEQUENCES = "sequences"              # sequences fully processed
 WRITE_PULSES = "write_pulses"        # nonzero programmed synapses
 WRITE_EVENTS = "write_events"        # weight-update rounds
+DRIFT_TICKS = "drift_ticks"          # retention-drift relaxation ticks
 
 
 def _is_tracing(x) -> bool:
@@ -60,6 +61,7 @@ class Telemetry:
         self.counters: Counter = Counter()
         self._pending: dict[str, int] = {}
         self._scale = 1
+        self._deferred = False
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -103,6 +105,22 @@ class Telemetry:
         finally:
             self._scale = prev
 
+    @contextlib.contextmanager
+    def deferred(self):
+        """Suppress :meth:`emit_pending` inside the scope so pending deltas
+        survive until a single flush point. Needed when a metered forward
+        (which flushes itself) is traced *inside* a ``lax.scan`` body: its
+        interior flush would embed an io_callback that fires once per scan
+        iteration while the deltas already carry the scan's ``scaled``
+        multiplier — double counting. The compiled scenario sweep wraps its
+        scan-over-tasks in ``deferred()`` and flushes once at the top level
+        of the jitted run."""
+        prev, self._deferred = self._deferred, True
+        try:
+            yield self
+        finally:
+            self._deferred = prev
+
     def _add(self, deltas: Mapping[str, int]) -> None:
         for k, v in deltas.items():
             self.counters[k] += v
@@ -125,8 +143,8 @@ class Telemetry:
         """Drain the pending buffer into one ``io_callback`` that fires per
         execution of the enclosing compiled function. Call at the top level
         of a jitted step (outside any scan); safe under value_and_grad.
-        No-op when nothing is pending."""
-        if not self.enabled or not self._pending:
+        No-op when nothing is pending or inside a :meth:`deferred` scope."""
+        if not self.enabled or self._deferred or not self._pending:
             return
         snap = dict(self._pending)
         self._pending.clear()
@@ -172,6 +190,18 @@ class Telemetry:
         deltas = {f"{WRITE_PULSES}/{k}": int(np.asarray(m).sum())
                   for k, m in masks.items()}
         deltas[WRITE_EVENTS] = 1
+        self._add(deltas)
+
+    def meter_write_counts(self, counts: Mapping[str, np.ndarray],
+                           events: int) -> None:
+        """Host-side write metering from accumulated per-device write-count
+        maps (the compiled sweep sums its nonzero-update masks across the
+        whole scan and flushes once, instead of once per step)."""
+        if not self.enabled:
+            return
+        deltas = {f"{WRITE_PULSES}/{k}": int(np.asarray(c).sum())
+                  for k, c in counts.items()}
+        deltas[WRITE_EVENTS] = int(events)
         self._add(deltas)
 
     # ------------------------------------------------------------------

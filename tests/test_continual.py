@@ -1,9 +1,13 @@
 """Continual-learning protocol: the paper's §VI-A claims end-to-end.
 
-Marked slow-ish (~2 min total) but this is the paper's core experiment.
+Marked ``slow`` (~2 min total — full tier / main CI only), but this is
+the paper's core experiment. The fast tier covers the same machinery
+through tests/test_scenarios.py's compiled-parity runs.
 """
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.core.continual import ContinualConfig, run_continual
 from repro.core.miru import MiRUConfig

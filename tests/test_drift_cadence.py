@@ -1,0 +1,134 @@
+"""analog_state retention-drift cadence (ROADMAP item): drift ticks on a
+configurable update cadence instead of per-update, with the same total
+relaxation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analog.crossbar import CrossbarSpec
+from repro.backends import DeviceSpec, get_backend
+
+
+def _backend(rate=0.05, cadence=1, write_sigma=0.0):
+    spec = CrossbarSpec(write_sigma=write_sigma, prog_sigma=0.0,
+                        read_sigma=0.0, drift_rate=rate, w_clip=1.0,
+                        drift_cadence=cadence)
+    return get_backend("analog_state",
+                       spec=DeviceSpec(input_bits=8, adc_bits=8,
+                                       weight_clip=1.0, crossbar=spec))
+
+
+def _relax(cadence, n_updates, rate=0.05):
+    """n_updates zero-magnitude updates (pure retention) at a cadence."""
+    be = _backend(rate=rate, cadence=cadence)
+    params = {"w_h": jnp.array([[0.8, -0.6, 0.3]])}
+    state = be.init_device_state(params, jax.random.PRNGKey(0))
+    zeros = {"w_h": jnp.zeros_like(params["w_h"])}
+    for i in range(n_updates):
+        params, _, state = be.device_apply_update(
+            params, zeros, jax.random.PRNGKey(i), state=state)
+    return np.asarray(params["w_h"]), state
+
+
+@pytest.mark.parametrize("cadence", [2, 3, 4])
+def test_drift_magnitude_is_cadence_invariant(cadence):
+    """After N updates (cadence | N), total relaxation equals the
+    per-update baseline: (1−rate)^N either way."""
+    n = 12
+    w1, _ = _relax(1, n)
+    wk, _ = _relax(cadence, n)
+    np.testing.assert_allclose(wk, w1, rtol=1e-5)
+    np.testing.assert_allclose(
+        w1, np.array([[0.8, -0.6, 0.3]]) * (0.95 ** n), rtol=1e-4)
+
+
+def test_cadence_one_keeps_legacy_state_shape():
+    """Default cadence keeps the device-state pytree exactly as before —
+    pairs only, no tick counter (checkpoint compatibility)."""
+    _, state1 = _relax(1, 2)
+    assert set(state1) == {"w_h"}
+    _, state3 = _relax(3, 2)
+    assert set(state3) == {"w_h", "_ticks"}
+    assert int(state3["_ticks"]) == 2
+
+
+def test_cadence_invariant_under_scan():
+    """The counter lives in the device state, so the cadence fires
+    correctly when the train loop is a lax.scan (the compiled sweep)."""
+    def run(cadence):
+        be = _backend(cadence=cadence)
+        params = {"w_h": jnp.array([[0.8, -0.6, 0.3]])}
+        state = be.init_device_state(params, jax.random.PRNGKey(0))
+        zeros = {"w_h": jnp.zeros_like(params["w_h"])}
+
+        @jax.jit
+        def go(params, state):
+            def body(c, k):
+                p, s = c
+                p, _, s = be.device_apply_update(p, zeros, k, state=s)
+                return (p, s), None
+            keys = jax.random.split(jax.random.PRNGKey(7), 12)
+            (p, _), _ = jax.lax.scan(body, (params, state), keys)
+            return p
+
+        return np.asarray(go(params, state)["w_h"])
+
+    np.testing.assert_allclose(run(3), run(1), rtol=1e-5)
+
+
+def test_writes_compose_with_cadence():
+    """Written devices still land their (noisy) deltas on non-drift
+    updates; unwritten entries stay pure retention."""
+    be = _backend(rate=0.1, cadence=2)
+    params = {"w_h": jnp.array([[0.5, -0.5]])}
+    state = be.init_device_state(params, jax.random.PRNGKey(0))
+    dw = {"w_h": jnp.array([[0.1, 0.0]])}
+    p1, applied, state = be.device_apply_update(
+        params, dw, jax.random.PRNGKey(1), state=state)
+    # Update 1: no drift fires (cadence 2); only column 0 written.
+    assert float(applied["w_h"][0, 1]) == 0.0
+    assert float(p1["w_h"][0, 0]) == pytest.approx(0.6, abs=1e-6)
+    assert float(p1["w_h"][0, 1]) == pytest.approx(-0.5, abs=1e-6)
+    zeros = {"w_h": jnp.zeros_like(params["w_h"])}
+    p2, _, state = be.device_apply_update(
+        p1, zeros, jax.random.PRNGKey(2), state=state)
+    # Update 2: the cadence fires 2 ticks → (1-0.1)² on both devices.
+    np.testing.assert_allclose(np.asarray(p2["w_h"]),
+                               np.asarray(p1["w_h"]) * 0.81, rtol=1e-5)
+
+
+def test_drift_ticks_metered():
+    """Telemetry meters the cadence-amortized tick rate: N updates at any
+    cadence k (k | N) record N drift ticks."""
+    for cadence in (1, 3):
+        be = _backend(cadence=cadence)
+        be.telemetry.enable()
+        params = {"w_h": jnp.array([[0.4]])}
+        state = be.init_device_state(params, jax.random.PRNGKey(0))
+        zeros = {"w_h": jnp.zeros_like(params["w_h"])}
+
+        def step_fn(p, s, dw, k):
+            # dw enters as a jit argument — a tracer, like the trainer's
+            # computed updates — so the tick delta lands in the pending
+            # buffer and flushes once per execution.
+            out = be.device_apply_update(p, dw, k, state=s)
+            be.telemetry.emit_pending()     # the train step's flush point
+            return out
+
+        step = jax.jit(step_fn)
+        for i in range(6):
+            params, _, state = step(params, state, zeros,
+                                    jax.random.PRNGKey(i))
+        assert be.telemetry.total("drift_ticks") == 6, cadence
+
+
+def test_no_drift_no_ticks():
+    be = _backend(rate=0.0, cadence=1, write_sigma=0.1)
+    be.telemetry.enable()
+    params = {"w_h": jnp.array([[0.4]])}
+    state = be.init_device_state(params, jax.random.PRNGKey(0))
+    params, _, state = be.device_apply_update(
+        params, {"w_h": jnp.array([[0.1]])}, jax.random.PRNGKey(1),
+        state=state)
+    assert be.telemetry.total("drift_ticks") == 0

@@ -1,0 +1,147 @@
+"""Property-based tests for the WBS sign-magnitude quantizer and its
+straight-through estimator (satellite of the scenarios PR).
+
+``analog/wbs.quantize_signed`` feeds every quantized substrate's drive
+path; the STE wrappers in ``backends/wbs.py`` are what make those
+substrates differentiable (exact quantized forward, exact *linear*
+backward). Properties, on random shapes and bit-widths:
+
+  round-trip   |clip(x) − sign·mag/top| ≤ 1/(2·top)
+  monotone     reconstruction is order-preserving
+  symmetric    quantize(−x) = (−sign, mag)
+  STE          d/d(drive), d/d(weights) of the quantized VMM are exactly
+               the plain linear matmul's gradients (bitwise)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.analog.wbs import quantize_signed
+from repro.backends import DeviceSpec, get_backend
+
+
+def _recon(x, n_bits):
+    sign, mag = quantize_signed(x, n_bits)
+    top = 2.0 ** n_bits - 1.0
+    return sign.astype(jnp.float32) * mag.astype(jnp.float32) / top
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_bound(n_bits, n, seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (n,),
+                           minval=-1.2, maxval=1.2)
+    err = jnp.abs(jnp.clip(x, -1, 1) - _recon(x, n_bits))
+    assert float(err.max()) <= 0.5 / (2 ** n_bits - 1) + 1e-7, \
+        (n_bits, float(err.max()))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 200))
+def test_monotone(n_bits, n):
+    x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(n), (n,),
+                                    minval=-1.0, maxval=1.0))
+    r = np.asarray(_recon(x, n_bits))
+    assert (np.diff(r) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_sign_symmetry(n_bits, n, seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (n,),
+                           minval=-1.0, maxval=1.0)
+    s_pos, m_pos = quantize_signed(x, n_bits)
+    s_neg, m_neg = quantize_signed(-x, n_bits)
+    np.testing.assert_array_equal(np.asarray(m_pos), np.asarray(m_neg))
+    np.testing.assert_array_equal(np.asarray(s_pos), -np.asarray(s_neg))
+
+
+def test_endpoints_and_zero():
+    sign, mag = quantize_signed(jnp.array([-1.0, 0.0, 1.0, 2.0]), 8)
+    np.testing.assert_array_equal(np.asarray(sign), [-1, 0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(mag), [255, 0, 255, 255])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 24), st.integers(1, 8),
+       st.integers(2, 8))
+def test_ste_backward_is_exact_linear(m, k, n, n_bits):
+    """The quantized VMM's VJP equals the plain matmul's analytic
+    gradients (g·Wᵀ, xᵀ·g) — quantization must be invisible to the
+    optimizer. Tolerance covers only XLA op-ordering ulps; a leaked
+    quantization derivative would be ~2⁻ⁿ, orders of magnitude larger."""
+    backend = get_backend("wbs", spec=DeviceSpec(input_bits=n_bits,
+                                                 adc_bits=None,
+                                                 weight_clip=1.0))
+    kx, kw, kg = jax.random.split(jax.random.PRNGKey(m * 37 + k), 3)
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = jax.random.normal(kw, (k, n)) * 0.4
+    ct = jax.random.normal(kg, (m, n))
+
+    def quantized(d, wt):
+        return jnp.vdot(backend.vmm(d, wt), ct)
+
+    def linear(d, wt):
+        return jnp.vdot(d @ wt, ct)
+
+    gq = jax.grad(quantized, argnums=(0, 1))(x, w)
+    gl = jax.grad(linear, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gq[0]), np.asarray(gl[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gq[1]), np.asarray(gl[1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 10), st.integers(1, 16), st.integers(1, 6))
+def test_ste_backward_independent_of_bit_width(m, k, n):
+    """Bitwise: the backward is the *same program* at every precision —
+    gradients at 2 and 8 drive bits are identical, though the quantized
+    forwards differ."""
+    kx, kw, kg = jax.random.split(jax.random.PRNGKey(m + 41 * k), 3)
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = jax.random.normal(kw, (k, n)) * 0.4
+    ct = jax.random.normal(kg, (m, n))
+    grads = {}
+    for bits in (2, 8):
+        backend = get_backend("wbs", spec=DeviceSpec(input_bits=bits,
+                                                     adc_bits=None,
+                                                     weight_clip=1.0))
+        grads[bits] = jax.grad(
+            lambda d, wt: jnp.vdot(backend.vmm(d, wt), ct),
+            argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(grads[2][0]),
+                                  np.asarray(grads[8][0]))
+    np.testing.assert_array_equal(np.asarray(grads[2][1]),
+                                  np.asarray(grads[8][1]))
+
+
+def test_ste_forward_is_quantized_not_linear():
+    """The STE changes only the backward: the forward stays the exact
+    quantized value (differs from the float matmul)."""
+    backend = get_backend("wbs", spec=DeviceSpec(input_bits=3,
+                                                 adc_bits=None,
+                                                 weight_clip=1.0))
+    x = jax.random.uniform(jax.random.PRNGKey(0), (4, 6),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (6, 3)) * 0.4
+    y = np.asarray(backend.vmm(x, w))
+    exact = np.asarray(x @ w)
+    assert not np.array_equal(y, exact)              # 3-bit error visible
+    assert np.abs(y - exact).max() < 0.5             # but bounded
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 32))
+def test_ste_readout_backward_is_identity(adc_bits, n):
+    """quantize_readout: forward = fused ADC, backward = exact identity."""
+    backend = get_backend("wbs", spec=DeviceSpec(input_bits=8,
+                                                 adc_bits=adc_bits,
+                                                 adc_range=4.0,
+                                                 weight_clip=1.0))
+    pre = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 2.0
+    ct = jax.random.normal(jax.random.PRNGKey(n + 1), (n,))
+    g = jax.grad(lambda p: jnp.vdot(backend.quantize_readout(p), ct))(pre)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(ct))

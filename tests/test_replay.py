@@ -139,6 +139,25 @@ def test_replay_buffer_end_to_end():
     assert labels.shape == (16,)
 
 
+def test_add_batch_bit_identical_to_sequential_adds():
+    """The vectorized add_batch (one chained-key scan + one vmapped
+    quantize) must walk exactly the per-example path: same reservoir
+    slots, same key chain, same quantizer draws, same final key."""
+    seq = ReplayBuffer(capacity=37, feature_shape=(4, 5), n_bits=4, seed=7)
+    vec = ReplayBuffer(capacity=37, feature_shape=(4, 5), n_bits=4, seed=7)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        xs = rng.random((23, 4, 5)).astype(np.float32)
+        ys = rng.integers(0, 10, 23)
+        added_seq = sum(bool(seq.add(x, int(y))) for x, y in zip(xs, ys))
+        assert vec.add_batch(xs, ys) == added_seq
+    np.testing.assert_array_equal(vec._feat, seq._feat)
+    np.testing.assert_array_equal(vec._label, seq._label)
+    assert vec.size == seq.size
+    np.testing.assert_array_equal(np.asarray(vec._qkey),
+                                  np.asarray(seq._qkey))
+
+
 def test_replay_buffer_memory_halved():
     """8→4-bit storage: the paper's 2× memory claim (uint8 container with
     4-bit codes would pack 2/byte in RTL; here we assert code range)."""
