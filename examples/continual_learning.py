@@ -54,6 +54,11 @@ def main():
     ap.add_argument("--loop", action="store_true",
                     help="use the per-task Python loop instead of the "
                          "compiled scan-over-tasks sweep")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="force the per-timestep device_vmm recurrence "
+                         "instead of the fused one-kernel WBS×MiRU scan "
+                         "(bit-identical; fused is the fast default on "
+                         "substrates that support it)")
     ap.add_argument("--no-telemetry", action="store_true",
                     help="skip activity metering + the energy report")
     args = ap.parse_args()
@@ -70,7 +75,8 @@ def main():
         ccfg = ContinualConfig(trainer=args.trainer,
                                epochs_per_task=args.epochs, batch_size=32,
                                replay_capacity=512,
-                               track_endurance=args.trainer != "adam")
+                               track_endurance=args.trainer != "adam",
+                               fused_recurrence=not args.no_fused)
         trainer, replay, backend = ccfg.specs()
     else:
         algo = args.algo or "dfa"
@@ -83,8 +89,10 @@ def main():
 
     # Scenario protocols can pin trainer fields (streaming is single-pass).
     overrides = get_scenario(args.scenario).trainer_overrides
-    if overrides:
+    if overrides or args.no_fused:
         import dataclasses
+        if args.no_fused:
+            overrides = dict(overrides, fused_recurrence=False)
         trainer = dataclasses.replace(trainer, **overrides)
 
     if not args.no_telemetry:

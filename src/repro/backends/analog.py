@@ -61,6 +61,14 @@ class AnalogBackend(WBSBackend):
         return 1.0
 
     # ------------------------------------------------------------------
+    def _fused_recurrence_ok(self, state) -> bool:
+        # Per-access conductance read noise draws a fresh perturbation of
+        # the weight tile on every timestep — that cannot be hoisted into
+        # a VMEM-resident tile, so the fused scan only engages without it.
+        return super()._fused_recurrence_ok(state) \
+            and self.crossbar.read_sigma == 0
+
+    # ------------------------------------------------------------------
     def vmm(self, drive: jax.Array, weights: jax.Array,
             key: Optional[jax.Array] = None) -> jax.Array:
         cb = self.crossbar

@@ -86,6 +86,14 @@ class AnalogStateBackend(AnalogBackend):
         return state
 
     # ------------------------------------------------------------------
+    def _fused_recurrence_ok(self, state) -> bool:
+        # The conductance-domain substrate reads *through the carried
+        # G⁺/G⁻ pairs* with per-device noise — its forward is defined by
+        # the per-step device-state reads, so the logical-weight fused
+        # scan never substitutes for it.
+        return False
+
+    # ------------------------------------------------------------------
     def _vmm_impl(self, drive, weights, key, state, tag):
         if state is None or tag not in state or self._ideal_device():
             # Ideal limit or stateless call: the parent's logical path is

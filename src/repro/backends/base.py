@@ -43,6 +43,7 @@ import dataclasses
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.analog.crossbar import CrossbarSpec
@@ -167,6 +168,47 @@ class DeviceBackend(abc.ABC):
         if self.spec.adc_bits is not None:
             self.telemetry.meter_adc(pre, tag)
         return q
+
+    def device_recurrence(self, params: PyTree, cfg, x_seq: jax.Array,
+                          key: jax.Array, *, state: Optional[Any] = None,
+                          fused: Optional[bool] = None
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Run the full MiRU hidden recurrence (eqs. 1-2) on this
+        substrate over ``x_seq`` (B, T, n_x). ``cfg`` is a
+        :class:`repro.core.miru.MiRUConfig`-shaped record (beta, lam,
+        n_h, dtype). Returns (h_all, h_prev, pre), each (B, T, n_h).
+
+        The default is the per-timestep scan: two ``device_vmm`` calls
+        and one ``device_readout`` per step, PRNG key split 3-way per
+        step. Substrates with a fused one-kernel path (WBS/analog)
+        override this hook; ``fused`` lets the trainer force the
+        per-step path (False) or defer to the backend (None/True —
+        ignored here, the default *is* the per-step path). All metering
+        happens through the ``device_*`` hooks inside a ``scaled(T)``
+        scope, so counters are identical across implementations.
+        """
+        del fused
+        B, T, _ = x_seq.shape
+
+        def step(carry, x_t):
+            h, k = carry
+            k, k1, k2 = jax.random.split(k, 3)
+            pre = self.device_vmm(x_t, params["w_h"], k1,
+                                  state=state, tag="w_h") \
+                + self.device_vmm(cfg.beta * h, params["u_h"], k2,
+                                  state=state, tag="u_h") \
+                + params["b_h"]
+            pre = self.device_readout(pre)
+            h_tilde = jnp.tanh(pre)
+            h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
+            return (h_new, k), (h_new, h, pre)
+
+        h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
+        with self.telemetry.scaled(T):
+            (_, _), (h_all, h_prev, pre) = jax.lax.scan(
+                step, (h0, key), jnp.swapaxes(x_seq, 0, 1))
+        return (jnp.swapaxes(h_all, 0, 1), jnp.swapaxes(h_prev, 0, 1),
+                jnp.swapaxes(pre, 0, 1))
 
     def device_apply_update(self, params: PyTree, updates: PyTree,
                             key: Optional[jax.Array] = None,

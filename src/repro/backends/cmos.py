@@ -12,6 +12,11 @@ charges each metered op the paper-calibrated digital per-op energy
 (``M2RUCostModel.digital_pj_per_op`` — MAC + memory traffic at
 iso-throughput), which is what reproduces the 29× efficiency gap against
 a metered analog run of the same workload (``repro.telemetry.report``).
+
+No fused recurrence: with no readout ADC there is no per-step
+re-quantization to absorb sub-LSB fp scheduling, so the WBS-family fused
+scan cannot be bit-identical here — ``_fused_recurrence_ok`` keeps this
+substrate on the per-step ``device_vmm`` path (see docs/kernels.md).
 """
 from __future__ import annotations
 

@@ -4,6 +4,12 @@ This is the paper's software baseline: ``vmm`` is a plain matrix product
 and ``apply_update`` is the exact ``params + updates`` used by the Adam and
 DFA software trainers. Guaranteed bit-identical to the pre-backend
 ``miru_forward``/``apply_updates`` paths (asserted in tests/test_backends).
+
+Recurrences use the base per-timestep scan (``device_recurrence``
+default): the quantized fused WBS×MiRU kernel does not apply to a
+full-precision substrate, and XLA already fuses the plain-matmul scan
+body well (the ideal *float* fused path lives in ``kernels/miru_scan``
+behind ``miru_forward(use_fused=True)``).
 """
 from __future__ import annotations
 

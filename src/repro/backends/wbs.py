@@ -74,11 +74,17 @@ class WBSBackend(DeviceBackend):
     name = "wbs"
 
     def __init__(self, spec: Optional[DeviceSpec] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 fused_recurrence: bool = True):
         super().__init__(spec)
         # None = auto: Pallas kernel when compiled (non-CPU), jnp reference
         # in interpret-mode environments.
         self.use_kernel = use_kernel
+        # Route miru recurrences through the one-kernel fused scan
+        # (kernels/wbs_miru_scan) instead of the per-timestep device_vmm
+        # loop. Bit-identical at read_sigma == 0 (asserted in tests);
+        # False forces the per-step path.
+        self.fused_recurrence = fused_recurrence
 
     @classmethod
     def default_spec(cls) -> DeviceSpec:
@@ -127,6 +133,73 @@ class WBSBackend(DeviceBackend):
             y = wbs_vmm(drive, w, wspec,
                         key=key if self.spec.gain_sigma > 0 else None)
         return _ste_matmul(jax.lax.stop_gradient(y * scale), drive, weights)
+
+    # ------------------------------------------------------------------
+    # Fused one-kernel recurrence (kernels/wbs_miru_scan)
+    # ------------------------------------------------------------------
+    def _fused_recurrence_ok(self, state) -> bool:
+        """The fused scan reads the logical weight matrices directly, so
+        it is only valid for stateless substrates with a WBS drive — and
+        only with the fused output ADC on. The ADC re-quantizes the
+        integrator every step, which is what makes the fused kernel
+        bit-identical to the per-step scan; without it (the cmos digital
+        accumulator), sub-LSB fp scheduling differences between the two
+        program shapes survive, so those substrates keep the per-step
+        path."""
+        return (state is None and self.spec.input_bits is not None
+                and self.spec.adc_bits is not None)
+
+    def device_recurrence(self, params, cfg, x_seq, key, *,
+                          state=None, fused=None):
+        """Fused WBS×MiRU recurrence: ONE batched crossbar call for the
+        input projection (no sequential dependency) + one kernel for the
+        sequential part with ``u_h`` and ``h`` VMEM-resident across all
+        timesteps. Per-step plane-gain draws reproduce the per-step
+        path's exact PRNG chain, so the result is bit-identical to the
+        default per-timestep scan (including under ``gain_sigma > 0``);
+        the per-step path remains available via ``fused=False`` /
+        ``fused_recurrence=False`` and is the automatic fallback when
+        per-access read noise or device state make fusion invalid."""
+        use_fused = self.fused_recurrence if fused is None else fused
+        if not (use_fused and self._fused_recurrence_ok(state)):
+            return super().device_recurrence(params, cfg, x_seq, key,
+                                             state=state, fused=fused)
+        from repro.kernels import ops as kops
+        B, T, _ = x_seq.shape
+        n_bits = self.spec.input_bits or 8
+        scale = self._weight_scale()
+        gains_w = gains_u = None
+        if self.spec.gain_sigma > 0:
+            # The per-step scan splits (k, k1, k2) per timestep and draws
+            # one gain vector per tile from (k1, k2); replay the exact
+            # chain up front so the fused path consumes identical draws.
+            def chain(k, _):
+                k, k1, k2 = jax.random.split(k, 3)
+                return k, (k1, k2)
+
+            _, (k1s, k2s) = jax.lax.scan(chain, key, None, length=T)
+            sample = jax.vmap(self._sample_gains)
+            gains_w, gains_u = sample(k1s), sample(k2s)
+        drive = kops.wbs_input_drive(x_seq, params["w_h"], n_bits,
+                                     weight_scale=scale, gains=gains_w,
+                                     use_kernel=self.use_kernel)
+        drive = _ste_matmul(jax.lax.stop_gradient(drive), x_seq,
+                            params["w_h"])
+        h_all, h_prev, pre = kops.wbs_miru_scan(
+            drive, params["u_h"], params["b_h"], beta=cfg.beta,
+            lam=cfg.lam, n_bits=n_bits, adc_bits=self.spec.adc_bits,
+            adc_range=self.spec.adc_range, weight_scale=scale,
+            gains=gains_u, use_kernel=self.use_kernel)
+        # Metering: same counter keys and totals as the per-step path —
+        # the hoisted drive is one (B·T)-row access of w_h; the scan is
+        # T per-step accesses of u_h plus T ADC readouts.
+        tele = self.telemetry
+        tele.meter_vmm(x_seq, params["w_h"], n_bits, "w_h")
+        with tele.scaled(T):
+            tele.meter_vmm(h_all[:, 0, :], params["u_h"], n_bits, "u_h")
+            if self.spec.adc_bits is not None:
+                tele.meter_adc(pre[:, 0, :], "hidden")
+        return h_all, h_prev, pre
 
     def quantize_readout(self, pre: jax.Array) -> jax.Array:
         if self.spec.adc_bits is None:

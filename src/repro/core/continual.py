@@ -58,6 +58,13 @@ class TrainerSpec:
     adam_lr: float = 1e-3               # Adam step (adam)
     kwta_keep_frac: Optional[float] = 0.57  # ζ gradient sparsification
     seed: int = 0
+    # Fused one-kernel recurrence (kernels/wbs_miru_scan.py; bit-identical
+    # to the per-step device_vmm scan). None defers to the backend's own
+    # fused_recurrence flag — fused by default where the substrate
+    # supports it; False forces the per-step path everywhere (the
+    # --no-fused escape hatch); True insists on fusing where valid even
+    # on a backend constructed with fused_recurrence=False.
+    fused_recurrence: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +110,7 @@ class ContinualConfig:
     weight_clip: float = 1.5            # crossbar dynamic range (logical)
     track_endurance: bool = False
     seed: int = 0
+    fused_recurrence: Optional[bool] = None  # fused one-kernel recurrence
 
     def specs(self) -> tuple[TrainerSpec, ReplaySpec, DeviceBackend]:
         """Map the flat legacy record onto (TrainerSpec, ReplaySpec,
@@ -120,7 +128,8 @@ class ContinualConfig:
                               hidden_lr_scale=self.hidden_lr_scale,
                               adam_lr=self.adam_lr,
                               kwta_keep_frac=self.kwta_keep_frac,
-                              seed=self.seed)
+                              seed=self.seed,
+                              fused_recurrence=self.fused_recurrence)
         replay = ReplaySpec(capacity=self.replay_capacity,
                             ratio=self.replay_ratio, bits=self.replay_bits)
         if backend_name == "analog":
@@ -167,9 +176,10 @@ def _meter_chip_step(backend: DeviceBackend, cfg: MiRUConfig, B: int,
 def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
                         x_seq: jax.Array, key: jax.Array,
                         backend: DeviceBackend,
-                        state: Optional[Any] = None
+                        state: Optional[Any] = None,
+                        fused: Optional[bool] = None
                         ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """MiRU forward with the hidden-layer matrix products routed through a
+    """MiRU forward with the hidden-layer recurrence routed through a
     device backend.
 
     On the chip the hidden crossbar holds [W_h; U_h] on shared wordlines
@@ -184,6 +194,13 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
     (``miru_apply_readout``) stays digital — the paper's K-WTA voltage
     readout is modeled there, not in the backend.
 
+    The recurrence itself is the backend's
+    :meth:`~repro.backends.DeviceBackend.device_recurrence`: a
+    per-timestep ``device_vmm`` scan by default, or the fused one-kernel
+    WBS×MiRU scan on substrates that support it (bit-identical; see
+    ``kernels/wbs_miru_scan.py``). ``fused=False`` forces the per-step
+    path; None defers to the backend's ``fused_recurrence`` flag.
+
     ``state`` is the backend's device state (conductance pairs for
     ``analog_state``); stateless backends ignore it. When the backend's
     telemetry is enabled, every tile access, ADC conversion and
@@ -193,28 +210,11 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
     B, T, _ = x_seq.shape
     tele = backend.telemetry
 
-    def step(carry, x_t):
-        h, k = carry
-        k, k1, k2 = jax.random.split(k, 3)
-        pre = backend.device_vmm(x_t, params["w_h"], k1,
-                                 state=state, tag="w_h") \
-            + backend.device_vmm(cfg.beta * h, params["u_h"], k2,
-                                 state=state, tag="u_h") \
-            + params["b_h"]
-        pre = backend.device_readout(pre)
-        h_tilde = jnp.tanh(pre)
-        h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
-        return (h_new, k), (h_new, h, pre)
-
-    h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
+    h_all, h_prev, pre = backend.device_recurrence(
+        params, cfg, x_seq, key, state=state, fused=fused)
     with tele.scaled(T):
-        (_, _), (h_all, h_prev, pre) = jax.lax.scan(
-            step, (h0, key), jnp.swapaxes(x_seq, 0, 1))
         _meter_chip_step(backend, cfg, B, anchor=x_seq)
     tele.record({meters.SEQUENCES: B}, anchor=x_seq)
-    h_all = jnp.swapaxes(h_all, 0, 1)
-    h_prev = jnp.swapaxes(h_prev, 0, 1)
-    pre = jnp.swapaxes(pre, 0, 1)
     logits = miru_apply_readout(params, cfg, h_all[:, -1, :])
     tele.emit_pending()
     return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
@@ -247,7 +247,8 @@ def _make_raw_steps(cfg: MiRUConfig, trainer: TrainerSpec,
     opt = adam(trainer.adam_lr)
 
     def fwd(p, c, xs, k, st):
-        return miru_forward_device(p, c, xs, k, backend, state=st)
+        return miru_forward_device(p, c, xs, k, backend, state=st,
+                                   fused=trainer.fused_recurrence)
 
     if trainer.algo == "adam":
         def train_step(params, opt_state, key, x, y, dev_state):

@@ -4,6 +4,10 @@
   TPU-adapted: bit-planes as MXU matmuls, fused gains + ADC epilogue).
 - miru_scan:  fused MiRU recurrence (grid-sequential time, h carried in
   VMEM scratch — the TPU analogue of the paper's tiled interpolation).
+- wbs_miru_scan: the device-true fused recurrence — WBS quantization,
+  per-step plane gains, bit-plane MXU accumulation and the ADC epilogue
+  all inside one kernel, with u_h and h VMEM-resident across timesteps
+  (bit-identical to the per-step device_vmm scan; docs/kernels.md).
 - kwta:       k-winner-take-all via threshold bisection (digital twin of
   the voltage-mode circuit, Fig. 3-Right).
 - flash_attention: fwd + dq/dkv bwd kernels — the beyond-paper fix for

@@ -223,15 +223,23 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, dout,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "bq", "bk", "sk_true", "interpret"))
+    "causal", "bq", "bk", "sk_true", "q_heads", "kv_heads", "interpret"))
 def flash_attention_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                                causal: bool = True, bq: int = 128,
                                bk: int = 128, sk_true: int | None = None,
+                               q_heads: int | None = None,
+                               kv_heads: int | None = None,
                                interpret: bool = False
                                ) -> tuple[jax.Array, jax.Array]:
-    """q (BH, Sq, dh); k/v (BH, Sk, dh|dv), Sq % bq == Sk % bk == 0.
+    """q (B·H, Sq, dh); k/v (B·Kh, Sk, dh|dv), Sq % bq == Sk % bk == 0.
 
-    Returns (out (BH, Sq, dv), lse (BH, Sq)).
+    GQA: with ``q_heads``/``kv_heads`` set, K/V carry only Kh heads and
+    the kv→q head mapping is folded into the BlockSpec index maps — each
+    query head's grid cells fetch their shared KV block directly from the
+    un-repeated (B·Kh, …) arrays, instead of the caller materializing a
+    rep×-repeated copy in HBM. Unset, K/V batch must equal q's.
+
+    Returns (out (B·H, Sq, dv), lse (B·H, Sq)).
     """
     BH, Sq, dh = q.shape
     Sk = k.shape[1]
@@ -239,6 +247,20 @@ def flash_attention_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
     if sk_true is None:
         sk_true = Sk
+    if q_heads is not None and kv_heads is not None and \
+            q_heads != kv_heads:
+        assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+        assert BH % q_heads == 0, (BH, q_heads)
+        assert k.shape[0] == BH // q_heads * kv_heads, (k.shape, BH)
+        rep = q_heads // kv_heads
+
+        def kv_batch(b):
+            return (b // q_heads) * kv_heads + (b % q_heads) // rep
+    else:
+        assert k.shape[0] == BH, (k.shape, BH)
+
+        def kv_batch(b):
+            return b
     n_k = Sk // bk
     scale = dh ** -0.5
     grid = (BH, Sq // bq, n_k)
@@ -250,8 +272,10 @@ def flash_attention_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda b, i, j: (kv_batch(b), j, 0)),
+            pl.BlockSpec((1, bk, dv),
+                         lambda b, i, j: (kv_batch(b), j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),

@@ -7,6 +7,7 @@ where a kernel's VMEM contract would be violated (documented per-op).
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Optional
 
@@ -17,6 +18,7 @@ from repro.kernels import ref
 from repro.kernels.kwta import kwta_pallas
 from repro.kernels.miru_scan import miru_scan_pallas
 from repro.kernels.wbs_matmul import wbs_matmul_pallas
+from repro.kernels.wbs_miru_scan import wbs_miru_scan_pallas
 from repro.utils import round_up
 
 
@@ -133,6 +135,182 @@ def miru_scan(xw: jax.Array, u_h: jax.Array, h0: jax.Array, beta: float,
 
 
 # ---------------------------------------------------------------------------
+# Device-true fused recurrence (WBS × MiRU)
+# ---------------------------------------------------------------------------
+
+# VMEM guard for the fused kernel: the (Hp, Hp) recurrent tile must stay
+# resident for all T steps next to the state/drive buffers; past 1024
+# (4 MB f32) the budget is gone and ops falls back to the jnp reference.
+_FUSED_H_LIMIT = 1024
+
+_FusedStatic = collections.namedtuple(
+    "_FusedStatic",
+    "beta lam n_bits adc_bits adc_range weight_scale use_kernel")
+
+
+def wbs_input_drive(x_seq: jax.Array, w_h: jax.Array, n_bits: int,
+                    weight_scale: float = 1.0,
+                    gains: Optional[jax.Array] = None,
+                    use_kernel: Optional[bool] = None) -> jax.Array:
+    """The hoisted WBS input projection: the x@W_h half of the MiRU
+    recurrence has no sequential dependency, so the whole (B, T, K)
+    sequence is sign-magnitude quantized and driven through the crossbar
+    as ONE batched (B·T, K) matmul instead of T per-step calls.
+
+    ``gains`` is (T, n_bits) per-step plane gains (the per-step path
+    draws a fresh gain vector per timestep under ``gain_sigma > 0``) or
+    None for ideal ratios. Returns the quantized drive (B, T, H) f32,
+    bit-identical per row to the per-step ``wbs_vmm``/``wbs_matmul``
+    evaluation. No bias, no ADC — both are applied inside the scan.
+    """
+    B, T, K = x_seq.shape
+    use_kernel = use_kernel if use_kernel is not None else not _interpret()
+    w = (w_h / weight_scale).astype(jnp.float32)
+    norm = 2.0 ** n_bits / (2.0 ** n_bits - 1.0)
+    x2 = x_seq.reshape(B * T, K)
+    if gains is None and use_kernel:
+        sign, code = quantize_inputs(x2, n_bits)
+        g = 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
+        y = wbs_matmul(sign, code, w, g)        # epilogue applies ``norm``
+    elif gains is None:
+        # Ideal ratios: Σ_k 2^{-k}·plane_k is exactly code·2^{-n_b}
+        # (dyadic), the same collapse XLA applies to the per-step einsum.
+        top = float(2 ** n_bits - 1)
+        deq = jnp.clip(jnp.round(x2 * top), -top, top) * (2.0 ** -n_bits)
+        y = jnp.dot(deq, w, preferred_element_type=jnp.float32) * norm
+    else:
+        # Per-step plane gains: accumulate the gain-weighted bit planes
+        # one plane at a time — MSB first, the same reduction order as
+        # the per-step einsum collapse — without materializing the full
+        # (n_bits, B, T, K) plane stack. Sign distributes exactly over
+        # the dyadic plane sum, so it is applied once at the end.
+        sign, code = quantize_inputs(x2.reshape(B, T, K), n_bits)
+        codes = code.astype(jnp.int32)
+        g = gains.astype(jnp.float32)
+        deq = jnp.zeros((B, T, K), jnp.float32)
+        for b in range(n_bits):
+            shift = n_bits - 1 - b
+            plane = ((codes >> shift) & 1).astype(jnp.float32)
+            deq = deq + g[None, :, b, None] * plane
+        deq = deq * sign.astype(jnp.float32)
+        y = jnp.dot(deq.reshape(B * T, K), w,
+                    preferred_element_type=jnp.float32) * norm
+    return (y * weight_scale).reshape(B, T, w.shape[-1])
+
+
+def _wbs_miru_scan_primal(static: _FusedStatic, drive, u_h, h0, b_h,
+                          gains):
+    B, T, H = drive.shape
+    use_kernel = static.use_kernel if static.use_kernel is not None \
+        else not _interpret()
+    u_scaled = (u_h / static.weight_scale).astype(jnp.float32)
+    if use_kernel and round_up(H, 128) <= _FUSED_H_LIMIT:
+        bm = 8 if B >= 8 else B
+        Bp, Hp = round_up(B, bm), round_up(H, 128)
+        drive_p = jnp.pad(drive, ((0, Bp - B), (0, 0), (0, Hp - H)))
+        u_p = jnp.pad(u_scaled, ((0, Hp - H), (0, Hp - H)))
+        h0_p = jnp.pad(h0, ((0, Bp - B), (0, Hp - H)))
+        b_p = jnp.pad(b_h.reshape(1, H), ((0, 0), (0, Hp - H)))
+        if gains is None:
+            g = 2.0 ** (-jnp.arange(1, static.n_bits + 1,
+                                    dtype=jnp.float32))
+            gains_p = jnp.tile(g[None, :], (T, 1))
+        else:
+            gains_p = gains.astype(jnp.float32)
+        h_all, h_prev, pre = wbs_miru_scan_pallas(
+            drive_p, u_p, h0_p, b_p, gains_p, beta=static.beta,
+            lam=static.lam, n_bits=static.n_bits,
+            adc_bits=static.adc_bits, adc_range=static.adc_range,
+            w_scale=static.weight_scale, bm=bm, interpret=_interpret())
+        return (h_all[:B, :, :H], h_prev[:B, :, :H], pre[:B, :, :H])
+    return ref.wbs_miru_scan_ref(
+        drive, u_scaled, h0, b_h.reshape(1, H), beta=static.beta,
+        lam=static.lam, n_bits=static.n_bits, adc_bits=static.adc_bits,
+        adc_range=static.adc_range, w_scale=static.weight_scale,
+        gains=gains)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _wbs_miru_scan_core(static: _FusedStatic, drive, u_h, h0, b_h, gains):
+    return _wbs_miru_scan_primal(static, drive, u_h, h0, b_h, gains)
+
+
+def _wbs_miru_scan_fwd(static, drive, u_h, h0, b_h, gains):
+    out = _wbs_miru_scan_primal(static, drive, u_h, h0, b_h, gains)
+    h_all, h_prev, pre = out
+    return out, (u_h, h_prev, pre, gains)
+
+
+def _wbs_miru_scan_bwd(static, res, cts):
+    """Straight-through backward — the transpose of the per-step path's
+    STE composition: the quantized matmul backpropagates as the linear
+    product with the *raw* logical weights, the ADC as identity, and the
+    λ-interpolation/tanh exactly."""
+    u_h, h_prev, pre, gains = res
+    ct_hall, ct_hprev, ct_pre = cts
+    beta, lam = static.beta, static.lam
+    u = u_h.astype(jnp.float32)
+    dtanh = 1.0 - jnp.tanh(pre) ** 2
+
+    def back(carry, inp):
+        gh, du = carry
+        ct_a, ct_hp, ct_p, dt_t, hp_t = inp
+        g_tot = ct_a + gh
+        g_pre = ct_p + (1.0 - lam) * dt_t * g_tot
+        du = du + (beta * hp_t).T @ g_pre
+        gh_prev = ct_hp + lam * g_tot + beta * (g_pre @ u.T)
+        return (gh_prev, du), g_pre
+
+    swap = lambda a: jnp.swapaxes(a, 0, 1)
+    carry0 = (jnp.zeros_like(h_prev[:, 0, :]), jnp.zeros_like(u))
+    (gh, du), g_pre_all = jax.lax.scan(
+        back, carry0,
+        (swap(ct_hall), swap(ct_hprev), swap(ct_pre), swap(dtanh),
+         swap(h_prev)),
+        reverse=True)
+    d_drive = swap(g_pre_all)
+    d_b = jnp.sum(g_pre_all, axis=(0, 1))
+    d_gains = None if gains is None else jnp.zeros_like(gains)
+    return d_drive, du.astype(u_h.dtype), gh, d_b, d_gains
+
+
+_wbs_miru_scan_core.defvjp(_wbs_miru_scan_fwd, _wbs_miru_scan_bwd)
+
+
+def wbs_miru_scan(drive: jax.Array, u_h: jax.Array, b_h: jax.Array,
+                  h0: Optional[jax.Array] = None, *, beta: float,
+                  lam: float, n_bits: int, adc_bits: Optional[int] = None,
+                  adc_range: float = 4.0, weight_scale: float = 1.0,
+                  gains: Optional[jax.Array] = None,
+                  use_kernel: Optional[bool] = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused device-true MiRU recurrence over a precomputed input drive.
+
+    drive (B, T, H) from :func:`wbs_input_drive`; u_h (H, H) *raw*
+    logical recurrent weights (the wrapper divides by ``weight_scale``
+    once, outside the scan — the per-step path re-derived it every
+    timestep); b_h (H,); gains (T, n_bits) per-step plane gains or None.
+
+    Dispatch: the single Pallas kernel (``wbs_miru_scan_pallas``) on
+    compiled targets with H ≤ ``_FUSED_H_LIMIT``; the vectorized jnp
+    reference (``ref.wbs_miru_scan_ref``) in interpret-mode environments
+    (CPU) and above the VMEM limit. Differentiable via straight-through
+    estimation (exact quantized forward, linear backward on the raw
+    weights).
+
+    Returns (h_all, h_prev, pre), each (B, T, H) f32.
+    """
+    B, T, H = drive.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, H), jnp.float32)
+    static = _FusedStatic(beta=float(beta), lam=float(lam), n_bits=n_bits,
+                          adc_bits=adc_bits, adc_range=float(adc_range),
+                          weight_scale=float(weight_scale),
+                          use_kernel=use_kernel)
+    return _wbs_miru_scan_core(static, drive, u_h, h0, b_h, gains)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (forward)
 # ---------------------------------------------------------------------------
 
@@ -141,28 +319,27 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
                         ) -> tuple[jax.Array, jax.Array]:
     """(B, Sq, H, dh) layout wrapper around the Pallas flash forward.
 
-    Pads Sq/Sk to block multiples; repeats GQA KV heads; returns
+    Pads Sq/Sk to block multiples. GQA KV heads are *not* repeated: the
+    kv→q head mapping rides the kernel's BlockSpec index maps, so the
+    un-repeated (B·Kh, Sk, ·) arrays go to the kernel as-is instead of a
+    rep×-materialized copy round-tripping HBM first. Returns
     (out (B,Sq,H,dv), lse (B,H,Sq))."""
     from repro.kernels.flash_attention import flash_attention_fwd_pallas
     B, Sq, H, dh = q.shape
     Sk, Kh = k.shape[1], k.shape[2]
-    rep = H // Kh
-    if rep > 1:
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
     dv = v.shape[-1]
     bq = min(bq, round_up(Sq, 8))
     bk = min(bk, round_up(Sk, 8))
     Sqp, Skp = round_up(Sq, bq), round_up(Sk, bk)
     qt = jnp.swapaxes(q, 1, 2).reshape(B * H, Sq, dh)
-    kt = jnp.swapaxes(k, 1, 2).reshape(B * H, Sk, dh)
-    vt = jnp.swapaxes(v, 1, 2).reshape(B * H, Sk, dv)
+    kt = jnp.swapaxes(k, 1, 2).reshape(B * Kh, Sk, dh)
+    vt = jnp.swapaxes(v, 1, 2).reshape(B * Kh, Sk, dv)
     qt = jnp.pad(qt, ((0, 0), (0, Sqp - Sq), (0, 0)))
     kt = jnp.pad(kt, ((0, 0), (0, Skp - Sk), (0, 0)))
     vt = jnp.pad(vt, ((0, 0), (0, Skp - Sk), (0, 0)))
     out, lse = flash_attention_fwd_pallas(
         qt, kt, vt, causal=causal, bq=bq, bk=bk, sk_true=Sk,
-        interpret=_interpret())
+        q_heads=H, kv_heads=Kh, interpret=_interpret())
     out = out[:, :Sq].reshape(B, H, Sq, dv)
     return jnp.swapaxes(out, 1, 2), lse[:, :Sq].reshape(B, H, Sq)
 

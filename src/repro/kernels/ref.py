@@ -54,6 +54,65 @@ def miru_scan_ref(xw: jax.Array, u_h: jax.Array, h0: jax.Array,
     return jnp.swapaxes(h_all, 0, 1), jnp.swapaxes(pre, 0, 1)
 
 
+def wbs_miru_scan_ref(drive: jax.Array, u_h: jax.Array, h0: jax.Array,
+                      b_h: jax.Array, beta: float, lam: float,
+                      n_bits: int, adc_bits: int | None = None,
+                      adc_range: float = 4.0, w_scale: float = 1.0,
+                      gains: jax.Array | None = None,
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-true fused MiRU recurrence oracle — the jnp path the CPU
+    backends execute, bit-identical to the per-timestep ``device_vmm``
+    scan (``analog/wbs.wbs_vmm`` semantics).
+
+    drive (B, T, H) = the hoisted WBS input projection (no bias);
+    u_h (H, H) recurrent weights *already divided* by the logical weight
+    scale; ``w_scale`` re-applies the scale after the normalized read.
+    ``gains`` is (T, n_bits) per-step plane gains, or None for ideal
+    ratios — with ideal ratios Σ_k 2^{-k}·plane_k is the exact dyadic
+    value code·2^{-n_b}, so the per-plane contraction collapses to a
+    single matmul with no fp difference (XLA performs the same collapse
+    on the per-step einsum; asserted in tests/test_fused_recurrence.py).
+
+    Returns (h_all, h_prev, pre), each (B, T, H) f32.
+    """
+    top = float(2 ** n_bits - 1)
+    norm = 2.0 ** n_bits / (2.0 ** n_bits - 1.0)
+    u = u_h.astype(jnp.float32)
+    shifts = jnp.arange(n_bits - 1, -1, -1, dtype=jnp.int32)  # MSB first
+
+    def step(h, inp):
+        d_t, g_t = inp
+        bh = beta * h
+        if g_t is None:
+            # Ideal plane gains: the gain-weighted plane sum is exactly
+            # the signed code scaled by 2^-n_b (dyadic, order-free).
+            deq = jnp.clip(jnp.round(bh * top), -top, top) * (2.0 ** -n_bits)
+        else:
+            mag = jnp.clip(jnp.round(jnp.abs(bh) * top), 0.0, top)
+            sign = jnp.sign(bh)
+            planes = ((mag.astype(jnp.int32)[None]
+                       >> shifts[:, None, None]) & 1).astype(jnp.float32)
+            deq = jnp.einsum("k,kbi->bi", g_t, planes * sign[None])
+        y = jnp.dot(deq, u, preferred_element_type=jnp.float32)
+        y = y * norm * w_scale
+        pre = (d_t + y) + b_h[0]
+        if adc_bits is not None:
+            from repro.analog.adc import adc_quantize
+            pre = adc_quantize(pre, adc_bits, adc_range)
+        h_new = lam * h + (1.0 - lam) * jnp.tanh(pre)
+        return h_new, (h_new, h, pre)
+
+    drive_t = jnp.swapaxes(drive, 0, 1).astype(jnp.float32)
+    if gains is None:
+        _, outs = jax.lax.scan(lambda h, d: step(h, (d, None)),
+                               h0.astype(jnp.float32), drive_t)
+    else:
+        _, outs = jax.lax.scan(step, h0.astype(jnp.float32),
+                               (drive_t, gains.astype(jnp.float32)))
+    h_all, h_prev, pre = (jnp.swapaxes(o, 0, 1) for o in outs)
+    return h_all, h_prev, pre
+
+
 def kwta_ref(x: jax.Array, k: int) -> jax.Array:
     """Exact per-row k-WTA by magnitude (rows = leading dim)."""
     if k >= x.shape[-1]:

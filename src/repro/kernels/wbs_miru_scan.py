@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: fused device-true MiRU recurrence (WBS × eqs. 1-2).
+
+This is the quantized-hardware analogue of ``miru_scan``: one kernel runs
+the *entire* hidden recurrence the way the chip does — the recurrent
+crossbar tile and the hidden state never leave VMEM between timesteps —
+instead of the per-timestep hot loop that launches a fresh
+``wbs_matmul_pallas`` grid (plus re-quantization and re-padding in jnp and
+an HBM round-trip for ``h``) at every step.
+
+Dataflow per (i, t) grid cell (T innermost ⇒ sequential time per batch
+tile, the paper's §IV-B-1 tiling with ``h`` in the shift-register file):
+
+  VMEM-resident across all T steps:  u_ref   (H, H)  pre-scaled U_h/clip
+                                     h_scr   (bm, H) carried hidden state
+  streamed per step:                 drive   (bm, 1, H) precomputed input
+                                     gains   (1, nb)   per-step plane gains
+  per step, entirely in VMEM:
+    1. sign-magnitude quantize β·h to n_bits   (the WBS buffer write)
+    2. acc = Σ_b gains[t, b] · (plane_b ⊙ sign) @ u      (MXU per plane)
+    3. pre = (drive_t + acc·2^nb/(2^nb−1)·w_scale) + b_h (the integrator)
+    4. ADC epilogue (optional mid-rise quantizer)
+    5. h ← λ·h + (1−λ)·tanh(pre)               (the λ-interpolator)
+
+The input projection x@W_h has no sequential dependency, so it is NOT in
+this kernel: callers hoist it into one batched (B·T, K) WBS matmul
+(``ops.wbs_input_drive``) and pass the resulting drive.
+
+``gains`` is (T, n_bits): per-step memristor-ratio plane gains, so a
+stochastic gain draw per timestep (the per-step path's behavior under
+``gain_sigma > 0``) streams through the same kernel; ideal ratios are just
+T identical rows.
+
+Bit-exactness contract: at ``read_sigma == 0`` this kernel computes the
+same per-plane accumulation order as the per-timestep
+``wbs_matmul_pallas`` path, and ``ref.wbs_miru_scan_ref`` mirrors the jnp
+(einsum) per-step path — both asserted in tests/test_fused_recurrence.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wbs_miru_kernel(drive_ref, u_ref, h0_ref, b_ref, gains_ref,
+                     hall_ref, hprev_ref, pre_ref, h_scr, *,
+                     beta: float, lam: float, n_bits: int,
+                     adc_bits: Optional[int], adc_range: float,
+                     w_scale: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    h = h_scr[...]
+    u = u_ref[...].astype(jnp.float32)
+
+    # 1. Sign-magnitude quantization of the recurrent drive β·h — the
+    # host-side buffer write the per-step path does in jnp, here done
+    # in-kernel so h never leaves VMEM.
+    top = float(2 ** n_bits - 1)
+    bh = beta * h
+    mag = jnp.clip(jnp.round(jnp.abs(bh) * top), 0.0, top)
+    sign = jnp.sign(bh)
+    code = mag.astype(jnp.int32)
+
+    # 2. One MXU matmul per bit plane, gain-weighted with this step's
+    # plane gains (same accumulation order as wbs_matmul_pallas).
+    acc = jnp.zeros_like(h)
+    for b in range(n_bits):
+        shift = n_bits - 1 - b                     # MSB first (k=1 ⇒ 2^-1)
+        plane = ((code >> shift) & 1).astype(jnp.float32) * sign
+        acc = acc + gains_ref[0, b] * jnp.dot(
+            plane, u, preferred_element_type=jnp.float32)
+
+    # 3. Integrator: normalized crossbar read, de-scaled to logical
+    # weights, summed with the precomputed input drive and the bias —
+    # in the exact fp order of the per-step path: (v_w + v_u) + b_h.
+    y = acc * (2.0 ** n_bits / (2.0 ** n_bits - 1.0)) * w_scale
+    pre = (drive_ref[:, 0, :].astype(jnp.float32) + y) + b_ref[...]
+
+    # 4. Fused output ADC (mid-rise, matching analog/adc.adc_quantize).
+    if adc_bits is not None:
+        levels = 2 ** adc_bits
+        step = 2.0 * adc_range / levels
+        pre = jnp.clip(jnp.round(pre / step),
+                       -(levels // 2), levels // 2 - 1) * step
+
+    # 5. λ-interpolation; h stays in VMEM for the next step.
+    h_new = lam * h + (1.0 - lam) * jnp.tanh(pre)
+    h_scr[...] = h_new
+    hall_ref[:, 0, :] = h_new
+    hprev_ref[:, 0, :] = h
+    pre_ref[:, 0, :] = pre
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta", "lam", "n_bits", "adc_bits", "adc_range", "w_scale", "bm",
+    "interpret"))
+def wbs_miru_scan_pallas(drive: jax.Array, u_scaled: jax.Array,
+                         h0: jax.Array, b_h: jax.Array, gains: jax.Array,
+                         beta: float, lam: float, n_bits: int,
+                         adc_bits: Optional[int] = None,
+                         adc_range: float = 4.0, w_scale: float = 1.0,
+                         bm: int = 8, interpret: bool = False
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """drive (B, T, H) precomputed input projection (no bias); u_scaled
+    (H, H) recurrent weights already divided by the logical weight scale;
+    h0 (B, H); b_h (1, H); gains (T, n_bits) per-step plane gains.
+
+    Returns (h_all, h_prev, pre), each (B, T, H) f32. B must divide by bm
+    and H should be 128-aligned (ops.py pads; zero-padding is exact —
+    padded columns quantize to sign 0 and contribute nothing).
+    """
+    B, T, H = drive.shape
+    assert B % bm == 0, (B, bm)
+    assert u_scaled.shape == (H, H) and h0.shape == (B, H)
+    assert b_h.shape == (1, H) and gains.shape == (T, n_bits)
+
+    grid = (B // bm, T)
+    kernel = functools.partial(
+        _wbs_miru_kernel, beta=float(beta), lam=float(lam), n_bits=n_bits,
+        adc_bits=adc_bits, adc_range=float(adc_range),
+        w_scale=float(w_scale))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),   # drive
+            pl.BlockSpec((H, H), lambda i, t: (0, 0)),          # u_scaled
+            pl.BlockSpec((bm, H), lambda i, t: (i, 0)),         # h0
+            pl.BlockSpec((1, H), lambda i, t: (0, 0)),          # b_h
+            pl.BlockSpec((1, gains.shape[1]), lambda i, t: (t, 0)),  # gains
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),   # h_all
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),   # h_prev
+            pl.BlockSpec((bm, 1, H), lambda i, t: (i, t, 0)),   # pre
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, H), jnp.float32)],
+        interpret=interpret,
+    )(drive, u_scaled, h0, b_h, gains)
+    return out[0], out[1], out[2]

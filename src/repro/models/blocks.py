@@ -46,12 +46,36 @@ def init_miru_mixer(key: jax.Array, cfg: ModelConfig) -> dict:
 def miru_mixer(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     from repro.kernels import ops as kops
     B, S, D = x.shape
-    xw = (x.reshape(-1, D) @ p["w_h"].astype(x.dtype)).reshape(B, S, D) \
-        + p["b_h"].astype(x.dtype)
-    h0 = jnp.zeros((B, D), jnp.float32)
-    h_all, _ = kops.miru_scan(xw.astype(jnp.float32),
-                              p["u_h"].astype(jnp.float32), h0,
-                              beta=0.8, lam=0.5)
+    if cfg.quant_mode != "none":
+        # Quantized serving: route the whole recurrence through the shared
+        # inference backend's device_recurrence hook — the same substrate
+        # (per-step device_vmm scan, or the fused WBS×MiRU kernel where
+        # the spec supports it) and the same telemetry accumulator the
+        # training forward uses, instead of a float recurrence next to
+        # quantized projections. The PRNG is pinned: serving is
+        # deterministic; stochastic specs draw a fixed gain realization.
+        from repro.backends import inference_backend
+        from repro.core.miru import MiRUConfig
+        backend = inference_backend(cfg.quant_mode)
+        mcfg = MiRUConfig(n_x=D, n_h=D, n_y=2, beta=0.8, lam=0.5)
+        # Normalize activations into the crossbar's [-1, 1] drive range
+        # and compensate in w_h (the same absmax trick dense() uses) —
+        # post-norm hidden states routinely exceed ±1 and would saturate
+        # the sign-magnitude quantizer. The recurrent drive β·h is
+        # tanh-bounded, so it never needs the rescale.
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6).astype(jnp.float32)
+        mp = {"w_h": p["w_h"].astype(jnp.float32) * s,
+              "u_h": p["u_h"].astype(jnp.float32),
+              "b_h": p["b_h"].astype(jnp.float32)}
+        h_all, _, _ = backend.device_recurrence(
+            mp, mcfg, x.astype(jnp.float32) / s, jax.random.PRNGKey(0))
+    else:
+        xw = (x.reshape(-1, D) @ p["w_h"].astype(x.dtype)).reshape(B, S, D) \
+            + p["b_h"].astype(x.dtype)
+        h0 = jnp.zeros((B, D), jnp.float32)
+        h_all, _ = kops.miru_scan(xw.astype(jnp.float32),
+                                  p["u_h"].astype(jnp.float32), h0,
+                                  beta=0.8, lam=0.5)
     return dense(h_all.astype(x.dtype), p["w_out"],
                  quant_mode=cfg.quant_mode)
 

@@ -27,6 +27,12 @@ count maps and folded into the telemetry/endurance tracker host-side.
 Scenarios whose streams are not shape-uniform across tasks cannot scan;
 :func:`run_compiled` falls back to the Python loop for those and says so
 in the result (``"compiled": False``).
+
+Device substrates with a fused recurrence (wbs/analog) ride it inside
+the compiled sweep automatically — the step functions come from the same
+:func:`_make_raw_steps` closures, so the per-batch loop and the
+scan-over-tasks stay bit-comparable on the fused path too
+(``TrainerSpec.fused_recurrence=False`` forces the per-step scan).
 """
 from __future__ import annotations
 

@@ -1,0 +1,288 @@
+"""Fused one-kernel WBS×MiRU recurrence vs the per-timestep device scan.
+
+The contract (kernels/wbs_miru_scan.py, backends/wbs.py): on substrates
+with a WBS drive and the fused output ADC, ``device_recurrence`` runs the
+whole quantized recurrence as one hoisted input projection + one fused
+scan, and the result is **bit-identical** to the per-step ``device_vmm``
+loop — including under per-step plane-gain noise, whose PRNG chain the
+fused path replays exactly. Telemetry counters must also be exactly
+equal between the two paths.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import DeviceSpec, get_backend
+from repro.core.continual import (ReplaySpec, TrainerSpec,
+                                  miru_forward_device, run_continual)
+from repro.core.miru import MiRUConfig, init_miru_params
+from repro.kernels import ops, ref
+
+
+def _forward_pair(B, T, K, H, n_bits=8, adc_bits=8, gain_sigma=0.0,
+                  backend_name="wbs", seed=0):
+    cfg = MiRUConfig(n_x=K, n_h=H, n_y=4)
+    params = init_miru_params(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(seed + 10), (B, T, K),
+                           minval=-1, maxval=1)
+    key = jax.random.PRNGKey(seed + 20)
+    spec = DeviceSpec(input_bits=n_bits, adc_bits=adc_bits, adc_range=4.0,
+                      weight_clip=1.5, gain_sigma=gain_sigma)
+    backend = get_backend(backend_name, spec=spec)
+    fused = jax.jit(lambda p, xs, k:
+                    miru_forward_device(p, cfg, xs, k, backend, fused=True))
+    step = jax.jit(lambda p, xs, k:
+                   miru_forward_device(p, cfg, xs, k, backend, fused=False))
+    return fused(params, x, key), step(params, x, key)
+
+
+def _assert_bitwise(got, want):
+    (l1, a1), (l2, a2) = got, want
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for k in a1:
+        np.testing.assert_array_equal(np.asarray(a1[k]),
+                                      np.asarray(a2[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: fused vs per-step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,k,h", [
+    (32, 28, 28, 100),      # the paper's 28×100×10 config
+    (3, 5, 12, 37),         # ragged B/H needing padding
+    (1, 1, 5, 8),           # degenerate single step
+    (5, 11, 7, 130),        # H just past one 128 lane tile
+    (2, 33, 3, 64),
+])
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_fused_bitwise_identical(b, t, k, h, n_bits):
+    got, want = _forward_pair(b, t, k, h, n_bits=n_bits)
+    _assert_bitwise(got, want)
+
+
+@pytest.mark.parametrize("adc_bits", [8, 6])
+def test_fused_bitwise_identical_adc_widths(adc_bits):
+    got, want = _forward_pair(4, 9, 12, 48, adc_bits=adc_bits)
+    _assert_bitwise(got, want)
+
+
+def test_fused_bitwise_identical_under_gain_noise():
+    """gain_sigma > 0: the fused path replays the per-step (k, k1, k2)
+    split chain, so even the stochastic plane-gain draws are identical."""
+    for name in ("wbs", "analog"):
+        got, want = _forward_pair(4, 7, 12, 32, gain_sigma=0.02,
+                                  backend_name=name)
+        _assert_bitwise(got, want)
+
+
+def test_fused_falls_back_without_adc():
+    """adc_bits=None (the cmos digital accumulator): no ADC to absorb
+    sub-LSB fp scheduling, so the backend keeps the per-step path — the
+    two entry points must be the *same* computation."""
+    spec = DeviceSpec(input_bits=8, adc_bits=None, weight_clip=1.5)
+    backend = get_backend("wbs", spec=spec)
+    assert not backend._fused_recurrence_ok(None)
+    got, want = _forward_pair(3, 5, 12, 37, adc_bits=None)
+    _assert_bitwise(got, want)
+
+
+def test_analog_read_sigma_disables_fusion():
+    """Per-access conductance read noise cannot be hoisted into a
+    VMEM-resident tile; the analog backend must refuse to fuse."""
+    from repro.analog.crossbar import CrossbarSpec
+    spec = DeviceSpec(input_bits=8, adc_bits=8, weight_clip=1.5,
+                      crossbar=CrossbarSpec(read_sigma=0.05, w_clip=1.5))
+    backend = get_backend("analog", spec=spec)
+    assert not backend._fused_recurrence_ok(None)
+    assert get_backend("analog")._fused_recurrence_ok(None)
+
+
+def test_analog_state_never_fuses():
+    backend = get_backend("analog_state")
+    assert not backend._fused_recurrence_ok(None)
+
+
+def test_backend_flag_respected_when_trainer_defers(monkeypatch):
+    """TrainerSpec.fused_recurrence defaults to None = defer to the
+    backend, so a backend constructed with fused_recurrence=False keeps
+    the per-step path under a default trainer — and fused=True overrides
+    the backend's opt-out. Dispatch is observed directly (the two paths
+    are bit-identical, so output equality cannot distinguish them)."""
+    assert TrainerSpec().fused_recurrence is None
+
+    hits = []
+    real = ops.wbs_miru_scan
+    monkeypatch.setattr(ops, "wbs_miru_scan",
+                        lambda *a, **kw: hits.append(1) or real(*a, **kw))
+    cfg = MiRUConfig(n_x=8, n_h=16, n_y=3)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 3, 8),
+                           minval=-1, maxval=1)
+
+    opted_out = get_backend("wbs", fused_recurrence=False)
+    miru_forward_device(params, cfg, x, jax.random.PRNGKey(2), opted_out,
+                        fused=None)
+    assert not hits                      # backend's False honored
+    miru_forward_device(params, cfg, x, jax.random.PRNGKey(2), opted_out,
+                        fused=True)
+    assert hits                          # explicit trainer True overrides
+    hits.clear()
+    miru_forward_device(params, cfg, x, jax.random.PRNGKey(2),
+                        get_backend("wbs"), fused=None)
+    assert hits                          # default backend fuses
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: counters exactly equal between the two paths
+# ---------------------------------------------------------------------------
+
+def test_fused_telemetry_counters_equal():
+    cfg = MiRUConfig(n_x=12, n_h=32, n_y=5)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 7, 12),
+                           minval=-1, maxval=1)
+    snaps = {}
+    for fused in (True, False):
+        backend = get_backend("analog")
+        backend.telemetry.enable()
+        f = jax.jit(lambda p, xs, k: miru_forward_device(
+            p, cfg, xs, k, backend, fused=fused)[0])
+        f(params, x, jax.random.PRNGKey(3)).block_until_ready()
+        snaps[fused] = backend.telemetry.snapshot()
+    assert snaps[True] == snaps[False]
+    # Spot-check the hand-computed totals: B=4, T=7, K=12, H=32, nb=8.
+    assert snaps[True]["vmm_rows/w_h"] == 4 * 7
+    assert snaps[True]["macs/u_h"] == 4 * 7 * 32 * 32
+    assert snaps[True]["bit_pulses/w_h"] == 4 * 7 * 12 * 8
+    assert snaps[True]["adc_conversions/hidden"] == 4 * 7 * 32
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: Pallas interpret mode vs the jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h", [(1, 1, 8), (3, 5, 37), (8, 9, 128),
+                                   (5, 4, 130)])
+@pytest.mark.parametrize("adc_bits", [8, None])
+def test_wbs_miru_scan_kernel_vs_ref(b, t, h, adc_bits):
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + t + h), 3)
+    drive = jax.random.normal(ks[0], (b, t, h))
+    u = jax.random.normal(ks[1], (h, h)) * 0.3
+    b_h = jax.random.normal(ks[2], (h,)) * 0.1
+    kw = dict(beta=0.8, lam=0.5, n_bits=8, adc_bits=adc_bits,
+              adc_range=4.0, weight_scale=1.5)
+    got = ops.wbs_miru_scan(drive, u, b_h, use_kernel=True, **kw)
+    want = ops.wbs_miru_scan(drive, u, b_h, use_kernel=False, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_wbs_miru_scan_kernel_per_step_gains():
+    """The (T, n_bits) per-step gains input streams through the kernel's
+    BlockSpec — one gain row per timestep."""
+    B, T, H, nb = 4, 6, 40, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    drive = jax.random.normal(ks[0], (B, T, H))
+    u = jax.random.normal(ks[1], (H, H)) * 0.3
+    b_h = jnp.zeros((H,))
+    gains = (2.0 ** (-jnp.arange(1, nb + 1, dtype=jnp.float32)))[None, :] \
+        * (1.0 + 0.05 * jax.random.normal(ks[2], (T, nb)))
+    kw = dict(beta=0.8, lam=0.5, n_bits=nb, adc_bits=8, adc_range=4.0,
+              weight_scale=1.5, gains=gains)
+    got = ops.wbs_miru_scan(drive, u, b_h, use_kernel=True, **kw)
+    want = ops.wbs_miru_scan(drive, u, b_h, use_kernel=False, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_wbs_input_drive_matches_per_step_vmm():
+    """The hoisted (B·T, K) projection equals T per-step wbs_vmm calls
+    bit-for-bit."""
+    from repro.analog.wbs import WBSSpec, wbs_vmm
+    B, T, K, H, nb = 3, 5, 12, 37, 8
+    x = jax.random.uniform(jax.random.PRNGKey(1), (B, T, K),
+                           minval=-1, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, H)) * 0.3
+    wspec = WBSSpec(n_bits=nb, gain_sigma=0.0, adc_bits=None)
+    per_t = jax.jit(lambda x, w: jnp.stack(
+        [wbs_vmm(x[:, t], w / 1.5, wspec) * 1.5 for t in range(T)], axis=1))
+    hoisted = jax.jit(lambda x, w: ops.wbs_input_drive(
+        x, w, nb, weight_scale=1.5))
+    np.testing.assert_array_equal(np.asarray(per_t(x, w)),
+                                  np.asarray(hoisted(x, w)))
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="compiled-kernel parity needs a TPU target")
+def test_fused_kernel_bitwise_on_accelerator():
+    """On compiled targets both paths run Pallas kernels with identical
+    per-plane accumulation order — bitwise, not just allclose."""
+    got, want = _forward_pair(8, 8, 16, 128)
+    _assert_bitwise(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Gradients and end-to-end training
+# ---------------------------------------------------------------------------
+
+def test_fused_adam_gradients_close():
+    """BPTT through the fused scan: the STE custom-VJP matches the
+    per-step STE composition (same linearized graph; accumulation order
+    differs, so allclose rather than bitwise)."""
+    from repro.utils import softmax_cross_entropy
+    cfg = MiRUConfig(n_x=12, n_h=32, n_y=5)
+    params = init_miru_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 7, 12),
+                           minval=-1, maxval=1)
+    labels = jnp.zeros((4,), jnp.int32)
+    backend = get_backend("wbs")
+    grads = {}
+    for fused in (True, False):
+        def loss(p, fused=fused):
+            logits, _ = miru_forward_device(p, cfg, x, jax.random.PRNGKey(0),
+                                            backend, fused=fused)
+            return softmax_cross_entropy(logits, labels)
+        grads[fused] = jax.grad(loss)(params)
+    for k in grads[True]:
+        assert float(jnp.abs(grads[True][k]).max()) > 0 or k in ("b_h",), k
+        np.testing.assert_allclose(np.asarray(grads[True][k]),
+                                   np.asarray(grads[False][k]),
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+
+
+@pytest.mark.slow
+def test_fused_dfa_run_bitwise_identical():
+    """Whole continual-learning run (DFA + replay + noisy analog writes):
+    fused and per-step recurrences produce bit-identical R, losses and
+    final weights — DFA's gradients are pure functions of the forward
+    intermediates, which are bitwise equal."""
+    from repro.data.synthetic import make_permuted_tasks
+    tasks = make_permuted_tasks(0, n_tasks=2, n_train=96, n_test=48)
+    cfg = MiRUConfig(n_x=tasks[0].x_train.shape[2], n_h=40, n_y=10)
+    trainer = TrainerSpec(algo="dfa", epochs_per_task=1, batch_size=32)
+    r1 = run_continual(cfg, trainer, tasks, replay=ReplaySpec(capacity=64),
+                       device="analog")
+    r2 = run_continual(cfg,
+                       dataclasses.replace(trainer, fused_recurrence=False),
+                       tasks, replay=ReplaySpec(capacity=64),
+                       device="analog")
+    np.testing.assert_array_equal(r1["R"], r2["R"])
+    assert r1["losses"] == r2["losses"]
+    for k in r1["params"]:
+        np.testing.assert_array_equal(np.asarray(r1["params"][k]),
+                                      np.asarray(r2["params"][k]))
+
+
+def test_legacy_continual_config_carries_fused_flag():
+    from repro.core.continual import ContinualConfig
+    trainer, _, _ = ContinualConfig(trainer="dfa_hw",
+                                    fused_recurrence=False).specs()
+    assert trainer.fused_recurrence is False
+    trainer, _, _ = ContinualConfig(trainer="dfa_hw").specs()
+    assert trainer.fused_recurrence is None    # defer to the backend
