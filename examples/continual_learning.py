@@ -14,17 +14,26 @@ to accuracy; --loop uses the per-task Python loop instead (bit-identical
 on the ideal backend). The legacy combined trainer strings
 (adam | dfa | dfa_hw) keep working via --trainer.
 
+The rehearsal layer is pluggable too: --replay-policy picks any
+registered repro.replay policy (reservoir | ring | class_balanced |
+task_stratified | loss_aware); without the flag, the scenario's
+preferred policy applies (class_incremental rehearses class-balanced,
+drift rides the FIFO ring) and reservoir remains the global default.
+
     PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog_state
     PYTHONPATH=src python examples/continual_learning.py --scenario rotated --seeds 3
+    PYTHONPATH=src python examples/continual_learning.py --scenario class_incremental --replay-policy loss_aware
     PYTHONPATH=src python examples/continual_learning.py --trainer dfa_hw   # legacy
 """
 import argparse
+import dataclasses
 
 from repro.analog.costmodel import M2RUCostModel
 from repro.backends import available_backends, get_backend
 from repro.core.continual import (ContinualConfig, ReplaySpec, TrainerSpec,
                                   run_continual)
 from repro.core.miru import MiRUConfig
+from repro.replay import available_policies
 from repro.scenarios import (available_scenarios, build_scenario,
                              get_scenario, run_compiled,
                              scenario_miru_config)
@@ -45,6 +54,11 @@ def main():
     ap.add_argument("--scenario", default="permuted",
                     choices=list(available_scenarios()),
                     help="task stream from the scenario registry")
+    ap.add_argument("--replay-policy", default=None,
+                    choices=list(available_policies()),
+                    help="replay policy from the repro.replay registry "
+                         "(default: the scenario's preferred policy, "
+                         "else reservoir)")
     ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--hidden", type=int, default=100)
@@ -88,20 +102,25 @@ def main():
             name, spec_overrides=dict(track_endurance=algo != "adam"))
 
     # Scenario protocols can pin trainer fields (streaming is single-pass).
-    overrides = get_scenario(args.scenario).trainer_overrides
+    scenario = get_scenario(args.scenario)
+    overrides = scenario.trainer_overrides
     if overrides or args.no_fused:
-        import dataclasses
         if args.no_fused:
             overrides = dict(overrides, fused_recurrence=False)
         trainer = dataclasses.replace(trainer, **overrides)
+    # Replay policy: the explicit flag wins; otherwise the scenario's
+    # preferred policy (same resolution rule as trainer_overrides).
+    if args.replay_policy is not None:
+        replay = dataclasses.replace(replay, policy=args.replay_policy)
+    replay = scenario.resolve_replay(replay)
 
     if not args.no_telemetry:
         backend.telemetry.enable()
     n_steps = args.tasks * trainer.epochs_per_task * (600 // 32)
     mode = "python loop" if args.loop else "compiled scan-over-tasks"
     print(f"scenario={args.scenario}  algo={trainer.algo}  "
-          f"backend={backend.name}  tasks={args.tasks}  "
-          f"~{n_steps} training steps  [{mode}]")
+          f"backend={backend.name}  replay={replay.resolved_policy}  "
+          f"tasks={args.tasks}  ~{n_steps} training steps  [{mode}]")
     if args.loop:
         if args.seeds > 1:
             ap.error("--seeds replicates inside the compiled sweep; "

@@ -2,6 +2,8 @@
 
 Layers:
   core/        the paper's contribution (MiRU, DFA-through-time, K-WTA, replay)
+  replay/      pluggable rehearsal policies (reservoir | ring |
+               class_balanced | task_stratified | in-graph loss_aware)
   backends/    pluggable device substrates (ideal | wbs | analog + registry)
   analog/      mixed-signal hardware-like model + circuit cost model
   kernels/     Pallas TPU kernels (wbs_matmul, miru_scan, kwta)

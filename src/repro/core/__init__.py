@@ -10,8 +10,9 @@ from repro.core.miru import (MiRUConfig, init_miru_params, init_dfa_feedback,
                              miru_forward, miru_apply_readout)
 from repro.core.kwta import kwta, kwta_mask
 from repro.core.replay import (ReservoirSampler, Xorshift32, ReplayBuffer,
-                               stochastic_quantize, uniform_quantize,
-                               dequantize)
+                               code_dtype, stochastic_quantize,
+                               uniform_quantize, dequantize,
+                               round_trip_bound)
 from repro.core.dfa import (dfa_grads, bptt_grads, miru_loss,
                             grad_alignment)
 from repro.core.continual import (BatchSchedule, ContinualConfig,
@@ -23,8 +24,9 @@ from repro.core.continual import (BatchSchedule, ContinualConfig,
 __all__ = [
     "MiRUConfig", "init_miru_params", "init_dfa_feedback", "miru_forward",
     "miru_apply_readout", "kwta", "kwta_mask", "ReservoirSampler",
-    "Xorshift32", "ReplayBuffer", "stochastic_quantize", "uniform_quantize",
-    "dequantize", "dfa_grads", "bptt_grads", "miru_loss", "grad_alignment",
+    "Xorshift32", "ReplayBuffer", "code_dtype", "stochastic_quantize",
+    "uniform_quantize", "dequantize", "round_trip_bound",
+    "dfa_grads", "bptt_grads", "miru_loss", "grad_alignment",
     "ContinualConfig", "TrainerSpec", "ReplaySpec", "BatchSchedule",
     "build_batch_schedule", "miru_forward_device", "run_continual",
     "evaluate_tasks",

@@ -9,7 +9,10 @@ The run is described by three composable records plus a device backend:
   TrainerSpec   the learning rule — "adam" (BPTT + Adam, the paper's
                 software baseline) or "dfa" (DFA-through-time + SGD +
                 K-WTA sparsification, Algorithm 1) — and its knobs.
-  ReplaySpec    reservoir capacity / mix ratio / quantizer precision.
+  ReplaySpec    rehearsal buffer capacity / mix ratio / quantizer
+                precision / replay policy (repro.replay registry;
+                "reservoir" is the paper's hardware sampler and the
+                bit-identical default).
   DeviceBackend the substrate (repro.backends): "ideal", "wbs", "analog",
                 or any registered custom backend. The forward VMMs, the
                 readout ADC, and the weight writes all route through it.
@@ -69,10 +72,23 @@ class TrainerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ReplaySpec:
-    """The rehearsal pipeline (§IV-A)."""
+    """The rehearsal pipeline (§IV-A) — buffer sizing plus the policy.
+
+    ``policy`` names a registered :mod:`repro.replay` policy
+    (``reservoir`` | ``ring`` | ``class_balanced`` | ``task_stratified``
+    | ``loss_aware``). None means "no preference": scenario metadata
+    (``ScenarioSpec.replay_policy``) may resolve it, and otherwise it
+    falls back to ``reservoir`` — the paper's hardware sampler,
+    bit-identical to the pre-policy-subsystem behavior.
+    """
     capacity: int = 512
     ratio: float = 0.5                  # fraction of each batch from replay
     bits: int = 4                       # stochastic-quantizer precision
+    policy: Optional[str] = None        # replay policy (None → reservoir)
+
+    @property
+    def resolved_policy(self) -> str:
+        return self.policy if self.policy is not None else "reservoir"
 
 
 # Legacy trainer string → (algorithm, backend name).
@@ -294,11 +310,85 @@ def _make_raw_steps(cfg: MiRUConfig, trainer: TrainerSpec,
     return train_step, evaluate, opt
 
 
-def _make_steps(cfg: MiRUConfig, trainer: TrainerSpec,
-                backend: DeviceBackend):
-    """Jitted (train_step, eval_fn, opt) — see :func:`_make_raw_steps`."""
-    train_step, evaluate, opt = _make_raw_steps(cfg, trainer, backend)
-    return jax.jit(train_step), jax.jit(evaluate), opt
+def _make_ingraph_replay_step(cfg: MiRUConfig, trainer: TrainerSpec,
+                              rspec: ReplaySpec, backend: DeviceBackend,
+                              raw_train):
+    """Wrap a raw train step with the scan-carried replay buffer that
+    training-state-dependent policies (``loss_aware``) run on.
+
+    The wrapped step consumes *fresh-only* schedule batches and, at run
+    time: splices a priority-proportional rehearsal draw into the batch
+    tail (same tail layout the host schedule materializes), trains,
+    scores the batch's per-example loss with one extra forward on the
+    just-updated params (the "last-seen loss" priority signal), and
+    offers the fresh rows to the device-resident buffer
+    (:mod:`repro.replay.ingraph`). All extra PRNG keys are folded off
+    the step key, so the training/eval streams stay on the same chain
+    the host-policy path walks.
+
+    Signature: ``step(params, opt_state, key, x, y, dev_state, rstate,
+    replay_on) -> (params, opt_state, loss, applied, dev_state,
+    rstate)`` where ``replay_on`` is a traced bool (past task 0). Pure
+    in (state, key, inputs): the same step sequence is bit-identical
+    whether driven by the Python loop or a ``lax.scan`` — the
+    loop/compiled parity property.
+    """
+    from repro.replay import ingraph_insert, ingraph_mix, per_example_ce
+
+    n_rep = (int(round(trainer.batch_size * rspec.ratio))
+             if rspec.ratio > 0 else 0)
+    bits = rspec.bits
+
+    def fwd(p, xs, k, st):
+        return miru_forward_device(p, cfg, xs, k, backend, state=st,
+                                   fused=trainer.fused_recurrence)
+
+    def train_step(params, opt_state, key, x, y, dev_state, rstate,
+                   replay_on):
+        B = x.shape[0]
+        k_mix = jax.random.fold_in(key, 0x5E1)
+        k_prio = jax.random.fold_in(key, 0x5E2)
+        k_ins = jax.random.fold_in(key, 0x5E3)
+        active = replay_on & (rstate["size"] > 0) & (n_rep > 0)
+        xb, yb = ingraph_mix(rstate, k_mix, x, y, n_rep, active, bits)
+        params, opt_state, loss, applied, dev_state = raw_train(
+            params, opt_state, key, xb, yb, dev_state)
+        logits, _ = fwd(params, xb, k_prio, dev_state)
+        prio = per_example_ce(logits, yb)
+        # Rehearsed tail rows are never re-offered (host-schedule rule).
+        valid = jnp.where(active, jnp.arange(B) < B - n_rep, True)
+        rstate = ingraph_insert(rstate, k_ins, xb, yb, prio, bits,
+                                valid=valid)
+        return params, opt_state, loss, applied, dev_state, rstate
+
+    return train_step
+
+
+def _ingraph_replay_traffic(rspec: ReplaySpec, batch_size: int,
+                            steps_per_task: list[int],
+                            feature_shape: tuple[int, ...]
+                            ) -> dict[str, int]:
+    """Exact DRAM traffic of the scan-carried (loss_aware) buffer for
+    one run: rehearsal is active on every step past task 0 (the buffer
+    is non-empty from task 0's first step on), so per such step the
+    device fetches ``n_rep`` rows and is offered the ``B − n_rep``
+    fresh rows; task-0 steps offer the whole batch and fetch nothing.
+    (Insertion *acceptance* is data-dependent; offered rows are the
+    programmed-traffic bound.) Row = quantized codes + int32 label."""
+    from repro.core.replay import code_dtype
+
+    n_rep = (int(round(batch_size * rspec.ratio))
+             if rspec.ratio > 0 else 0)
+    s0 = steps_per_task[0] if steps_per_task else 0
+    s_rest = sum(steps_per_task[1:])
+    reads = n_rep * s_rest
+    writes = batch_size * s0 + (batch_size - n_rep) * s_rest
+    row_b = (code_dtype(rspec.bits).itemsize
+             * int(np.prod(feature_shape)) + 4)
+    return {meters.REPLAY_READS: reads,
+            meters.REPLAY_READ_BYTES: reads * row_b,
+            meters.REPLAY_WRITES: writes,
+            meters.REPLAY_WRITE_BYTES: writes * row_b}
 
 
 def _init_run(cfg: MiRUConfig, trainer: TrainerSpec,
@@ -333,9 +423,26 @@ class BatchSchedule:
     the *same* arrays, which is what makes their results bit-comparable.
 
     ``x[t]`` is (S_t, B, T, F); ``y[t]`` is (S_t, B).
+
+    ``replay_traffic`` tallies the host replay buffer's DRAM traffic
+    (meter-keyed rows/bytes) consumed while materializing the stream;
+    the runner that actually *uses* the schedule credits it to its
+    backend's telemetry exactly once.
     """
     x: list[np.ndarray]
     y: list[np.ndarray]
+    replay_traffic: dict = dataclasses.field(default_factory=dict)
+
+    def digest(self) -> str:
+        """sha256 over the materialized stream — the schedule's identity
+        for golden-hash gates (tests/test_determinism.py and the
+        bench-scenarios CI job both pin
+        :data:`GOLDEN_PERMUTED_SCHEDULE_SHA256`)."""
+        import hashlib
+        h = hashlib.sha256()
+        for arr in self.x + self.y:
+            h.update(np.ascontiguousarray(arr).tobytes())
+        return h.hexdigest()
 
     @property
     def steps_per_task(self) -> list[int]:
@@ -349,17 +456,60 @@ class BatchSchedule:
         return len(shapes) == 1
 
 
+# Pinned digest of the permuted reference schedule (permuted scenario,
+# seed 0, 2 tasks × 64 train / 16 test, dfa × 1 epoch × seed 0,
+# ReplaySpec(capacity=32)): any unintended change to the host RNG
+# consumption order (epoch shuffle, reservoir offers, quantizer key
+# chain) shows up against this constant before it silently breaks
+# loop/compiled bit-parity. Asserted in tests/test_determinism.py and
+# gated in benchmarks/scenarios_grid.py (the bench-scenarios CI job).
+GOLDEN_PERMUTED_SCHEDULE_SHA256 = ("2fe9e2b677cf741551717cd54502398f"
+                                   "ddf8094b6d6ab35df1ec113f068b12ee")
+
+
+def _stream_context(tasks: list[TaskData]) -> dict[str, int]:
+    """Stream facts partitioned replay policies need: the full label
+    range (class-incremental heads expand logically — size for all of
+    it) and the task count."""
+    n_classes = int(max(int(t.y_train.max()) for t in tasks)) + 1
+    return {"n_classes": max(n_classes, 2), "n_tasks": len(tasks)}
+
+
 def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
                          tasks: list[TaskData]) -> BatchSchedule:
     """Materialize the replay-mixed batch stream ``run_continual`` trains
-    on, consuming the host RNG streams (epoch shuffle, reservoir sampler,
-    stochastic quantizer) in exactly the order the training loop does."""
+    on, consuming the host RNG streams (epoch shuffle, replay-policy
+    sampler, stochastic quantizer) in exactly the order the training
+    loop does. Slot selection routes through the
+    :mod:`repro.replay` policy named by ``replay.resolved_policy``
+    (``reservoir`` reproduces the pre-policy schedule bit-for-bit —
+    pinned by the golden hash in tests/test_determinism.py).
+
+    For an in-graph policy (``loss_aware``) the buffer cannot be
+    materialized — insertion depends on training state — so the schedule
+    is the *fresh-only* stream (full batches, no replay rows, no
+    host-buffer RNG consumption) and the trainer splices rehearsal rows
+    into each batch tail at run time from the scan-carried device
+    buffer (:mod:`repro.replay.ingraph`).
+
+    The buffer's DRAM traffic comes back on
+    :attr:`BatchSchedule.replay_traffic`; the runner that consumes the
+    schedule credits it to its telemetry (building a schedule that is
+    then discarded — e.g. the ragged-stream fallback — meters nothing).
+    """
     from repro.core.replay import ReplayBuffer
+    from repro.replay import get_policy_class, make_policy
 
     T, F = tasks[0].x_train.shape[1:]
     bs = trainer.batch_size
-    buffer = ReplayBuffer(replay.capacity, (T, F),
-                          n_bits=replay.bits, seed=trainer.seed)
+    policy_name = replay.resolved_policy
+    in_graph = get_policy_class(policy_name).in_graph
+    buffer = None
+    if not in_graph:
+        policy = make_policy(policy_name, replay.capacity,
+                             seed=trainer.seed, **_stream_context(tasks))
+        buffer = ReplayBuffer(replay.capacity, (T, F), n_bits=replay.bits,
+                              seed=trainer.seed, policy=policy)
     host_rng = np.random.default_rng(trainer.seed + 1)
 
     xs_all: list[np.ndarray] = []
@@ -377,26 +527,30 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
                 # Mix in replay (after the first task has populated it);
                 # replay occupies the tail n_rep rows of the batch.
                 n_rep = 0
-                if t > 0 and buffer.size > 0 and replay.ratio > 0:
+                if (buffer is not None and t > 0 and buffer.size > 0
+                        and replay.ratio > 0):
                     n_rep = int(round(bs * replay.ratio))
                     if n_rep > 0:
                         xr, yr = buffer.sample(host_rng, n_rep)
                         xb = np.concatenate([xb[:bs - n_rep],
                                              xr.reshape(-1, T, F)])
                         yb = np.concatenate([yb[:bs - n_rep], yr])
-                # Reservoir-sample only the *fresh* rows into the buffer —
-                # all of them (on task 0 no replay was mixed, so the whole
+                # Offer only the *fresh* rows to the policy — all of
+                # them (on task 0 no replay was mixed, so the whole
                 # batch is fresh; never re-offer rehearsed rows).
                 n_fresh = bs - n_rep
-                if n_fresh > 0:
-                    buffer.add_batch(xb[:n_fresh], yb[:n_fresh])
+                if buffer is not None and n_fresh > 0:
+                    buffer.add_batch(xb[:n_fresh], yb[:n_fresh],
+                                     task_ids=np.full(n_fresh, t))
                 xs_t.append(xb)
                 ys_t.append(yb)
         xs_all.append(np.stack(xs_t) if xs_t
                       else np.zeros((0, bs, T, F), np.float32))
         ys_all.append(np.stack(ys_t) if ys_t
                       else np.zeros((0, bs), np.int32))
-    return BatchSchedule(x=xs_all, y=ys_all)
+    return BatchSchedule(x=xs_all, y=ys_all,
+                         replay_traffic=dict(buffer.traffic)
+                         if buffer is not None else {})
 
 
 def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
@@ -455,27 +609,55 @@ def run_continual(cfg: MiRUConfig,
 
     key, params, psi, dev_state = _init_run(cfg, trainer, backend)
 
-    train_step, evaluate, opt = _make_steps(cfg, trainer, backend)
+    raw_train, raw_eval, opt = _make_raw_steps(cfg, trainer, backend)
     if trainer.algo == "adam":
         opt_state = opt.init(params)
     else:
         opt_state = {"psi": psi}
 
-    # The replay-mixed batch stream is training-state-independent, so it
-    # is materialized up front; the compiled sweep consumes the same
-    # schedule, which keeps the two paths bit-comparable.
+    # The (host-policy) replay-mixed batch stream is training-state-
+    # independent, so it is materialized up front; the compiled sweep
+    # consumes the same schedule, which keeps the two paths
+    # bit-comparable. In-graph policies (loss_aware) get a fresh-only
+    # schedule plus a device-resident buffer carried through the steps.
+    from repro.replay import get_policy_class, ingraph_init
+    in_graph = get_policy_class(rspec.resolved_policy).in_graph
     schedule = build_batch_schedule(trainer, rspec, tasks)
+    evaluate = jax.jit(raw_eval)
+    rstate = None
+    if in_graph:
+        T, F = tasks[0].x_train.shape[1:]
+        rstate = ingraph_init(rspec.capacity, (T, F), rspec.bits)
+        train_step = jax.jit(_make_ingraph_replay_step(
+            cfg, trainer, rspec, backend, raw_train))
+        replay_traffic = _ingraph_replay_traffic(
+            rspec, trainer.batch_size, schedule.steps_per_task, (T, F))
+    else:
+        train_step = jax.jit(raw_train)
+        replay_traffic = schedule.replay_traffic
+    if backend.telemetry.enabled and replay_traffic:
+        backend.telemetry.record(replay_traffic)
 
     n_tasks = len(tasks)
     R = np.zeros((n_tasks, n_tasks))
     losses: list[float] = []
 
     for t in range(n_tasks):
+        replay_on = jnp.asarray(t > 0)
         for s in range(schedule.x[t].shape[0]):
             key, k_step = jax.random.split(key)
-            params, opt_state, loss, applied, dev_state = train_step(
-                params, opt_state, k_step, jnp.asarray(schedule.x[t][s]),
-                jnp.asarray(schedule.y[t][s]), dev_state)
+            if in_graph:
+                (params, opt_state, loss, applied, dev_state,
+                 rstate) = train_step(
+                    params, opt_state, k_step,
+                    jnp.asarray(schedule.x[t][s]),
+                    jnp.asarray(schedule.y[t][s]), dev_state, rstate,
+                    replay_on)
+            else:
+                params, opt_state, loss, applied, dev_state = train_step(
+                    params, opt_state, k_step,
+                    jnp.asarray(schedule.x[t][s]),
+                    jnp.asarray(schedule.y[t][s]), dev_state)
             losses.append(float(loss))
             backend.record_endurance(applied)
         key, k_eval = jax.random.split(key)

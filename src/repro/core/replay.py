@@ -24,14 +24,31 @@ import numpy as np
 class Xorshift32:
     """32-bit xorshift PRNG (Marsaglia), exactly the 13/17/5 hardware circuit.
 
-    Produces decorrelated, uniform indices — the property the paper relies on
-    for equal-probability reservoir sampling (unlike an LFSR, whose maximal
-    sequence never emits 0 and is correlated between taps).
+    Produces decorrelated, uniform *words* — the property the paper relies
+    on for equal-probability reservoir sampling (unlike an LFSR, whose
+    maximal sequence never emits 0 and is correlated between taps).
+
+    ``randint`` reduces a word to a range. The hardware-faithful default
+    (``mode="modulus"``, the paper's modulus unit) carries modulo bias
+    when the span does not divide 2^32: each value's probability deviates
+    from 1/span by at most 2^-32 in absolute terms, but residues below
+    ``2^32 mod span`` are overweighted by the factor
+    ``ceil(2^32/span)/floor(2^32/span)`` — approaching 2× for spans near
+    2^32 (quantified in tests/test_replay.py). ``mode="reject"`` draws
+    words until one falls below the largest multiple of the span — exactly
+    uniform, at the cost of a variable number of RNG steps, so it walks a
+    *different* bit-stream and must not be enabled under seeds that
+    hardware-equivalence tests pin.
     """
 
-    def __init__(self, seed: int = 0x9E3779B9):
+    def __init__(self, seed: int = 0x9E3779B9, mode: str = "modulus"):
+        if mode not in ("modulus", "reject"):
+            raise ValueError(f"unknown randint mode {mode!r}; expected "
+                             "'modulus' (hardware-faithful) or 'reject' "
+                             "(unbiased)")
         seed = np.uint32(seed if seed != 0 else 0xDEADBEEF)
         self.state = np.uint32(seed)
+        self.mode = mode
 
     def next(self) -> int:
         x = self.state
@@ -43,8 +60,16 @@ class Xorshift32:
         return int(x)
 
     def randint(self, lo: int, hi: int) -> int:
-        """Uniform int in [lo, hi] via the paper's modulus unit."""
+        """Int in [lo, hi]: the paper's modulus unit by default (modulo
+        bias ≤ 2^-32 per value — see the class docstring), or unbiased
+        rejection sampling when constructed with ``mode="reject"``."""
         span = hi - lo + 1
+        if self.mode == "reject":
+            limit = (1 << 32) - ((1 << 32) % span)
+            x = self.next()
+            while x >= limit:
+                x = self.next()
+            return lo + x % span
         return lo + self.next() % span
 
 
@@ -60,7 +85,12 @@ def stochastic_quantize(x: jax.Array, key: jax.Array, n_bits: int
         q  = ⌊z⌋ + 1   if r < frac(z) and ⌊z⌋ < 2^{n_b} − 1
              ⌊z⌋       otherwise,   r ~ U(0,1)
 
-    Unbiased: E[dequantize(q)] == x (up to the clip at the top code).
+    Unbiased away from the top code: for x ≤ 1 − 2^{−n_b},
+    E[dequantize(q)] == x exactly. Codes saturate at 2^{n_b} − 1 while
+    :func:`dequantize` divides by 2^{n_b} (the hardware's n-bit right
+    shift), so inputs in the clip region (1 − 2^{−n_b}, 1] come back
+    pinned at 1 − 2^{−n_b} — a stored 1.0 pixel is always replayed one
+    LSB dim. :func:`round_trip_bound` exposes the worst-case error.
     """
     z = x * (2.0 ** n_bits)
     fl = jnp.floor(z)
@@ -81,7 +111,36 @@ def uniform_quantize(x: jax.Array, n_bits: int) -> jax.Array:
 
 
 def dequantize(q: jax.Array, n_bits: int, dtype=jnp.float32) -> jax.Array:
+    """Codes → [0, 1): the paper-faithful 1/2^{n_b} scale (an n-bit right
+    shift in RTL). Because codes saturate at 2^{n_b} − 1, the top of the
+    dequantized range is 1 − 2^{−n_b}, not 1.0 — see
+    :func:`round_trip_bound`."""
     return q.astype(dtype) / (2.0 ** n_bits)
+
+
+def round_trip_bound(n_bits: int) -> float:
+    """Worst-case |E[dequantize(stochastic_quantize(x))] − x| over
+    x ∈ [0, 1].
+
+    The stochastic rounder is exactly unbiased on x ≤ 1 − 2^{−n_b}; in
+    the clip region (1 − 2^{−n_b}, 1] the expectation is pinned at
+    1 − 2^{−n_b}, so the error grows linearly to its maximum 2^{−n_b}
+    at x = 1.0. Scaling dequantization by 1/(2^{n_b} − 1) instead would
+    remove the clip but is *not* what the chip's shift-based datapath
+    computes — the repro keeps the paper-faithful scale and documents
+    the bound (pinned by a property test in tests/test_replay.py).
+    """
+    return 2.0 ** -n_bits
+
+
+def code_dtype(n_bits: int) -> np.dtype:
+    """Storage dtype for n_bits codes: uint8 holds up to 8-bit codes,
+    uint16 up to 16 — matching what the quantizers emit. (Allocating
+    uint8 unconditionally silently truncated the high bits of 9–16-bit
+    codes.)"""
+    if not 1 <= n_bits <= 16:
+        raise ValueError(f"n_bits must be in [1, 16], got {n_bits}")
+    return np.dtype(np.uint8 if n_bits <= 8 else np.uint16)
 
 
 def lfsr_stochastic_quantize(x: np.ndarray, n_bits: int, seed: int = 1
@@ -136,9 +195,12 @@ class ReservoirSampler:
     """
     capacity: int
     seed: int = 0x2545F491
+    # "modulus" is the paper's hardware (and the bit-stream every pinned
+    # seed walks); "reject" swaps in the unbiased rejection reducer.
+    rng_mode: str = "modulus"
 
     def __post_init__(self):
-        self._rng = Xorshift32(self.seed)
+        self._rng = Xorshift32(self.seed, mode=self.rng_mode)
         self.count = 0  # the paper's counter i
 
     def offer(self) -> Optional[int]:
@@ -154,37 +216,93 @@ class ReservoirSampler:
 
 
 class ReplayBuffer:
-    """Reservoir-sampled, stochastically-quantized replay store.
+    """Policy-driven, stochastically-quantized replay store.
 
     Features are stored as n_bits integer codes (8→4-bit halves the memory,
-    §IV-A-2); labels as int32. Host-side numpy storage — this is the DRAM
-    replay buffer, not an on-device tensor.
+    §IV-A-2) in a dtype sized by :func:`code_dtype`; labels as int32.
+    Host-side numpy storage — this is the DRAM replay buffer, not an
+    on-device tensor, and when a :class:`~repro.telemetry.meters.Telemetry`
+    accumulator is attached every insert/sample is metered as DRAM traffic
+    (``replay_*`` counters).
+
+    Slot selection is delegated to a :class:`repro.replay.ReplayPolicy`
+    (a registered name or an instance). The default ``"reservoir"`` is
+    the paper's §IV-A hardware bit-for-bit — identical sampler seed
+    derivation, identical host-RNG consumption — so schedules built
+    through the policy layer hash to the pre-refactor golden digest.
     """
 
     def __init__(self, capacity: int, feature_shape: tuple[int, ...],
-                 n_bits: int = 4, seed: int = 7):
+                 n_bits: int = 4, seed: int = 7, policy=None,
+                 telemetry=None):
+        from repro.replay import ReplayPolicy, make_policy
+        if policy is None or isinstance(policy, str):
+            policy = make_policy(policy or "reservoir", capacity,
+                                 seed=seed)
+        if not isinstance(policy, ReplayPolicy):
+            raise TypeError(f"policy must be a registered name or a "
+                            f"ReplayPolicy, got {type(policy).__name__}")
+        if policy.in_graph:
+            raise ValueError(
+                f"policy {policy.name!r} is in-graph (training-state-"
+                f"dependent); it runs on the scan-carried buffer in "
+                f"repro.replay.ingraph, not the host ReplayBuffer")
+        if policy.capacity != capacity:
+            raise ValueError(f"policy capacity {policy.capacity} != "
+                             f"buffer capacity {capacity}")
         self.capacity = capacity
         self.n_bits = n_bits
-        self.sampler = ReservoirSampler(capacity, seed=seed ^ 0x5BD1E995)
-        self._feat = np.zeros((capacity, *feature_shape), dtype=np.uint8)
+        self.policy = policy
+        # Back-compat alias: the reservoir policy's hardware sampler.
+        self.sampler = getattr(policy, "sampler", None)
+        self._feat = np.zeros((capacity, *feature_shape),
+                              dtype=code_dtype(n_bits))
         self._label = np.zeros((capacity,), dtype=np.int32)
         self.size = 0
         self._qkey = jax.random.PRNGKey(seed)
+        self._telemetry = telemetry
+        # Running DRAM-traffic tally (meter-keyed), kept even without an
+        # attached accumulator so schedule builders can credit the
+        # traffic to a run's telemetry exactly once (run_continual and
+        # the compiled sweep build/discard schedules at different times).
+        self.traffic: dict[str, int] = {}
 
-    def add(self, x: np.ndarray, y: int) -> bool:
-        """Offer one (features∈[0,1], label) example to the reservoir."""
-        slot = self.sampler.offer()
+    # ------------------------------------------------------------------
+    def _meter(self, *, reads: int = 0, writes: int = 0) -> None:
+        """Count DRAM traffic: rows moved and bytes (codes + int32
+        label per row). Host-side concrete deltas — exact, no tracing."""
+        from repro.telemetry import meters as M
+        row_bytes = (self._feat.dtype.itemsize
+                     * int(np.prod(self._feat.shape[1:]))
+                     + self._label.dtype.itemsize)
+        deltas: dict[str, int] = {}
+        if reads:
+            deltas[M.REPLAY_READS] = reads
+            deltas[M.REPLAY_READ_BYTES] = reads * row_bytes
+        if writes:
+            deltas[M.REPLAY_WRITES] = writes
+            deltas[M.REPLAY_WRITE_BYTES] = writes * row_bytes
+        for k, v in deltas.items():
+            self.traffic[k] = self.traffic.get(k, 0) + v
+        if self._telemetry is not None and self._telemetry.enabled:
+            self._telemetry.record(deltas)
+
+    def add(self, x: np.ndarray, y: int, task_id: int = 0) -> bool:
+        """Offer one (features∈[0,1], label) example to the policy."""
+        slot = self.policy.select_insert(int(y), int(task_id))
         if slot is None:
             return False
         self._qkey, sub = jax.random.split(self._qkey)
         q = np.asarray(stochastic_quantize(jnp.asarray(x), sub, self.n_bits))
         self._feat[slot] = q
         self._label[slot] = y
-        self.size = min(self.size + 1, self.capacity)
+        self.size = self.policy.occupancy
+        self._meter(writes=1)
         return True
 
-    def add_batch(self, xs: np.ndarray, ys: np.ndarray) -> int:
-        """Offer a batch to the reservoir. Equivalent to per-example
+    def add_batch(self, xs: np.ndarray, ys: np.ndarray,
+                  task_ids=None) -> int:
+        """Offer a batch to the policy. Equivalent to per-example
         :meth:`add` calls bit-for-bit (same key chain, same quantizer
         draws — asserted in tests/test_replay.py), but all accepted
         examples are quantized in one vmapped dispatch instead of one
@@ -192,7 +310,8 @@ class ReplayBuffer:
         slots: list[int] = []
         keep: list[int] = []
         for i in range(len(xs)):
-            slot = self.sampler.offer()
+            tid = int(task_ids[i]) if task_ids is not None else 0
+            slot = self.policy.select_insert(int(ys[i]), tid)
             if slot is None:
                 continue
             slots.append(slot)
@@ -207,16 +326,21 @@ class ReplayBuffer:
         for slot, qi, i in zip(slots, q, keep):
             self._feat[slot] = qi
             self._label[slot] = int(ys[i])
-            self.size = min(self.size + 1, self.capacity)
+        self.size = self.policy.occupancy
+        self._meter(writes=len(slots))
         return len(slots)
 
     def sample(self, rng: np.random.Generator, batch: int
                ) -> tuple[np.ndarray, np.ndarray]:
-        """Uniform sample of dequantized examples for rehearsal."""
+        """Policy-selected sample of dequantized examples for rehearsal
+        (uniform over the occupied prefix under ``reservoir``/``ring``;
+        stratified under the partitioned policies). Dequantizes on the
+        paper's 1/2^n scale — see :func:`round_trip_bound`."""
         if self.size == 0:
             raise ValueError("empty replay buffer")
-        idx = rng.integers(0, self.size, size=batch)
+        idx = np.asarray(self.policy.select_sample(rng, batch))
         feats = self._feat[idx].astype(np.float32) / (2.0 ** self.n_bits)
+        self._meter(reads=batch)
         return feats, self._label[idx]
 
     @property

@@ -218,12 +218,21 @@ def make_drift_tasks(seed: int, n_tasks: int = 5, n_train: int = 1000,
 def make_class_incremental_tasks(seed: int, n_tasks: int = 5,
                                  n_train: int = 1000, n_test: int = 400,
                                  side: int = 28, classes_per_task: int = 2,
-                                 noise: float = 0.25) -> list[TaskData]:
+                                 noise: float = 0.25,
+                                 imbalance: float = 1.0) -> list[TaskData]:
     """Class-incremental stream with a (logically) expanding head: task t
     introduces classes [t·c, (t+1)·c) with *global* labels over the full
     n_tasks·c-way output. The model allocates the full head up front (the
     standard compiled-friendly realization of head expansion — unseen
-    logits just stay untrained), so shapes are scan-uniform."""
+    logits just stay untrained), so shapes are scan-uniform.
+
+    ``imbalance`` > 1 makes the stream class-imbalanced: task t carries
+    ``n_train · imbalance^t`` train examples (test sets stay equal), so
+    late classes flood any frequency-weighted rehearsal buffer — the
+    regime where the *choice* of replay policy governs forgetting
+    (class-balanced reservoirs keep early classes represented). Note an
+    imbalanced stream is no longer shape-uniform, so the compiled
+    scan-over-tasks falls back to the per-task loop."""
     rng = np.random.default_rng(seed)
     dim = side * side
     n_classes = classes_per_task * n_tasks
@@ -240,7 +249,7 @@ def make_class_incremental_tasks(seed: int, n_tasks: int = 5,
             return np.clip(x, 0.0, 1.0).reshape(-1, side, side), \
                 y.astype(np.int32)
 
-        x_tr, y_tr = draw(n_train)
+        x_tr, y_tr = draw(int(round(n_train * imbalance ** t)))
         x_te, y_te = draw(n_test)
         tasks.append(TaskData(x_tr, y_tr, x_te, y_te, task_id=t))
     return tasks

@@ -1,0 +1,34 @@
+"""Pluggable replay-policy subsystem (§IV-A's rehearsal, generalized).
+
+- base:     the ``ReplayPolicy`` protocol (select-on-insert +
+            select-on-sample) and the name-keyed registry.
+- policies: registered implementations — ``reservoir`` (the paper's
+            hardware sampler, bit-identical default), ``ring`` (FIFO),
+            ``class_balanced``, ``task_stratified`` (partitioned
+            reservoirs), ``loss_aware`` (in-graph, loss-prioritized).
+- ingraph:  the device-resident, scan-carried buffer that
+            training-state-dependent policies run on.
+
+Wired through ``ReplaySpec.policy``, scenario metadata
+(``ScenarioSpec.replay_policy``), the telemetry DRAM-traffic meters,
+``examples/continual_learning.py --replay-policy`` and the
+``benchmarks/scenarios_grid.py`` policy columns. See docs/replay.md.
+"""
+from repro.replay.base import (ReplayPolicy, available_policies,
+                               get_policy_class, make_policy,
+                               register_policy, unregister_policy)
+from repro.replay.ingraph import (ingraph_init, ingraph_insert,
+                                  ingraph_mix, ingraph_sample,
+                                  per_example_ce)
+from repro.replay.policies import (ClassBalancedPolicy, LossAwarePolicy,
+                                   ReservoirPolicy, RingPolicy,
+                                   TaskStratifiedPolicy)
+
+__all__ = [
+    "ReplayPolicy", "available_policies", "get_policy_class",
+    "make_policy", "register_policy", "unregister_policy",
+    "ReservoirPolicy", "RingPolicy", "ClassBalancedPolicy",
+    "TaskStratifiedPolicy", "LossAwarePolicy",
+    "ingraph_init", "ingraph_insert", "ingraph_mix", "ingraph_sample",
+    "per_example_ce",
+]

@@ -1,0 +1,138 @@
+"""In-graph replay buffer: a device-resident, scan-carried rehearsal
+store for training-state-dependent policies (``loss_aware``).
+
+Host-side policies decide slot selection while the batch schedule is
+materialized, *before* training starts — possible only because their
+decisions never look at training state. Loss-prioritized replay does:
+an example's insertion priority is its last-seen loss. So the buffer
+here is a plain pytree of arrays — quantized feature codes, labels,
+priorities, an occupancy counter — threaded through the training step
+as part of the ``lax.scan`` carry, with pure functions for the three
+buffer operations:
+
+  ingraph_init     allocate the empty buffer
+  ingraph_insert   offer a batch (fill → evict-min-priority when full)
+  ingraph_sample / ingraph_mix
+                   priority-proportional rehearsal draw, spliced into
+                   the tail of the fresh batch
+
+Everything is a deterministic function of (state, PRNG key, inputs):
+the same step sequence produces bit-identical buffers whether the steps
+run as a Python loop of jitted calls or inside one ``lax.scan`` — the
+property the loop/compiled parity tests pin down.
+
+Features are stored as stochastic-quantized integer codes (same
+quantizer and dtype rule as the host buffer: uint8 up to 8 bits, uint16
+up to 16) and dequantized on the paper's 1/2^n scale at sample time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import code_dtype, dequantize, stochastic_quantize
+
+ReplayState = dict[str, jax.Array]
+
+#: Priority floor added before the log in priority-proportional sampling:
+#: keeps just-filled (zero-priority) slots drawable and the categorical
+#: logits finite.
+_PRIO_EPS = 1e-6
+
+
+def ingraph_init(capacity: int, feature_shape: tuple[int, ...],
+                 n_bits: int) -> ReplayState:
+    """The empty buffer: all slots unoccupied (``size == 0``)."""
+    return {
+        "feat": jnp.zeros((capacity, *feature_shape),
+                          dtype=code_dtype(n_bits)),
+        "label": jnp.zeros((capacity,), jnp.int32),
+        "prio": jnp.zeros((capacity,), jnp.float32),
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+def ingraph_insert(state: ReplayState, key: jax.Array, xs: jax.Array,
+                   ys: jax.Array, prios: jax.Array, n_bits: int,
+                   valid: Optional[jax.Array] = None) -> ReplayState:
+    """Offer a batch of (features, label, priority) rows sequentially.
+
+    While the buffer is filling, every valid row is appended. Once full,
+    a row replaces the current minimum-priority slot iff its priority
+    exceeds it — the buffer keeps the ``capacity`` highest-last-seen-loss
+    examples seen so far. ``valid`` masks rows that must not be offered
+    (rehearsed rows spliced into the batch tail are never re-offered,
+    mirroring the host schedule's fresh-rows-only rule).
+
+    Rows are stochastically quantized with per-row keys folded from
+    ``key`` — one vmapped dispatch, like the host buffer's add_batch.
+    """
+    B = xs.shape[0]
+    capacity = state["feat"].shape[0]
+    if valid is None:
+        valid = jnp.ones((B,), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    q = jax.vmap(lambda x, k: stochastic_quantize(x, k, n_bits))(xs, keys)
+
+    def body(i, st):
+        size = st["size"]
+        full = size >= capacity
+        evict = jnp.argmin(st["prio"]).astype(jnp.int32)
+        slot = jnp.where(full, evict, size)
+        accept = valid[i] & (~full | (prios[i] > st["prio"][slot]))
+        return {
+            "feat": st["feat"].at[slot].set(
+                jnp.where(accept, q[i], st["feat"][slot])),
+            "label": st["label"].at[slot].set(
+                jnp.where(accept, ys[i].astype(jnp.int32),
+                          st["label"][slot])),
+            "prio": st["prio"].at[slot].set(
+                jnp.where(accept, prios[i], st["prio"][slot])),
+            "size": jnp.minimum(size + accept.astype(jnp.int32), capacity),
+        }
+
+    return jax.lax.fori_loop(0, B, body, state)
+
+
+def ingraph_sample(state: ReplayState, key: jax.Array, batch: int,
+                   n_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Priority-proportional rehearsal draw (with replacement) over the
+    occupied slots: P(slot) ∝ priority + ε. Dequantizes on the paper's
+    1/2^n scale. On an empty buffer the draw degenerates to slot 0
+    (zeros) — callers gate mixing on ``size > 0``."""
+    capacity = state["feat"].shape[0]
+    occupied = jnp.arange(capacity) < state["size"]
+    logits = jnp.where(occupied, jnp.log(state["prio"] + _PRIO_EPS),
+                       -jnp.inf)
+    safe = jnp.where(jnp.arange(capacity) == 0, 0.0, -jnp.inf)
+    logits = jnp.where(state["size"] > 0, logits, safe)
+    idx = jax.random.categorical(key, logits, shape=(batch,))
+    return dequantize(state["feat"][idx], n_bits), state["label"][idx]
+
+
+def ingraph_mix(state: ReplayState, key: jax.Array, x: jax.Array,
+                y: jax.Array, n_rep: int, active: jax.Array, n_bits: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Replace the tail ``n_rep`` rows of a fresh batch with a rehearsal
+    draw when ``active`` (a traced bool: replay enabled, past task 0,
+    buffer non-empty) — the same tail-splice layout the host schedule
+    materializes."""
+    if n_rep <= 0:
+        return x, y
+    B = x.shape[0]
+    active = active & (state["size"] > 0)
+    xr, yr = ingraph_sample(state, key, n_rep, n_bits)
+    mixed_x = jnp.concatenate([x[:B - n_rep], xr.astype(x.dtype)])
+    mixed_y = jnp.concatenate([y[:B - n_rep], yr.astype(y.dtype)])
+    return (jnp.where(active, mixed_x, x), jnp.where(active, mixed_y, y))
+
+
+def per_example_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example softmax cross-entropy — the ``loss_aware`` priority
+    signal (utils.softmax_cross_entropy reduces to the batch mean)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logits = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return logz - label_logits

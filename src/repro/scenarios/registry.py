@@ -45,9 +45,24 @@ class ScenarioSpec:
     # caller's TrainerSpec.
     trainer_overrides: Mapping[str, Any] = \
         dataclasses.field(default_factory=dict)
+    # Preferred repro.replay policy for this stream (e.g. the
+    # class-incremental protocol rehearses best class-balanced). Resolved
+    # by run_sweep / the example driver exactly like trainer_overrides:
+    # only when the caller's ReplaySpec.policy is None (no explicit
+    # choice). None keeps the global default (reservoir).
+    replay_policy: Optional[str] = None
 
     def build(self, seed: int = 0, **kwargs) -> list[TaskData]:
         return self.builder(seed, **kwargs)
+
+    def resolve_replay(self, replay):
+        """Apply this scenario's preferred replay policy to a ReplaySpec
+        (or None → the default spec) unless the caller pinned one."""
+        from repro.core.continual import ReplaySpec
+        replay = replay if replay is not None else ReplaySpec()
+        if replay.policy is None and self.replay_policy is not None:
+            return dataclasses.replace(replay, policy=self.replay_policy)
+        return replay
 
 
 _REGISTRY: dict[str, ScenarioSpec] = {}
@@ -55,14 +70,16 @@ _REGISTRY: dict[str, ScenarioSpec] = {}
 
 def register_scenario(name: str, *, description: str = "",
                       uniform: bool = True,
-                      trainer_overrides: Optional[Mapping[str, Any]] = None):
+                      trainer_overrides: Optional[Mapping[str, Any]] = None,
+                      replay_policy: Optional[str] = None):
     """Register a scenario builder (usable as a decorator). Re-registering
     a name overwrites it (tests, experiment sweeps)."""
     def _do(builder: Builder) -> Builder:
         _REGISTRY[name] = ScenarioSpec(
             name=name, builder=builder, description=description,
             uniform=uniform,
-            trainer_overrides=dict(trainer_overrides or {}))
+            trainer_overrides=dict(trainer_overrides or {}),
+            replay_policy=replay_policy)
         return builder
     return _do
 
@@ -111,6 +128,9 @@ register_scenario(
     "rotated",
     description="Rotated-image stream: one dataset viewed under a "
                 "per-task rotation ramping 0→max_angle degrees.",
+    # Each rotation is a distinct view of the same classes: stratifying
+    # the buffer by task keeps every past view represented.
+    replay_policy="task_stratified",
 )(make_rotated_tasks)
 
 register_scenario(
@@ -123,6 +143,9 @@ register_scenario(
     "drift",
     description="Gradual domain drift: class prototypes interpolate from "
                 "a start to an end set across the sequence.",
+    # Under gradual drift old prototypes go stale; the FIFO ring's
+    # recency bias rehearses the still-relevant neighborhood.
+    replay_policy="ring",
 )(make_drift_tasks)
 
 register_scenario(
@@ -130,6 +153,9 @@ register_scenario(
     description="Class-incremental stream with a logically expanding "
                 "head: task t introduces classes [t·c, (t+1)·c) with "
                 "global labels over the full head.",
+    # Per-class reservoir sized for the full expanding head: early
+    # classes keep fixed buffer share as later classes stream in.
+    replay_policy="class_balanced",
 )(make_class_incremental_tasks)
 
 register_scenario(

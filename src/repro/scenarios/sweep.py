@@ -33,6 +33,13 @@ the compiled sweep automatically — the step functions come from the same
 :func:`_make_raw_steps` closures, so the per-batch loop and the
 scan-over-tasks stay bit-comparable on the fused path too
 (``TrainerSpec.fused_recurrence=False`` forces the per-step scan).
+
+Replay policies (``ReplaySpec.policy`` → :mod:`repro.replay`) compose
+with the sweep: host-materialized policies change only the schedule
+content; the in-graph ``loss_aware`` policy carries its device-resident
+buffer through the scan (and the seed vmap). ``run_sweep`` resolves
+each scenario's preferred policy (``ScenarioSpec.replay_policy``) the
+same way it applies ``trainer_overrides``.
 """
 from __future__ import annotations
 
@@ -46,10 +53,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.backends import DeviceBackend, get_backend
-from repro.core.continual import (ReplaySpec, TrainerSpec, _init_run,
+from repro.core.continual import (ReplaySpec, TrainerSpec,
+                                  _ingraph_replay_traffic, _init_run,
+                                  _make_ingraph_replay_step,
                                   _make_raw_steps, build_batch_schedule,
                                   run_continual)
 from repro.core.replay import _split_chain
+from repro.replay import get_policy_class, ingraph_init
 from repro.data.synthetic import TaskData
 from repro.scenarios.metrics import continual_metrics
 from repro.scenarios.registry import get_scenario
@@ -71,6 +81,7 @@ class _SeedInputs:
     ys: np.ndarray          # (n_tasks, S, B)
     step_keys: np.ndarray   # (n_tasks, S, 2)
     eval_keys: np.ndarray   # (n_tasks, 2)
+    rstate: Any = None      # in-graph replay buffer (loss_aware), or None
 
 
 def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
@@ -94,10 +105,15 @@ def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
         step_keys.append(subs[at:at + S])
         eval_keys.append(subs[at + S])
         at += S + 1
+    rstate = None
+    if get_policy_class(rspec.resolved_policy).in_graph:
+        T, F = tasks[0].x_train.shape[1:]
+        rstate = ingraph_init(rspec.capacity, (T, F), rspec.bits)
     return _SeedInputs(
         params=params, opt_state=opt_state, dev_state=dev_state,
         xs=np.stack(schedule.x), ys=np.stack(schedule.y),
         step_keys=np.stack(step_keys), eval_keys=np.stack(eval_keys),
+        rstate=rstate,
     ), schedule
 
 
@@ -106,12 +122,21 @@ def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
 # ---------------------------------------------------------------------------
 
 def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
-                 n_tasks: int, S: int, track_writes: bool, baseline: bool):
+                 n_tasks: int, S: int, track_writes: bool, baseline: bool,
+                 ingraph_rspec: Optional[ReplaySpec] = None):
+    """Build the jitted whole-protocol run. When ``ingraph_rspec`` names
+    an in-graph replay policy (loss_aware), the step is the replay-
+    wrapped one and the device-resident buffer rides the scan carry —
+    per-task replay enablement (past task 0) enters as a scanned flag."""
     raw_train, raw_eval, _ = _make_raw_steps(cfg, trainer, backend)
+    ingraph_step = None
+    if ingraph_rspec is not None:
+        ingraph_step = _make_ingraph_replay_step(
+            cfg, trainer, ingraph_rspec, backend, raw_train)
     tele = backend.telemetry
 
-    def run(params, opt_state, dev_state, xs, ys, step_keys, eval_keys,
-            eval_x, eval_y):
+    def run(params, opt_state, dev_state, rstate, xs, ys, step_keys,
+            eval_keys, eval_x, eval_y):
 
         def eval_all(p, k_eval, dstate):
             def one(exy):
@@ -119,36 +144,43 @@ def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
             with tele.scaled(n_tasks):
                 return jax.lax.map(one, (eval_x, eval_y))
 
-        def step_body(carry, inp):
-            p, o, d, wc = carry
-            x, y, k = inp
-            p, o, loss, applied, d = raw_train(p, o, k, x, y, d)
-            if wc is not None:
-                wc = {n: wc[n] + (applied[n] != 0).astype(jnp.int32)
-                      for n in wc}
-            return (p, o, d, wc), loss
-
         def task_body(carry, inp):
-            xs_t, ys_t, keys_t, k_eval = inp
+            xs_t, ys_t, keys_t, k_eval, r_on = inp
+
+            def step_body(c, sinp):
+                p, o, d, wc, rs = c
+                x, y, k = sinp
+                if ingraph_step is not None:
+                    p, o, loss, applied, d, rs = ingraph_step(
+                        p, o, k, x, y, d, rs, r_on)
+                else:
+                    p, o, loss, applied, d = raw_train(p, o, k, x, y, d)
+                if wc is not None:
+                    wc = {n: wc[n] + (applied[n] != 0).astype(jnp.int32)
+                          for n in wc}
+                return (p, o, d, wc, rs), loss
+
             with tele.scaled(S):
                 carry, losses = jax.lax.scan(step_body, carry,
                                              (xs_t, ys_t, keys_t))
-            p, _, d, _ = carry
+            p, _, d, _, _ = carry
             accs = eval_all(p, k_eval, d)
             return carry, (accs, losses)
 
         wc0 = {n: jnp.zeros(p.shape, jnp.int32)
                for n, p in params.items()
                if jnp.ndim(p) >= 2} if track_writes else None
+        replay_on = jnp.arange(n_tasks) > 0
         with tele.deferred():
             base_row = eval_all(params, eval_keys[0], dev_state) \
                 if baseline else jnp.zeros((n_tasks,), jnp.float32)
             with tele.scaled(n_tasks):
                 carry, (R_full, losses) = jax.lax.scan(
-                    task_body, (params, opt_state, dev_state, wc0),
-                    (xs, ys, step_keys, eval_keys))
+                    task_body,
+                    (params, opt_state, dev_state, wc0, rstate),
+                    (xs, ys, step_keys, eval_keys, replay_on))
         tele.emit_pending()
-        params, opt_state, dev_state, wcounts = carry
+        params, opt_state, dev_state, wcounts, rstate = carry
         return {"params": params, "dev_state": dev_state,
                 "R_full": R_full, "losses": losses,
                 "wcounts": wcounts, "baseline_row": base_row}
@@ -240,28 +272,45 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
                                 seed_list)
 
     _, _, opt = _make_raw_steps(cfg, trainer, backend)
-    inputs = []
+    inputs, scheds = [], []
     for s in (seed_list if seed_list is not None else [trainer.seed]):
         tsp = dataclasses.replace(trainer, seed=s)
-        inp, _ = _build_seed_inputs(cfg, tsp, rspec, backend, tasks, opt)
+        inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend, tasks,
+                                        opt)
         inputs.append(inp)
+        scheds.append(sched)
     if any(i is None for i in inputs) or len(test_shapes) != 1:
+        # The materialized schedules are discarded — their replay
+        # traffic is *not* credited here; the loop fallback meters its
+        # own (run_continual records its schedule's traffic).
         return _fallback_python(cfg, trainer, tasks, rspec, backend,
                                 seed_list)
 
     n_tasks = len(tasks)
     S = inputs[0].xs.shape[1]
     track_writes = backend.tracker is not None or tele.enabled
+    in_graph = get_policy_class(rspec.resolved_policy).in_graph
+    if tele.enabled:
+        # Credit the replay DRAM traffic of every schedule this compiled
+        # run will actually consume (host policies), or the exact
+        # scan-carried buffer traffic (in-graph policies) — once.
+        T, F = tasks[0].x_train.shape[1:]
+        for sched in scheds:
+            traffic = _ingraph_replay_traffic(
+                rspec, trainer.batch_size, sched.steps_per_task,
+                (T, F)) if in_graph else sched.replay_traffic
+            if traffic:
+                tele.record(traffic)
     run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
-                       baseline)
+                       baseline, ingraph_rspec=rspec if in_graph else None)
 
     eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
     eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
 
     def arrays(i: _SeedInputs):
-        return (i.params, i.opt_state, i.dev_state, jnp.asarray(i.xs),
-                jnp.asarray(i.ys), jnp.asarray(i.step_keys),
-                jnp.asarray(i.eval_keys))
+        return (i.params, i.opt_state, i.dev_state, i.rstate,
+                jnp.asarray(i.xs), jnp.asarray(i.ys),
+                jnp.asarray(i.step_keys), jnp.asarray(i.eval_keys))
 
     # Donate the mutated state buffers (params; the conductance pairs).
     # opt_state is excluded: DFA's is the pass-through Ψ and XLA declines
@@ -271,7 +320,7 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     if many:
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[arrays(i) for i in inputs])
-        fn = jax.jit(jax.vmap(run, in_axes=(0,) * 7 + (None, None)))
+        fn = jax.jit(jax.vmap(run, in_axes=(0,) * 8 + (None, None)))
         scope = tele.scaled(len(seed_list))
     else:
         stacked = arrays(inputs[0])
@@ -373,16 +422,21 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
         tasks = sc.build(seed, **skw)
         cfg = scenario_miru_config(tasks, n_h=n_h)
         tsp = dataclasses.replace(trainer, **sc.trainer_overrides)
+        # Scenario-conditional replay: the stream's preferred policy
+        # applies unless the caller pinned one (same resolution rule as
+        # trainer_overrides).
+        rsp = sc.resolve_replay(replay)
         for be_name in backends:
             backend = get_backend(be_name)
             metered = meter and backend.spec.input_bits is not None
             if metered:
                 backend.telemetry.enable()
-            res = run_compiled(cfg, tsp, tasks, replay=replay,
+            res = run_compiled(cfg, tsp, tasks, replay=rsp,
                                device=backend, seeds=seeds,
                                uniform=sc.uniform)
             cell = {
                 "scenario": sc_name, "backend": be_name,
+                "replay_policy": rsp.resolved_policy,
                 "compiled": res["compiled"],
                 "MA": res["MA"],
                 "metrics": res["metrics"],

@@ -27,6 +27,32 @@ from typing import Mapping, Optional
 from repro.analog.costmodel import M2RUCostModel
 from repro.telemetry import meters as M
 
+#: Off-chip DRAM access energy for the replay buffer, pJ per byte
+#: (edge-class LPDDR4x, ≈5 pJ/bit incl. I/O + activation amortization).
+#: Replay traffic is *off-chip*: it is reported alongside the chip
+#: numbers (``telemetry_report``'s ``replay`` section) but deliberately
+#: not folded into the chip power/efficiency that the analytical-model
+#: 5 % agreement gates check.
+DRAM_PJ_PER_BYTE = 40.0
+
+
+def replay_traffic(counters: Mapping[str, int]) -> Optional[dict]:
+    """Replay-buffer DRAM traffic summary from metered counters, or None
+    when the run metered no replay activity."""
+    reads = float(counters.get(M.REPLAY_READS, 0))
+    writes = float(counters.get(M.REPLAY_WRITES, 0))
+    if reads == 0 and writes == 0:
+        return None
+    nbytes = float(counters.get(M.REPLAY_READ_BYTES, 0)
+                   + counters.get(M.REPLAY_WRITE_BYTES, 0))
+    return {
+        "rows_read": reads,
+        "rows_written": writes,
+        "bytes": nbytes,
+        "dram_pj_per_byte": DRAM_PJ_PER_BYTE,
+        "dram_energy_j": nbytes * DRAM_PJ_PER_BYTE * 1e-12,
+    }
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergyReport:

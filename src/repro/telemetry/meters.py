@@ -46,6 +46,14 @@ SEQUENCES = "sequences"              # sequences fully processed
 WRITE_PULSES = "write_pulses"        # nonzero programmed synapses
 WRITE_EVENTS = "write_events"        # weight-update rounds
 DRIFT_TICKS = "drift_ticks"          # retention-drift relaxation ticks
+# Replay-buffer DRAM traffic (§IV-A: the rehearsal store lives in
+# off-chip DRAM, not on the crossbar). Rows moved + the byte volume the
+# energy model charges at DRAM access cost (telemetry/report.py); kept
+# out of the *chip* power budget the analytical 5 % gates check.
+REPLAY_READS = "replay_reads"                # rehearsal rows fetched
+REPLAY_WRITES = "replay_writes"              # rows programmed into DRAM
+REPLAY_READ_BYTES = "replay_read_bytes"      # quantized codes + label
+REPLAY_WRITE_BYTES = "replay_write_bytes"
 
 
 def _is_tracing(x) -> bool:

@@ -12,7 +12,8 @@ from typing import Optional
 
 from repro.analog.costmodel import M2RUCostModel
 from repro.analog.endurance import EnduranceTracker
-from repro.telemetry.energy import MeteredEnergy, efficiency_ratio
+from repro.telemetry.energy import (MeteredEnergy, efficiency_ratio,
+                                    replay_traffic)
 from repro.telemetry.lifetime import project_lifetime
 from repro.telemetry.meters import Telemetry
 
@@ -26,7 +27,8 @@ def telemetry_report(telemetry: Telemetry,
     by side with the closed-form cost model for the same geometry."""
     model = model if model is not None else M2RUCostModel()
     energy = MeteredEnergy(model)
-    rep = energy.report(telemetry.snapshot(), kind=kind)
+    counters = telemetry.snapshot()
+    rep = energy.report(counters, kind=kind)
     out = {
         "kind": kind,
         "metered": {
@@ -54,6 +56,11 @@ def telemetry_report(telemetry: Telemetry,
     if rep.sample_steps > 0:
         out["metered"]["step_latency_us"] = rep.time_s / rep.sample_steps \
             * 1e6
+    # Off-chip replay-buffer DRAM traffic (repro.replay): reported next
+    # to — not inside — the chip power budget (see energy.replay_traffic).
+    replay = replay_traffic(counters)
+    if replay is not None:
+        out["replay"] = replay
     if tracker is not None and tracker.updates_applied:
         out["lifetime"] = project_lifetime(
             tracker, model.hw, update_period_s).as_dict()
@@ -97,6 +104,13 @@ def format_report(rep: dict) -> str:
     ]
     if m["write_pulses"]:
         lines.append(f"  write pulses       {m['write_pulses']:9.0f}")
+    if "replay" in rep:
+        r = rep["replay"]
+        lines.append(
+            f"  replay DRAM        {r['bytes']/1024:9.1f} KiB  "
+            f"({r['rows_read']:.0f} reads / {r['rows_written']:.0f} "
+            f"writes; ≈{r['dram_energy_j']*1e6:.1f} µJ off-chip @ "
+            f"{r['dram_pj_per_byte']:.0f} pJ/B)")
     if "lifetime" in rep:
         lt = rep["lifetime"]
         lines.append(

@@ -299,9 +299,9 @@ def test_task0_buffer_seeded_from_full_batches(monkeypatch):
     offered = []
     orig = replay_mod.ReplayBuffer.add_batch
 
-    def spy(self, xs, ys):
+    def spy(self, xs, ys, task_ids=None):
         offered.append(len(xs))
-        return orig(self, xs, ys)
+        return orig(self, xs, ys, task_ids=task_ids)
 
     monkeypatch.setattr(replay_mod.ReplayBuffer, "add_batch", spy)
     from repro.data.synthetic import make_permuted_tasks

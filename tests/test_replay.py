@@ -6,7 +6,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.replay import (ReplayBuffer, ReservoirSampler, Xorshift32,
-                               dequantize, lfsr_stochastic_quantize,
+                               code_dtype, dequantize,
+                               lfsr_stochastic_quantize, round_trip_bound,
                                stochastic_quantize, uniform_quantize)
 
 
@@ -28,6 +29,38 @@ def test_xorshift_uniformity():
     # Each bucket within 10% of expectation — xorshift is unbiased
     # (the paper's reason for rejecting an LFSR).
     assert np.abs(counts - 2000).max() < 200
+
+
+def test_xorshift_modulus_bias_bound_vs_rejection_mode():
+    """The hardware-faithful modulus reducer carries modulo bias; the
+    rejection mode does not. The analytic bound on the faithful path:
+    per value, |P(v) − 1/span| ≤ 2⁻³²  (negligible for small spans —
+    test_xorshift_uniformity's span of 10), but residues below
+    r = 2³² mod span are overweighted by ⌈2³²/span⌉/⌊2³²/span⌋, which
+    approaches 2× as span → 2³². At span = 3·2³⁰ (r = 2³⁰) the biased
+    path puts probability 1/2 — not 1/3 — on values below 2³⁰; the
+    rejection path restores 1/3."""
+    span = 3 * 2 ** 30
+    n = 4000
+    faithful = Xorshift32(123)
+    frac_f = np.mean([faithful.randint(0, span - 1) < 2 ** 30
+                      for _ in range(n)])
+    unbiased = Xorshift32(123, mode="reject")
+    frac_u = np.mean([unbiased.randint(0, span - 1) < 2 ** 30
+                      for _ in range(n)])
+    assert abs(frac_f - 0.5) < 0.04       # the documented 2× overweight
+    assert abs(frac_u - 1 / 3) < 0.04     # rejection: exactly uniform
+
+
+def test_reject_mode_does_not_alter_the_word_stream():
+    """mode='reject' changes only how words reduce to a range; the raw
+    13/17/5 stream (which hardware-equivalence seeds pin) is untouched,
+    and the default mode stays 'modulus'."""
+    assert Xorshift32(1, mode="reject").next() == 270369
+    assert Xorshift32(1).mode == "modulus"
+    assert ReservoirSampler(capacity=4, seed=3)._rng.mode == "modulus"
+    with pytest.raises(ValueError, match="unknown randint mode"):
+        Xorshift32(1, mode="sometimes")
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +131,35 @@ def test_quantize_error_bounded(val, bits):
     assert float(jnp.abs(deq - val).max()) <= 1.0 / 2 ** bits + 1e-6
 
 
+def test_stochastic_quantize_unbiased_away_from_top_code():
+    """E[dequantize(q)] = x exactly for x ≤ 1 − 2⁻ⁿ (the property the
+    'unbiased' claim actually holds on); inside the clip region the
+    expectation pins at 1 − 2⁻ⁿ with the worst case round_trip_bound(n)
+    at x = 1.0 — a replayed 1.0 pixel always comes back one LSB dim."""
+    n = 50_000
+    for bits in (2, 4):
+        top_safe = 1.0 - 2.0 ** -bits
+        for v in np.linspace(0.0, top_safe, 5):
+            x = jnp.full((n,), float(v))
+            deq = dequantize(stochastic_quantize(
+                x, jax.random.PRNGKey(int(v * 997) + bits), bits), bits)
+            # mean of n Bernoulli-rounded codes: 4σ ≤ LSB·2/√n
+            tol = 2.0 ** -bits * 2.0 / np.sqrt(n) + 1e-6
+            assert abs(float(deq.mean()) - v) < tol, (bits, v)
+        # Clip region: x = 1.0 deterministically hits the top code.
+        q_top = stochastic_quantize(jnp.ones((64,)),
+                                    jax.random.PRNGKey(9), bits)
+        assert int(q_top.min()) == 2 ** bits - 1
+        err = 1.0 - float(dequantize(q_top, bits)[0])
+        assert err == pytest.approx(round_trip_bound(bits))
+        # The bound is tight: nothing errs worse anywhere in [0, 1].
+        xs = jnp.linspace(0.0, 1.0, 257)
+        deq = dequantize(stochastic_quantize(
+            xs, jax.random.PRNGKey(3), bits), bits)
+        assert float(jnp.abs(deq - xs).max()) <= \
+            round_trip_bound(bits) + 1e-6
+
+
 def test_lfsr_rounder_matches_semantics():
     """Hardware LFSR rounder: output codes within 1 LSB of input scale."""
     x = np.linspace(0, 0.95, 37)
@@ -156,6 +218,28 @@ def test_add_batch_bit_identical_to_sequential_adds():
     assert vec.size == seq.size
     np.testing.assert_array_equal(np.asarray(vec._qkey),
                                   np.asarray(seq._qkey))
+
+
+def test_feat_dtype_sized_by_bits_12bit_roundtrip():
+    """Regression: storage dtype must follow n_bits. A hard-coded uint8
+    container silently truncated the high bits of 9–16-bit codes
+    (stochastic_quantize returns uint16 there); a 12-bit buffer must
+    round-trip within one 12-bit LSB."""
+    assert code_dtype(4) == np.uint8
+    assert code_dtype(8) == np.uint8
+    assert code_dtype(12) == np.uint16
+    assert code_dtype(16) == np.uint16
+    with pytest.raises(ValueError):
+        code_dtype(17)
+    buf = ReplayBuffer(capacity=16, feature_shape=(5,), n_bits=12, seed=3)
+    rng = np.random.default_rng(0)
+    xs = rng.random((16, 5)).astype(np.float32)
+    assert buf.add_batch(xs, np.arange(16)) == 16
+    assert buf._feat.dtype == np.uint16
+    assert int(buf._feat.max()) > 255          # high bits actually stored
+    # First 16 offers fill slots in order, so storage aligns with xs.
+    deq = buf._feat.astype(np.float32) / 2.0 ** 12
+    assert np.abs(deq - xs).max() <= 2.0 ** -12 + 1e-7
 
 
 def test_replay_buffer_memory_halved():

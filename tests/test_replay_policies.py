@@ -1,0 +1,414 @@
+"""repro.replay: the policy registry, policy-equivalence properties,
+the scan-carried in-graph (loss_aware) buffer, and the wiring through
+ReplaySpec / scenario metadata / telemetry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.continual import (ReplaySpec, TrainerSpec,
+                                  build_batch_schedule, run_continual)
+from repro.core.replay import ReplayBuffer
+from repro.replay import (ReplayPolicy, available_policies,
+                          get_policy_class, ingraph_init, ingraph_insert,
+                          ingraph_mix, ingraph_sample, make_policy,
+                          per_example_ce, register_policy,
+                          unregister_policy)
+from repro.scenarios import (build_scenario, get_scenario, run_compiled,
+                             run_sweep, scenario_miru_config)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_the_policy_suite():
+    names = set(available_policies())
+    assert {"reservoir", "ring", "class_balanced", "task_stratified",
+            "loss_aware"} <= names
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown replay policy"):
+        make_policy("not-a-policy", 8)
+    with pytest.raises(ValueError, match="unknown replay policy"):
+        build_batch_schedule(
+            TrainerSpec(algo="dfa", epochs_per_task=1),
+            ReplaySpec(capacity=8, policy="not-a-policy"),
+            build_scenario("permuted", 0, n_tasks=1, n_train=32,
+                           n_test=16))
+
+
+def test_register_unregister_roundtrip():
+    @register_policy("tmp_pol")
+    class _Tmp(ReplayPolicy):
+        def select_insert(self, y, task_id=0):
+            return 0
+
+        def select_sample(self, rng, batch):
+            return np.zeros(batch, np.int64)
+
+        @property
+        def occupancy(self):
+            return 1
+
+    try:
+        assert "tmp_pol" in available_policies()
+        assert make_policy("tmp_pol", 4).select_insert(0) == 0
+    finally:
+        unregister_policy("tmp_pol")
+    assert "tmp_pol" not in available_policies()
+
+
+def test_in_graph_policy_refuses_host_buffer():
+    with pytest.raises(ValueError, match="in-graph"):
+        ReplayBuffer(8, (4,), policy="loss_aware")
+
+
+def test_replayspec_policy_resolution():
+    assert ReplaySpec().resolved_policy == "reservoir"
+    assert ReplaySpec(policy="ring").resolved_policy == "ring"
+    # Scenario preference applies only when the caller didn't pin one.
+    sc = get_scenario("class_incremental")
+    assert sc.replay_policy == "class_balanced"
+    assert sc.resolve_replay(None).resolved_policy == "class_balanced"
+    assert sc.resolve_replay(
+        ReplaySpec(policy="reservoir")).resolved_policy == "reservoir"
+    assert get_scenario("permuted").resolve_replay(
+        None).resolved_policy == "reservoir"
+
+
+# ---------------------------------------------------------------------------
+# Policy-equivalence properties
+# ---------------------------------------------------------------------------
+
+def test_ring_equals_reservoir_for_first_capacity_offers():
+    """Both fill slots 0..C-1 in order, consuming identical quantizer
+    key chains — buffers are bit-identical until the first post-fill
+    offer (where reservoir may reject but ring never does)."""
+    C = 16
+    res = ReplayBuffer(C, (3, 2), n_bits=4, seed=11, policy="reservoir")
+    rin = ReplayBuffer(C, (3, 2), n_bits=4, seed=11, policy="ring")
+    rng = np.random.default_rng(2)
+    xs = rng.random((C, 3, 2)).astype(np.float32)
+    ys = rng.integers(0, 5, C)
+    assert res.add_batch(xs, ys) == C
+    assert rin.add_batch(xs, ys) == C
+    np.testing.assert_array_equal(res._feat, rin._feat)
+    np.testing.assert_array_equal(res._label, rin._label)
+    np.testing.assert_array_equal(np.asarray(res._qkey),
+                                  np.asarray(rin._qkey))
+    assert res.size == rin.size == C
+    # Past capacity the policies may diverge — ring is deterministic.
+    slots = [rin.policy.select_insert(0) for _ in range(C)]
+    assert slots == list(range(C))            # FIFO wraps in order
+
+
+def test_class_balanced_occupancy_invariant_class_incremental():
+    """Under a (heavily imbalanced) class-incremental stream: the buffer
+    always runs at full capacity once filled, every seen class keeps
+    members (early classes are never crowded out), and long-run shares
+    balance to within ±1."""
+    C, n_classes = 24, 8
+    policy = make_policy("class_balanced", C, seed=3, n_classes=n_classes)
+    buf = ReplayBuffer(C, (4,), n_bits=4, seed=3, policy=policy)
+    rng = np.random.default_rng(0)
+    offered = 0
+    for t in range(4):                         # classes (2t, 2t+1)
+        for _ in range(60 * (t + 1)):          # later classes flood
+            y = int(2 * t + rng.integers(0, 2))
+            buf.add(rng.random(4).astype(np.float32), y, task_id=t)
+            offered += 1
+        sizes = policy.group_sizes()
+        assert sum(sizes.values()) == min(offered, C)   # full utilization
+        assert all(v >= 1 for v in sizes.values())      # nobody starves
+    assert set(sizes) == set(range(n_classes))
+    assert max(sizes.values()) - min(sizes.values()) <= 1   # ±1 balance
+    # Bookkeeping matches storage: each group's slots hold its label.
+    for g, slots in policy._members.items():
+        assert all(int(buf._label[s]) == g for s in slots)
+
+
+def test_task_stratified_keeps_every_task_represented():
+    C = 20
+    policy = make_policy("task_stratified", C, seed=5, n_tasks=5)
+    buf = ReplayBuffer(C, (4,), n_bits=4, seed=5, policy=policy)
+    rng = np.random.default_rng(1)
+    for t in range(5):
+        for _ in range(40 * (t + 1)):
+            buf.add(rng.random(4).astype(np.float32),
+                    int(rng.integers(0, 10)), task_id=t)
+    sizes = policy.group_sizes()
+    assert set(sizes) == set(range(5))
+    assert sum(sizes.values()) == C
+    assert max(sizes.values()) - min(sizes.values()) <= 1
+
+
+def test_balanced_sampling_is_group_uniform():
+    """Rehearsal draws are uniform over seen groups even when the stream
+    (and therefore a plain reservoir) is dominated by one group."""
+    C = 24
+    policy = make_policy("class_balanced", C, seed=7, n_classes=3)
+    buf = ReplayBuffer(C, (2,), n_bits=4, seed=7, policy=policy)
+    rng = np.random.default_rng(3)
+    stream = [0] * 500 + [1] * 50 + [2] * 50   # 5:1:1 imbalance
+    for y in stream:
+        buf.add(rng.random(2).astype(np.float32), y)
+    _, labels = buf.sample(rng, 3000)
+    hist = np.bincount(labels, minlength=3) / 3000
+    assert np.abs(hist - 1 / 3).max() < 0.05   # class-uniform, not 5:1:1
+
+
+def test_ingraph_schedule_is_fresh_only():
+    """loss_aware cannot be materialized: its schedule is the fresh-only
+    stream — bitwise the ratio-0 schedule (mixing happens at run time
+    from the scan-carried buffer)."""
+    tasks = build_scenario("permuted", 0, n_tasks=2, n_train=64, n_test=16)
+    tr = TrainerSpec(algo="dfa", epochs_per_task=1, seed=4)
+    s_la = build_batch_schedule(tr, ReplaySpec(capacity=32,
+                                               policy="loss_aware"), tasks)
+    s_r0 = build_batch_schedule(tr, ReplaySpec(capacity=32, ratio=0.0),
+                                tasks)
+    for a, b in zip(s_la.x + s_la.y, s_r0.x + s_r0.y):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# The in-graph (scan-carried) buffer
+# ---------------------------------------------------------------------------
+
+BITS = 4
+
+
+def _stream(seed, n_steps=8, B=4, shape=(3, 2)):
+    kx, kp = jax.random.split(jax.random.PRNGKey(seed))
+    xs = jax.random.uniform(kx, (n_steps, B, *shape))
+    ys = jnp.arange(n_steps * B).reshape(n_steps, B) % 5
+    prios = jax.random.uniform(kp, (n_steps, B))
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(seed + 99), i))(jnp.arange(n_steps))
+    return keys, xs, ys, prios
+
+
+def test_ingraph_insert_scan_bitwise_matches_python_loop():
+    """The buffer is a pure function of (state, key, inputs): the same
+    step sequence yields bit-identical state whether driven by a Python
+    loop of jitted calls or one ``lax.scan`` — the property that makes
+    the loop and compiled training paths comparable."""
+    C, shape = 12, (3, 2)
+    keys, xs, ys, prios = _stream(0)
+
+    step = jax.jit(lambda st, k, x, y, p: ingraph_insert(
+        st, k, x, y, p, BITS))
+    st_loop = ingraph_init(C, shape, BITS)
+    for i in range(xs.shape[0]):
+        st_loop = step(st_loop, keys[i], xs[i], ys[i], prios[i])
+
+    def body(st, inp):
+        k, x, y, p = inp
+        return ingraph_insert(st, k, x, y, p, BITS), None
+
+    st_scan, _ = jax.lax.scan(body, ingraph_init(C, shape, BITS),
+                              (keys, xs, ys, prios))
+    for name in st_loop:
+        np.testing.assert_array_equal(np.asarray(st_loop[name]),
+                                      np.asarray(st_scan[name]), name)
+
+
+def test_ingraph_buffer_bitwise_stable_under_seed_reordering():
+    """vmapping the scan over a seed axis must give each seed exactly
+    its solo result, regardless of how the seed batch is ordered."""
+    C, shape = 10, (3, 2)
+
+    def final_state(seed):
+        keys, xs, ys, prios = _stream(0)       # same data stream
+        keys = jax.vmap(jax.random.fold_in,
+                        in_axes=(0, None))(keys, seed)
+
+        def body(st, inp):
+            k, x, y, p = inp
+            return ingraph_insert(st, k, x, y, p, BITS), None
+
+        st, _ = jax.lax.scan(body, ingraph_init(C, shape, BITS),
+                             (keys, xs, ys, prios))
+        return st
+
+    fwd = jax.jit(jax.vmap(final_state))(jnp.array([0, 1, 2]))
+    rev = jax.jit(jax.vmap(final_state))(jnp.array([2, 1, 0]))
+    solo = jax.jit(final_state)(jnp.asarray(1))
+    for name in solo:
+        np.testing.assert_array_equal(np.asarray(fwd[name][1]),
+                                      np.asarray(rev[name][1]), name)
+        np.testing.assert_array_equal(np.asarray(solo[name]),
+                                      np.asarray(fwd[name][1]), name)
+
+
+def test_ingraph_insert_semantics():
+    """Fill while free; once full, evict-min-priority only when beaten;
+    invalid rows are never offered."""
+    C, shape = 4, (2,)
+    st = ingraph_init(C, shape, BITS)
+    key = jax.random.PRNGKey(0)
+    xs = jnp.full((4, 2), 0.5)
+    st = ingraph_insert(st, key, xs, jnp.arange(4),
+                        jnp.array([3.0, 1.0, 2.0, 4.0]), BITS)
+    assert int(st["size"]) == 4
+    # Lower than the current min (1.0): rejected.
+    st2 = ingraph_insert(st, key, xs[:1], jnp.array([9]),
+                         jnp.array([0.5]), BITS)
+    np.testing.assert_array_equal(np.asarray(st2["label"]),
+                                  np.asarray(st["label"]))
+    # Beats the min: replaces exactly the argmin slot (slot 1).
+    st3 = ingraph_insert(st, key, xs[:1], jnp.array([9]),
+                         jnp.array([1.5]), BITS)
+    assert int(st3["label"][1]) == 9
+    assert float(st3["prio"][1]) == pytest.approx(1.5)
+    # Invalid rows don't enter even with winning priority.
+    st4 = ingraph_insert(st, key, xs[:1], jnp.array([9]),
+                         jnp.array([9.9]), BITS,
+                         valid=jnp.array([False]))
+    np.testing.assert_array_equal(np.asarray(st4["label"]),
+                                  np.asarray(st["label"]))
+    assert int(st4["size"]) == 4
+
+
+def test_ingraph_sample_prefers_high_priority_and_mix_layout():
+    C, shape = 8, (2,)
+    st = ingraph_init(C, shape, BITS)
+    xs = jnp.tile(jnp.array([[0.25, 0.75]]), (4, 1))
+    st = ingraph_insert(st, jax.random.PRNGKey(1), xs, jnp.arange(4),
+                        jnp.array([0.01, 0.01, 10.0, 0.01]), BITS)
+    _, labels = ingraph_sample(st, jax.random.PRNGKey(2), 200, BITS)
+    counts = np.bincount(np.asarray(labels), minlength=4)
+    assert counts[2] > 150                      # ∝ priority
+    # Mix splices the rehearsal rows into the batch tail, gated on
+    # `active`; an inactive mix returns the fresh batch untouched.
+    B, n_rep = 6, 2
+    x = jnp.zeros((B, 2))
+    y = jnp.full((B,), 7)
+    xm, ym = ingraph_mix(st, jax.random.PRNGKey(3), x, y, n_rep,
+                         jnp.asarray(True), BITS)
+    assert np.asarray(ym)[:B - n_rep].tolist() == [7] * (B - n_rep)
+    assert set(np.asarray(ym)[B - n_rep:].tolist()) <= {0, 1, 2, 3}
+    assert float(jnp.abs(xm[B - n_rep:]).sum()) > 0
+    xi, yi = ingraph_mix(st, jax.random.PRNGKey(3), x, y, n_rep,
+                         jnp.asarray(False), BITS)
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(y))
+
+
+def test_per_example_ce_matches_mean_loss():
+    from repro.utils import softmax_cross_entropy
+    logits = jax.random.normal(jax.random.PRNGKey(0), (16, 5))
+    labels = jnp.arange(16) % 5
+    per = per_example_ce(logits, labels)
+    assert per.shape == (16,)
+    assert float(per.mean()) == pytest.approx(
+        float(softmax_cross_entropy(logits, labels)), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end wiring
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_setup():
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=24)
+    return cfg, TrainerSpec(algo="dfa", epochs_per_task=1), tasks
+
+
+def test_reservoir_policy_bit_identical_to_default(small_setup):
+    """The acceptance gate: ReplaySpec(policy="reservoir") is the
+    pre-policy-subsystem behavior bit-for-bit — identical schedules
+    (the golden hash in tests/test_determinism.py) and identical
+    compiled accuracies to the unspecified-policy default."""
+    cfg, trainer, tasks = small_setup
+    base = run_compiled(cfg, trainer, tasks,
+                        replay=ReplaySpec(capacity=32), device="ideal")
+    named = run_compiled(cfg, trainer, tasks,
+                         replay=ReplaySpec(capacity=32,
+                                           policy="reservoir"),
+                         device="ideal")
+    np.testing.assert_array_equal(base["R_full"], named["R_full"])
+    assert base["MA"] == named["MA"]
+    for k in base["params"]:
+        np.testing.assert_array_equal(np.asarray(base["params"][k]),
+                                      np.asarray(named["params"][k]))
+
+
+@pytest.mark.parametrize("policy", ["ring", "class_balanced",
+                                    "task_stratified", "loss_aware"])
+def test_policies_loop_compiled_parity(small_setup, policy):
+    """Every policy — host-materialized or scan-carried — returns
+    bit-identical accuracies from the Python loop and the compiled
+    scan-over-tasks (the reservoir case is the existing
+    tests/test_scenarios.py gate)."""
+    cfg, trainer, tasks = small_setup
+    rspec = ReplaySpec(capacity=32, policy=policy)
+    loop = run_continual(cfg, trainer, tasks, replay=rspec, device="ideal")
+    comp = run_compiled(cfg, trainer, tasks, replay=rspec, device="ideal")
+    assert comp["compiled"]
+    np.testing.assert_array_equal(loop["R"], comp["R"])
+    assert loop["MA"] == comp["MA"]
+
+
+def test_loss_aware_vmapped_seeds(small_setup):
+    cfg, trainer, tasks = small_setup
+    comp = run_compiled(cfg, trainer, tasks,
+                        replay=ReplaySpec(capacity=32,
+                                          policy="loss_aware"),
+                        device="ideal", seeds=[0, 1])
+    assert comp["compiled"]
+    single = run_compiled(cfg, dataclasses.replace(trainer, seed=0),
+                          tasks, replay=ReplaySpec(capacity=32,
+                                                   policy="loss_aware"),
+                          device="ideal")
+    np.testing.assert_array_equal(comp["per_seed"][0]["R"], single["R"])
+
+
+def test_run_sweep_resolves_scenario_policy(small_setup):
+    grid = run_sweep(["class_incremental"], ["ideal"],
+                     TrainerSpec(algo="dfa", epochs_per_task=1),
+                     n_h=16,
+                     scenario_kwargs=dict(n_tasks=2, n_train=64,
+                                          n_test=32))
+    cell = grid["cells"]["class_incremental/ideal"]
+    assert cell["replay_policy"] == "class_balanced"
+    # An explicit caller choice overrides the scenario preference.
+    grid2 = run_sweep(["class_incremental"], ["ideal"],
+                      TrainerSpec(algo="dfa", epochs_per_task=1),
+                      ReplaySpec(capacity=48, policy="reservoir"),
+                      n_h=16,
+                      scenario_kwargs=dict(n_tasks=2, n_train=64,
+                                           n_test=32))
+    assert grid2["cells"]["class_incremental/ideal"][
+        "replay_policy"] == "reservoir"
+
+
+def test_replay_dram_traffic_metered():
+    """Host-buffer inserts and rehearsal draws land in the replay_*
+    telemetry counters with the right byte accounting (4-bit codes in a
+    uint8 container + int32 label)."""
+    from repro.telemetry.meters import Telemetry
+    tele = Telemetry(enabled=True)
+    buf = ReplayBuffer(8, (4,), n_bits=4, seed=1, telemetry=tele)
+    rng = np.random.default_rng(0)
+    buf.add_batch(rng.random((8, 4)).astype(np.float32),
+                  np.arange(8))
+    buf.sample(rng, 5)
+    snap = tele.snapshot()
+    row_bytes = 4 * 1 + 4
+    assert snap["replay_writes"] == 8
+    assert snap["replay_write_bytes"] == 8 * row_bytes
+    assert snap["replay_reads"] == 5
+    assert snap["replay_read_bytes"] == 5 * row_bytes
+    # The report surfaces the traffic as off-chip DRAM energy.
+    from repro.telemetry.energy import replay_traffic
+    rep = replay_traffic(snap)
+    assert rep["bytes"] == 13 * row_bytes
+    assert rep["dram_energy_j"] > 0
+    assert replay_traffic({}) is None
