@@ -149,6 +149,10 @@ def run(fast: bool = True) -> dict:
         extra = (f";{cell['power_mw']:.1f}mW;"
                  f"{cell['gops_per_w']:.0f}GOPS/W"
                  if "power_mw" in cell else "")
+        if "zeta_write_rate" in cell and cell["zeta_write_rate"]:
+            z = cell["zeta_write_rate"]
+            extra += (f";life={cell['lifetime_years']:.1f}y;"
+                      f"zeta_p50={z['p50']:.3f};zeta_p99={z['p99']:.3f}")
         emit(f"scenarios/{key}", (cell.get("wall_s") or 0) * 1e6,
              f"MA={cell['MA']:.3f};"
              f"F={cell['metrics']['forgetting']:+.3f};"

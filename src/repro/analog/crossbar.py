@@ -126,25 +126,36 @@ def pair_weights(pair: Pair, spec: CrossbarSpec) -> jax.Array:
 
 
 def program_pair(key: Optional[jax.Array], w: jax.Array,
-                 spec: CrossbarSpec) -> Pair:
+                 spec: CrossbarSpec, *,
+                 prog_sigma: Optional[jax.Array] = None) -> Pair:
     """Initial programming of logical weights onto G⁺/G⁻ pairs, with
-    ``prog_sigma`` device-to-device programming variability."""
+    ``prog_sigma`` device-to-device programming variability.
+
+    ``prog_sigma`` overrides the spec's (static) value with a possibly
+    *traced* scalar — the fleet heterogeneity path, where each simulated
+    chip draws its own programming variability and the per-chip value
+    rides the device-state pytree through vmap/shard_map. With an
+    override the noise branch is always taken structurally (a traced
+    sigma cannot gate a Python branch); zero just multiplies through.
+    """
     wn = jnp.clip(w / spec.w_clip, -1.0, 1.0)
     g_range = spec.g_on - spec.g_off
     g_pos = spec.g_off + jnp.maximum(wn, 0.0) * g_range
     g_neg = spec.g_off + jnp.maximum(-wn, 0.0) * g_range
-    if key is not None and spec.prog_sigma > 0:
+    sigma = prog_sigma if prog_sigma is not None else spec.prog_sigma
+    if key is not None and (prog_sigma is not None or spec.prog_sigma > 0):
         kp, kn = jax.random.split(key)
-        g_pos = g_pos * (1.0 + spec.prog_sigma
+        g_pos = g_pos * (1.0 + sigma
                          * jax.random.normal(kp, g_pos.shape))
-        g_neg = g_neg * (1.0 + spec.prog_sigma
+        g_neg = g_neg * (1.0 + sigma
                          * jax.random.normal(kn, g_neg.shape))
     return {"g_pos": jnp.clip(g_pos, spec.g_off, spec.g_on),
             "g_neg": jnp.clip(g_neg, spec.g_off, spec.g_on)}
 
 
 def update_pair(key: jax.Array, pair: Pair, dw: jax.Array,
-                spec: CrossbarSpec) -> Pair:
+                spec: CrossbarSpec, *,
+                write_sigma: Optional[jax.Array] = None) -> Pair:
     """In-situ training write in the conductance domain.
 
     A positive logical delta potentiates G⁺, a negative one potentiates
@@ -153,10 +164,14 @@ def update_pair(key: jax.Array, pair: Pair, dw: jax.Array,
     to the finite programming grid, and saturates at the physical window —
     so repeated one-sided updates *lose* magnitude at the rails, a
     conductance-domain effect the logical-weight model cannot express.
+
+    ``write_sigma`` overrides the spec's static value with a possibly
+    traced per-chip scalar (fleet heterogeneity).
     """
     g_range = spec.g_on - spec.g_off
     dg = jnp.abs(dw) / spec.w_clip * g_range
-    noise = 1.0 + spec.write_sigma * jax.random.normal(key, dw.shape)
+    sigma = write_sigma if write_sigma is not None else spec.write_sigma
+    noise = 1.0 + sigma * jax.random.normal(key, dw.shape)
     dg = dg * noise
     g_pos = jnp.where(dw > 0, pair["g_pos"] + dg, pair["g_pos"])
     g_neg = jnp.where(dw < 0, pair["g_neg"] + dg, pair["g_neg"])
@@ -170,12 +185,22 @@ def update_pair(key: jax.Array, pair: Pair, dw: jax.Array,
             "g_neg": jnp.clip(g_neg, spec.g_off, spec.g_on)}
 
 
-def drift_pair(pair: Pair, spec: CrossbarSpec, n_ticks: int = 1) -> Pair:
+def drift_pair(pair: Pair, spec: CrossbarSpec, n_ticks: int = 1, *,
+               drift_rate: Optional[jax.Array] = None) -> Pair:
     """Conductance relaxation toward G_off between updates: each tick
-    shrinks the programmed excess by ``drift_rate`` (retention loss)."""
-    if spec.drift_rate <= 0:
-        return pair
-    keep = (1.0 - spec.drift_rate) ** n_ticks
+    shrinks the programmed excess by ``drift_rate`` (retention loss).
+
+    The ``drift_rate`` override (a possibly traced per-chip scalar, fleet
+    heterogeneity) bypasses the static zero-rate short-circuit — the
+    relaxation is computed structurally and a zero rate multiplies
+    through as keep == 1."""
+    if drift_rate is None:
+        if spec.drift_rate <= 0:
+            return pair
+        rate = spec.drift_rate
+    else:
+        rate = drift_rate
+    keep = (1.0 - rate) ** n_ticks
     return {k: spec.g_off + (g - spec.g_off) * keep
             for k, g in pair.items()}
 

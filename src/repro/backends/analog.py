@@ -70,7 +70,8 @@ class AnalogBackend(WBSBackend):
 
     # ------------------------------------------------------------------
     def vmm(self, drive: jax.Array, weights: jax.Array,
-            key: Optional[jax.Array] = None) -> jax.Array:
+            key: Optional[jax.Array] = None,
+            prepared: Optional[dict] = None) -> jax.Array:
         cb = self.crossbar
         if key is not None and cb.read_sigma > 0:
             # Cycle-to-cycle conductance variation: each access sees a
@@ -79,8 +80,9 @@ class AnalogBackend(WBSBackend):
             # the Pallas path, or on the weight matrix on the jnp path.
             k_read, k_gain = jax.random.split(key)
             return super().vmm(drive, weights, k_gain,
-                               read_sigma=cb.read_sigma, read_key=k_read)
-        return super().vmm(drive, weights, key)
+                               read_sigma=cb.read_sigma, read_key=k_read,
+                               prepared=prepared)
+        return super().vmm(drive, weights, key, prepared=prepared)
 
     # ------------------------------------------------------------------
     def apply_update(self, params: PyTree, updates: PyTree,

@@ -70,19 +70,40 @@ class AnalogStateBackend(AnalogBackend):
         return jnp.ndim(p) >= 2
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _state_het(state) -> Optional[dict]:
+        """Per-chip heterogeneity overlay riding the device-state pytree
+        (``repro.fleet``): traced scalar overrides for the crossbar's
+        noise/drift knobs. Absent (the common case) → the static
+        :class:`CrossbarSpec` values apply and every code path is
+        bit-identical to the pre-fleet behavior."""
+        return state.get("_het") if isinstance(state, dict) else None
+
     def init_device_state(self, params: PyTree,
-                          key: Optional[jax.Array] = None) -> Any:
+                          key: Optional[jax.Array] = None, *,
+                          het: Optional[dict] = None) -> Any:
+        """Program every ≥2-D weight onto G⁺/G⁻ pairs. ``het`` (fleet
+        heterogeneity) is a dict of per-chip scalar overrides — any of
+        ``prog_sigma``/``read_sigma``/``write_sigma``/``drift_rate`` —
+        that is applied at programming time (``prog_sigma``) and then
+        carried in the state under ``"_het"`` for the read/write/drift
+        paths. Values may be traced (vmap/shard_map over a fleet axis)."""
         cb = self.crossbar
         names = sorted(n for n, p in params.items()
                        if self._is_crossbar_param(n, p))
         keys = jax.random.split(key, len(names)) if key is not None \
             else [None] * len(names)
-        state = {name: program_pair(k, params[name], cb)
+        prog_sigma = het.get("prog_sigma") if het else None
+        state = {name: program_pair(k, params[name], cb,
+                                    prog_sigma=prog_sigma)
                  for k, name in zip(keys, names)}
         if cb.drift_rate > 0 and cb.drift_cadence > 1:
             # Update counter for the drift cadence — threaded through the
             # train loop (and scans) with the pairs.
             state["_ticks"] = jnp.zeros((), jnp.int32)
+        if het:
+            state["_het"] = {k: jnp.asarray(v, jnp.float32)
+                             for k, v in het.items()}
         return state
 
     # ------------------------------------------------------------------
@@ -94,21 +115,27 @@ class AnalogStateBackend(AnalogBackend):
         return False
 
     # ------------------------------------------------------------------
-    def _vmm_impl(self, drive, weights, key, state, tag):
-        if state is None or tag not in state or self._ideal_device():
+    def _vmm_impl(self, drive, weights, key, state, tag, prepared=None):
+        het = self._state_het(state)
+        if state is None or tag not in state \
+                or (het is None and self._ideal_device()):
             # Ideal limit or stateless call: the parent's logical path is
-            # the exact same computation.
-            return super()._vmm_impl(drive, weights, key, state, tag)
+            # the exact same computation. (A het overlay disables the
+            # short-circuit — per-chip sigmas are traced and nonzero.)
+            return super()._vmm_impl(drive, weights, key, state, tag,
+                                     prepared)
         cb = self.crossbar
+        het_read = het.get("read_sigma") if het else None
         pair = state[tag]
         k_gain = key
-        if key is not None and cb.read_sigma > 0:
+        if key is not None and (het_read is not None or cb.read_sigma > 0):
+            sigma = het_read if het_read is not None else cb.read_sigma
             kp, kn, k_gain = jax.random.split(key, 3)
             pair = {"g_pos": pair["g_pos"]
-                    * (1.0 + cb.read_sigma
+                    * (1.0 + sigma
                        * jax.random.normal(kp, pair["g_pos"].shape)),
                     "g_neg": pair["g_neg"]
-                    * (1.0 + cb.read_sigma
+                    * (1.0 + sigma
                        * jax.random.normal(kn, pair["g_neg"].shape))}
         w_eff = pair_weights(pair, cb)
         # WBS bit-streaming + plane gains over the device read-back; the
@@ -118,7 +145,8 @@ class AnalogStateBackend(AnalogBackend):
 
     # ------------------------------------------------------------------
     def _apply_update_impl(self, params, updates, key, state):
-        if state is None or self._ideal_device():
+        het = self._state_het(state)
+        if state is None or (het is None and self._ideal_device()):
             new_params, applied = self.apply_update(params, updates, key)
             if state is not None:
                 # Keep the pairs an exact mirror of the logical weights
@@ -139,10 +167,15 @@ class AnalogStateBackend(AnalogBackend):
         # amortized. Telemetry meters the cadence-amortized tick per
         # update (exact whenever k divides the update count).
         cadence = max(int(cb.drift_cadence), 1)
+        het_write = het.get("write_sigma") if het else None
+        het_drift = het.get("drift_rate") if het else None
+        # A het drift override is traced, so the drift branch is taken
+        # structurally (per-update tick; a zero rate multiplies through).
+        drifting = het_drift is not None or cb.drift_rate > 0
         fire = None
         new_state = dict(state)
-        if cb.drift_rate > 0:
-            if cadence > 1:
+        if drifting:
+            if het_drift is None and cadence > 1:
                 ticks = state["_ticks"] + 1
                 fire = ticks >= cadence
                 new_state["_ticks"] = jnp.where(fire, 0, ticks)
@@ -150,8 +183,10 @@ class AnalogStateBackend(AnalogBackend):
                                   anchor=next(iter(updates.values())))
 
         def _drift(pair):
-            if cb.drift_rate <= 0:
+            if not drifting:
                 return pair
+            if het_drift is not None:
+                return drift_pair(pair, cb, drift_rate=het_drift)
             if cadence == 1:
                 return drift_pair(pair, cb)
             drifted = drift_pair(pair, cb, n_ticks=cadence)
@@ -164,7 +199,8 @@ class AnalogStateBackend(AnalogBackend):
             dw = updates[name]
             if name in state:
                 pair = _drift(state[name])               # retention tick(s)
-                pair = update_pair(kw, pair, dw, cb)     # noisy write
+                pair = update_pair(kw, pair, dw, cb,
+                                   write_sigma=het_write)  # noisy write
                 w_read = pair_weights(pair, cb)          # device read-back
                 # Unwritten devices: carry the logical value through
                 # unchanged when there is no drift (recomputing the
@@ -173,7 +209,7 @@ class AnalogStateBackend(AnalogBackend):
                 # drift the relaxation is visible in the read-back but is
                 # not a write — ``applied`` stays exactly zero there.
                 written = dw != 0
-                w_new = w_read if cb.drift_rate > 0 \
+                w_new = w_read if drifting \
                     else jnp.where(written, w_read, p)
                 new_state[name] = pair
                 new_params[name] = w_new

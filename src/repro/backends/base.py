@@ -147,18 +147,40 @@ class DeviceBackend(abc.ABC):
     # ------------------------------------------------------------------
     # Metered entry points (what the trainers/forwards call)
     # ------------------------------------------------------------------
+    def prepare_weights(self, params: PyTree, *,
+                        state: Optional[Any] = None
+                        ) -> Optional[dict[str, Any]]:
+        """Per-forward weight preparation, keyed by crossbar tag.
+
+        Substrates whose ``vmm`` derives a transformed view of the weight
+        matrix on every call (the WBS family divides by the logical scale;
+        the Pallas path additionally pads to tile multiples) override this
+        to hoist that work out of the per-timestep scan: the default
+        per-step :meth:`device_recurrence` calls it once before the scan
+        and threads the result into each ``device_vmm`` via ``prepared``.
+        Entries are keyed by tile tag (``w_h``/``u_h``/``w_o``); a tag
+        with no entry (or ``None`` overall — the default) falls back to
+        the per-call derivation, bit-identically."""
+        del params, state
+        return None
+
     def device_vmm(self, drive: jax.Array, weights: jax.Array,
                    key: Optional[jax.Array] = None, *,
                    state: Optional[Any] = None,
-                   tag: str = "") -> jax.Array:
+                   tag: str = "",
+                   prepared: Optional[dict[str, Any]] = None) -> jax.Array:
         """``vmm`` + activity metering + optional device-state read.
         ``tag`` names the crossbar tile (``w_h``/``u_h``/``w_o``) so the
-        energy model can apply the chip's concurrency structure."""
-        y = self._vmm_impl(drive, weights, key, state, tag)
+        energy model can apply the chip's concurrency structure.
+        ``prepared`` is a :meth:`prepare_weights` result hoisted by the
+        caller (same forward, same params) — substrates consume their own
+        entries and must stay bit-identical without them."""
+        y = self._vmm_impl(drive, weights, key, state, tag, prepared)
         self.telemetry.meter_vmm(drive, weights, self.spec.input_bits, tag)
         return y
 
-    def _vmm_impl(self, drive, weights, key, state, tag) -> jax.Array:
+    def _vmm_impl(self, drive, weights, key, state, tag,
+                  prepared=None) -> jax.Array:
         return self.vmm(drive, weights, key)
 
     def device_readout(self, pre: jax.Array,
@@ -189,14 +211,20 @@ class DeviceBackend(abc.ABC):
         """
         del fused
         B, T, _ = x_seq.shape
+        # Hoist the once-per-forward weight preparation (scale division,
+        # kernel padding) out of the scan body — the per-step path
+        # otherwise re-derives it T times per forward.
+        prepared = self.prepare_weights(params, state=state)
 
         def step(carry, x_t):
             h, k = carry
             k, k1, k2 = jax.random.split(k, 3)
             pre = self.device_vmm(x_t, params["w_h"], k1,
-                                  state=state, tag="w_h") \
+                                  state=state, tag="w_h",
+                                  prepared=prepared) \
                 + self.device_vmm(cfg.beta * h, params["u_h"], k2,
-                                  state=state, tag="u_h") \
+                                  state=state, tag="u_h",
+                                  prepared=prepared) \
                 + params["b_h"]
             pre = self.device_readout(pre)
             h_tilde = jnp.tanh(pre)

@@ -103,16 +103,49 @@ class WBSBackend(DeviceBackend):
                              * jax.random.normal(key, gains.shape))
         return gains
 
+    def prepare_weights(self, params: PyTree, *, state=None
+                        ) -> Optional[dict]:
+        """Hoist the once-per-forward weight derivations out of the
+        per-timestep scan: the logical-scale division for every ≥2-D
+        weight, plus (on the Pallas path) the block-multiple padding the
+        kernel wrapper otherwise re-applies per call. Entries are keyed
+        by parameter name ≡ crossbar tag; each is bit-identical to the
+        per-call derivation (same ops, same operands), so consuming them
+        cannot change results."""
+        del state
+        scale = self._weight_scale()
+        use_kernel = self.use_kernel if self.use_kernel is not None \
+            else jax.default_backend() != "cpu"
+        prepared = {}
+        for name, p in params.items():
+            if jnp.ndim(p) < 2:
+                continue
+            w = p / scale
+            entry = {"w": w}
+            if use_kernel:
+                from repro.kernels import ops as kops
+                entry["padded"] = kops.pad_wbs_weights(
+                    w.astype(jnp.float32))
+            prepared[name] = entry
+        return prepared or None
+
+    def _vmm_impl(self, drive, weights, key, state, tag, prepared=None):
+        entry = prepared.get(tag) if prepared else None
+        return self.vmm(drive, weights, key, prepared=entry)
+
     def vmm(self, drive: jax.Array, weights: jax.Array,
             key: Optional[jax.Array] = None,
             read_sigma: float = 0.0,
-            read_key: Optional[jax.Array] = None) -> jax.Array:
+            read_key: Optional[jax.Array] = None,
+            prepared: Optional[dict] = None) -> jax.Array:
         """WBS crossbar product. ``read_sigma``/``read_key`` carry
         per-access conductance read noise (the analog backend's
         ``crossbar.read_sigma``): on the Pallas path the noise is drawn
         *inside* the kernel from the on-chip PRNG; the jnp reference path
         perturbs the weight matrix up front — same statistics, one draw
-        per call instead of per access."""
+        per call instead of per access. ``prepared`` is this tile's
+        :meth:`prepare_weights` entry (hoisted scale division/padding);
+        it is ignored wherever the weights are perturbed per call."""
         n_bits = self.spec.input_bits or 8
         scale = self._weight_scale()
         use_kernel = self.use_kernel if self.use_kernel is not None \
@@ -121,12 +154,14 @@ class WBSBackend(DeviceBackend):
             weights = weights * (1.0 + read_sigma
                                  * jax.random.normal(read_key,
                                                      weights.shape))
-        w = weights / scale
+            prepared = None   # per-call perturbation, nothing to reuse
+        w = prepared["w"] if prepared is not None else weights / scale
         if use_kernel:
             from repro.kernels import ops as kops
             y = kops.wbs_dense(drive, w.astype(jnp.float32), n_bits=n_bits,
                                adc_bits=None, gains=self._sample_gains(key),
-                               read_sigma=read_sigma, read_key=read_key)
+                               read_sigma=read_sigma, read_key=read_key,
+                               w_prepared=(prepared or {}).get("padded"))
         else:
             wspec = WBSSpec(n_bits=n_bits, gain_sigma=self.spec.gain_sigma,
                             adc_bits=None)

@@ -85,6 +85,14 @@ class ReplaySpec:
     ratio: float = 0.5                  # fraction of each batch from replay
     bits: int = 4                       # stochastic-quantizer precision
     policy: Optional[str] = None        # replay policy (None → reservoir)
+    # Staleness decay on stored in-graph priorities (loss_aware): each
+    # offer round multiplies every stored priority by ``decay`` before
+    # the fresh rows compete, keeping stored CE scores comparable to
+    # fresh ones as the model trains on (paired with the class-aware
+    # eviction in repro.replay.ingraph that fixes the task-boundary
+    # collapse). Host policies ignore it; 1.0 reproduces the legacy
+    # no-decay buffer bit-for-bit.
+    decay: float = 0.9
 
     @property
     def resolved_policy(self) -> str:
@@ -350,7 +358,8 @@ def _make_ingraph_replay_step(cfg: MiRUConfig, trainer: TrainerSpec,
         k_prio = jax.random.fold_in(key, 0x5E2)
         k_ins = jax.random.fold_in(key, 0x5E3)
         active = replay_on & (rstate["size"] > 0) & (n_rep > 0)
-        xb, yb = ingraph_mix(rstate, k_mix, x, y, n_rep, active, bits)
+        xb, yb = ingraph_mix(rstate, k_mix, x, y, n_rep, active, bits,
+                             n_classes=cfg.n_y)
         params, opt_state, loss, applied, dev_state = raw_train(
             params, opt_state, key, xb, yb, dev_state)
         logits, _ = fwd(params, xb, k_prio, dev_state)
@@ -358,7 +367,8 @@ def _make_ingraph_replay_step(cfg: MiRUConfig, trainer: TrainerSpec,
         # Rehearsed tail rows are never re-offered (host-schedule rule).
         valid = jnp.where(active, jnp.arange(B) < B - n_rep, True)
         rstate = ingraph_insert(rstate, k_ins, xb, yb, prio, bits,
-                                valid=valid)
+                                valid=valid, decay=rspec.decay,
+                                n_classes=cfg.n_y)
         return params, opt_state, loss, applied, dev_state, rstate
 
     return train_step

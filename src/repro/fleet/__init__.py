@@ -1,0 +1,20 @@
+"""repro.fleet — sharded device-fleet simulation.
+
+Population-scale continual learning across heterogeneous simulated
+M2RU chips: per-device parameter draws (:mod:`.heterogeneity`), a
+``shard_map``-sharded runner wrapping the compiled per-seed program
+(:mod:`.run`), and fleet-aggregate telemetry distributions
+(:mod:`.aggregate`). See docs/fleet.md.
+"""
+from repro.fleet.aggregate import distribution, fleet_aggregate
+from repro.fleet.heterogeneity import (HET_PROFILES, FleetSpec, HetProfile,
+                                       device_seeds, draw_heterogeneity,
+                                       supports_heterogeneity)
+from repro.fleet.run import fleet_shard_count, run_fleet
+
+__all__ = [
+    "FleetSpec", "HetProfile", "HET_PROFILES",
+    "device_seeds", "draw_heterogeneity", "supports_heterogeneity",
+    "run_fleet", "fleet_shard_count",
+    "fleet_aggregate", "distribution",
+]

@@ -1,0 +1,157 @@
+"""Fleet-aggregate telemetry: population distributions, not means.
+
+A deployment decision about an edge fleet hinges on the *tail* chip,
+not the average one: the die that drew the heavy write-variability
+corner wears out first, the chip whose data stream happened to
+interleave tasks adversarially forgets most. This module folds one
+:func:`repro.fleet.run.run_fleet` result into per-device figures and
+summarizes each as a distribution — p50/p95/p99 plus a hot-tail index
+naming the worst chip.
+
+Per-device energy books are synthesized from the fleet telemetry
+snapshot: every counter the forward path meters (MACs, WBS phases, ADC
+conversions, …) is exactly fleet-symmetric — each chip ran the same
+program shape — so the static share is ``total / n_devices``; only the
+data-dependent write pulses differ per chip, and those come back from
+the run as per-device count maps. Each chip's synthesized counter dict
+then goes through the same :class:`~repro.telemetry.energy.MeteredEnergy`
+fold as a single-chip report, so the fleet numbers stay consistent with
+the paper-calibrated cost model by construction.
+
+Lifetime is projected per chip from its own write map
+(:func:`~repro.telemetry.lifetime.project_lifetime`), preserving the
+per-cell ζ write-rate percentiles within each chip as well as the
+across-fleet spread.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.analog.costmodel import HardwareConstants
+from repro.analog.endurance import EnduranceTracker
+from repro.telemetry import meters
+from repro.telemetry.energy import MeteredEnergy
+from repro.telemetry.lifetime import project_lifetime
+
+__all__ = ["fleet_aggregate", "distribution"]
+
+#: Percentiles every fleet distribution reports (the bench gate's
+#: schema contract).
+PERCENTILES = (50, 95, 99)
+
+
+def distribution(values) -> dict[str, float]:
+    """Summary statistics of one per-device figure across the fleet."""
+    arr = np.asarray(list(values), np.float64)
+    out = {
+        "mean": float(arr.mean()),
+        "std": float(arr.std()),
+        "min": float(arr.min()),
+        "max": float(arr.max()),
+    }
+    for p in PERCENTILES:
+        out[f"p{p}"] = float(np.percentile(arr, p))
+    return out
+
+
+def _per_device_counters(snapshot: dict[str, int], n_devices: int,
+                         updates_per_device: int,
+                         wcounts: Optional[dict[str, np.ndarray]],
+                         device: int) -> dict[str, float]:
+    """One chip's counter dict: the fleet-symmetric static share plus
+    the chip's own data-dependent write pulses."""
+    c: dict[str, float] = {
+        k: v / n_devices for k, v in snapshot.items()
+        if not k.startswith(meters.WRITE_PULSES)
+        and k != meters.WRITE_EVENTS}
+    c[meters.WRITE_EVENTS] = float(updates_per_device)
+    for name, arr in (wcounts or {}).items():
+        c[f"{meters.WRITE_PULSES}/{name}"] = float(
+            np.asarray(arr[device]).sum())
+    return c
+
+
+def fleet_aggregate(result: dict[str, Any], *, model=None,
+                    kind: str = "analog",
+                    hw: Optional[HardwareConstants] = None,
+                    update_period_s: float = 1e-3) -> dict[str, Any]:
+    """Fold a ``run_fleet`` result into population distributions.
+
+    Always reports the learning distributions (``average_accuracy``,
+    ``forgetting``). Energy (``power_mw``, ``gops_per_w``, …) needs the
+    run to have been metered (``result["telemetry"]``); lifetime needs
+    the per-device write maps (``result["wcounts"]``) — sections whose
+    inputs are missing are omitted rather than fabricated.
+
+    ``hot_tail`` names the worst chip per axis (indices into
+    ``result["per_device"]`` / ``result["device_seeds"]``).
+    """
+    D = int(result["n_devices"])
+    per_device = result["per_device"]
+    updates = int(result["updates_per_device"])
+    wcounts = result.get("wcounts")
+
+    acc = [p["metrics"]["average_accuracy"] for p in per_device]
+    forg = [p["metrics"]["forgetting"] for p in per_device]
+    out: dict[str, Any] = {
+        "n_devices": D,
+        "n_shards": int(result.get("n_shards", 1)),
+        "het_profile": (result["fleet"].het_profile
+                        if "fleet" in result else None),
+        "updates_per_device": updates,
+        "average_accuracy": distribution(acc),
+        "forgetting": distribution(forg),
+    }
+    hot: dict[str, int] = {
+        "min_accuracy_device": int(np.argmin(acc)),
+        "max_forgetting_device": int(np.argmax(forg)),
+    }
+
+    tele = result.get("telemetry")
+    if tele is not None and getattr(tele, "enabled", False):
+        snap = tele.snapshot()
+        me = MeteredEnergy(model)
+        reports = [me.report(
+            _per_device_counters(snap, D, updates, wcounts, d), kind=kind)
+            for d in range(D)]
+        out["power_mw"] = distribution(
+            [r.power_w * 1e3 for r in reports])
+        out["power_training_mw"] = distribution(
+            [r.power_training_w * 1e3 for r in reports])
+        out["gops_per_w"] = distribution([r.gops_per_w for r in reports])
+        out["pj_per_op"] = distribution([r.pj_per_op for r in reports])
+        out["energy_mj"] = distribution(
+            [r.energy_j * 1e3 for r in reports])
+        hot["max_power_device"] = int(np.argmax(
+            [r.power_training_w for r in reports]))
+
+    if wcounts:
+        projections = []
+        for d in range(D):
+            tracker = EnduranceTracker()
+            tracker.record_counts(
+                {n: np.asarray(arr[d]) for n, arr in wcounts.items()},
+                updates)
+            projections.append(project_lifetime(
+                tracker, hw, update_period_s).as_dict())
+        out["lifetime_years"] = distribution(
+            [p["years_mean"] for p in projections])
+        out["lifetime_hot_tail_years"] = distribution(
+            [p["years_hot_tail"] for p in projections])
+        out["writes_per_device_update"] = distribution(
+            [p["writes_per_device_update"] for p in projections])
+        # Within-chip ζ write-rate percentiles, worst chip per cell
+        # percentile: the fleet's wear picture at cell resolution.
+        rp = [p["rate_percentiles"] for p in projections
+              if p.get("rate_percentiles")]
+        if rp:
+            out["zeta_rate_percentiles"] = {
+                k: distribution([r[k] for r in rp]) for k in rp[0]}
+        hot["min_lifetime_device"] = int(np.argmin(
+            [p["years_mean"] for p in projections]))
+        out["per_device_lifetime"] = projections
+
+    out["hot_tail"] = hot
+    return out

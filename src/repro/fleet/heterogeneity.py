@@ -1,0 +1,191 @@
+"""Per-device parameter draws for fleet simulation.
+
+A fabricated population of M2RU chips is not M copies of one
+:class:`~repro.analog.crossbar.CrossbarSpec`: programming variability,
+read noise, write variability, and retention drift all vary chip to
+chip (die position, forming stochasticity, line resistance). This
+module materializes that population as data:
+
+  FleetSpec            how many devices, which heterogeneity profile,
+                       the fleet-level seed.
+  device_seeds         per-device data-stream seeds derived through the
+                       paper's Xorshift32 hardware RNG — each chip sees
+                       its own draw of the task stream, exactly as if
+                       its on-chip RNG seeded the sampler.
+  draw_heterogeneity   per-chip crossbar-knob values as stacked f32
+                       arrays of shape (n_devices,) — the ``"_het"``
+                       overlay the ``analog_state`` backend threads
+                       through its read/write/drift paths.
+
+The draws are *absolute* per-chip sigma values (lognormal around the
+profile mean), not multiplicative factors: they ride the device-state
+pytree as traced scalars, so one compiled program serves every chip and
+the fleet axis can be vmapped/sharded. The ``"none"`` profile attaches
+nothing — the state pytree (and therefore the trace) is identical to a
+plain :func:`repro.scenarios.sweep.run_compiled` run, which is what the
+zero-heterogeneity bitwise-parity gate pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import Xorshift32
+
+#: Domain separator folded into the fleet seed before the Xorshift32
+#: chain that emits per-device data-stream seeds (keeps the stream
+#: disjoint from any other consumer of the same fleet seed).
+_SEED_STREAM_SALT = 0xF1EE7D0C
+
+#: fold_in constant for the heterogeneity draw key.
+_HET_FOLD = 0x48E7
+
+#: fold_in constant for each device's re-programming key (applied when a
+#: het overlay re-programs the G⁺/G⁻ pairs under the chip's own
+#: prog_sigma).
+_PROG_FOLD = 0xF1EE7
+
+
+@dataclasses.dataclass(frozen=True)
+class HetProfile:
+    """Population statistics for one crossbar knob set.
+
+    Each field is ``(mean, rel_spread)``: per-chip values are drawn as
+    ``mean * exp(rel_spread * z - rel_spread**2 / 2)`` with ``z`` a unit
+    normal — lognormal, mean-preserving, strictly positive (a negative
+    sigma is not a physical device). ``None`` leaves the knob entirely
+    alone (no traced override; the static spec value applies).
+    """
+    name: str
+    prog_sigma: Optional[tuple[float, float]] = None
+    read_sigma: Optional[tuple[float, float]] = None
+    write_sigma: Optional[tuple[float, float]] = None
+    drift_rate: Optional[tuple[float, float]] = None
+
+    KNOBS = ("prog_sigma", "read_sigma", "write_sigma", "drift_rate")
+
+    def fields(self) -> dict[str, tuple[float, float]]:
+        return {k: getattr(self, k) for k in self.KNOBS
+                if getattr(self, k) is not None}
+
+
+#: The named profiles. "none" is the parity profile (no overlay at
+#: all). "mild" is a well-centered fab corner; "harsh" a pessimistic
+#: one with heavy chip-to-chip spread — both centered on the
+#: analog_state default spec's noise scales.
+HET_PROFILES: dict[str, HetProfile] = {
+    "none": HetProfile("none"),
+    "mild": HetProfile(
+        "mild",
+        prog_sigma=(0.10, 0.20),
+        read_sigma=(0.02, 0.25),
+        write_sigma=(0.10, 0.20),
+        drift_rate=(1e-4, 0.50),
+    ),
+    "harsh": HetProfile(
+        "harsh",
+        prog_sigma=(0.15, 0.50),
+        read_sigma=(0.05, 0.60),
+        write_sigma=(0.15, 0.50),
+        drift_rate=(1e-3, 1.00),
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A simulated device population.
+
+    n_devices     fleet size (the sharded axis length).
+    het_profile   key into :data:`HET_PROFILES` (or "none").
+    seed          fleet-level seed: drives both the Xorshift32 chain of
+                  per-device data-stream seeds and the heterogeneity
+                  draws. Two fleets with the same spec are bit-identical.
+    mesh_axis     name of the sharding mesh axis the runner builds.
+    """
+    n_devices: int = 8
+    het_profile: str = "none"
+    seed: int = 0
+    mesh_axis: str = "fleet"
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError("FleetSpec.n_devices must be >= 1, got "
+                             f"{self.n_devices}")
+        if self.het_profile not in HET_PROFILES:
+            raise ValueError(
+                f"unknown het_profile {self.het_profile!r}; expected one "
+                f"of {sorted(HET_PROFILES)}")
+
+    @property
+    def profile(self) -> HetProfile:
+        return HET_PROFILES[self.het_profile]
+
+
+def device_seeds(spec: FleetSpec) -> list[int]:
+    """Per-device data-stream seeds: successive words of one Xorshift32
+    chain keyed on the fleet seed. Xorshift32's state sequence is a
+    permutation cycle over the nonzero 32-bit words, so the seeds are
+    pairwise distinct for any fleet that fits in the period — each chip
+    trains on its own draw of the task stream."""
+    rng = Xorshift32((spec.seed ^ _SEED_STREAM_SALT) & 0xFFFFFFFF)
+    return [rng.next() for _ in range(spec.n_devices)]
+
+
+def draw_heterogeneity(spec: FleetSpec) -> Optional[dict[str, jax.Array]]:
+    """The fleet's per-chip crossbar knobs: a dict of f32 arrays of shape
+    ``(n_devices,)`` keyed by knob name, or ``None`` for the "none"
+    profile (no overlay → trace-identical to the homogeneous run).
+
+    Deterministic in ``spec`` alone; knob order is fixed (sorted) so the
+    draw never depends on profile declaration order."""
+    fields = spec.profile.fields()
+    if not fields:
+        return None
+    base = jax.random.fold_in(jax.random.PRNGKey(spec.seed), _HET_FOLD)
+    out = {}
+    for i, name in enumerate(sorted(fields)):
+        mean, spread = fields[name]
+        z = jax.random.normal(jax.random.fold_in(base, i),
+                              (spec.n_devices,))
+        draws = mean * jnp.exp(spread * z - 0.5 * spread * spread)
+        out[name] = draws.astype(jnp.float32)
+    return out
+
+
+def supports_heterogeneity(backend) -> bool:
+    """True when the backend's ``init_device_state`` accepts the ``het``
+    overlay (the conductance-domain ``analog_state`` substrate). Logical-
+    weight backends have no per-cell state to perturb."""
+    try:
+        sig = inspect.signature(backend.init_device_state)
+    except (TypeError, ValueError):  # pragma: no cover - exotic callables
+        return False
+    return "het" in sig.parameters
+
+
+def overlay_device_states(backend, stacked_params, seeds: list[int],
+                          het: dict[str, jax.Array]):
+    """Re-program every chip's G⁺/G⁻ pairs under its own heterogeneity
+    draw. ``stacked_params`` carries the device axis in front; each chip
+    programs with a key folded from its *own data-stream seed*, so the
+    per-cell initial-programming variation is as device-local as the
+    data stream. Returns the stacked device-state pytree (device axis in
+    front), with the ``"_het"`` overlay attached per chip."""
+    if not supports_heterogeneity(backend):
+        raise ValueError(
+            f"backend {getattr(backend, 'name', backend)!r} has no "
+            "conductance-domain device state; heterogeneity profiles "
+            "other than 'none' need the 'analog_state' backend")
+    prog_keys = jnp.stack([
+        jax.random.fold_in(jax.random.PRNGKey(s), _PROG_FOLD)
+        for s in seeds])
+
+    def one(params, key, het_slice):
+        return backend.init_device_state(params, key, het=het_slice)
+
+    return jax.vmap(one)(stacked_params, prog_keys, het)

@@ -1,0 +1,214 @@
+"""Sharded fleet runner: one compiled program, a population of chips.
+
+:func:`run_fleet` wraps the exact per-seed program that
+:func:`repro.scenarios.sweep.run_compiled` builds (`_build_seed_inputs`
+→ `_make_run_fn`), lifts it over a device axis with ``vmap``, and
+shards that axis across the host's accelerator mesh with ``shard_map``
+— the same mesh/PartitionSpec idiom as :mod:`repro.distributed`, but
+over a *fleet* axis instead of batch/expert axes. Each simulated chip
+gets:
+
+  * its own data-stream seed (``device_seeds`` — a Xorshift32 chain),
+  * its own crossbar parameter draw (``draw_heterogeneity`` → the
+    ``"_het"`` overlay the ``analog_state`` backend threads through
+    read/write/drift),
+  * its own per-cell G⁺/G⁻ initial programming (re-programmed under the
+    chip's own ``prog_sigma`` with a chip-local key).
+
+Telemetry stays jit-exact: the shard body is traced once under
+``telemetry.scaled(n_local)`` (the per-shard device count), and the one
+deferred ``io_callback`` fires once *per shard* at run time — k shards
+× n_local-scaled deltas = the whole fleet's counters, independent of
+mesh shape. Data-dependent write pulses come back as per-device count
+maps, so lifetime projections keep their per-chip resolution.
+
+With ``het_profile="none"`` nothing is attached to the device-state
+pytree: the trace is identical to ``run_compiled``'s seed-vmapped path
+and the results are bit-identical to it (the parity gate in
+tests/test_fleet.py and benchmarks/fleet_bench.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.backends import DeviceBackend, get_backend
+from repro.core.continual import (ReplaySpec, TrainerSpec,
+                                  _ingraph_replay_traffic, _make_raw_steps)
+from repro.data.synthetic import TaskData
+from repro.fleet.heterogeneity import (FleetSpec, device_seeds,
+                                       draw_heterogeneity,
+                                       overlay_device_states)
+from repro.replay import get_policy_class
+from repro.scenarios.sweep import (_aggregate_seeds, _build_seed_inputs,
+                                   _make_run_fn, _summarize_run)
+
+__all__ = ["run_fleet", "fleet_shard_count"]
+
+
+def fleet_shard_count(n_devices: int,
+                      max_shards: Optional[int] = None) -> int:
+    """Shards for a fleet of ``n_devices``: the largest divisor of the
+    fleet size that fits the available accelerators (optionally capped).
+    A divisor keeps every shard's local batch equal, so one trace serves
+    all shards and the mesh shape never changes the arithmetic."""
+    avail = len(jax.devices())
+    if max_shards is not None:
+        avail = min(avail, int(max_shards))
+    avail = max(1, min(avail, n_devices))
+    return max(d for d in range(1, avail + 1) if n_devices % d == 0)
+
+
+def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
+              fleet: FleetSpec,
+              replay: Optional[ReplaySpec] = None,
+              device: Union[str, DeviceBackend, None] = None,
+              *, baseline: bool = True,
+              max_shards: Optional[int] = None) -> dict[str, Any]:
+    """Train ``fleet.n_devices`` heterogeneous chips through the task
+    sequence inside one sharded compiled program.
+
+    Same per-chip contract as ``run_compiled(..., seeds=...)`` — each
+    device's cell in ``per_device`` has the R matrix, metrics and losses
+    ``run_compiled`` would report for that seed — plus the fleet frame:
+
+      per_device        one summary dict per chip (R_full, MA, metrics)
+      device_seeds      the Xorshift32-derived data-stream seeds
+      het               the per-chip crossbar draws (None for "none")
+      wcounts           per-device write-pulse count maps
+                        (name → (n_devices, *w.shape) int32), the input
+                        to per-chip lifetime projection
+      n_shards          mesh size actually used (largest divisor of the
+                        fleet size that fits the available devices)
+      metrics/metrics_std  fleet mean/std, as in the seed-vmapped path
+
+    Raises on ragged task streams (the fleet axis needs one trace) and
+    on heterogeneity profiles with a backend that has no conductance-
+    domain state.
+    """
+    trainer = spec
+    if not isinstance(trainer, TrainerSpec):
+        raise TypeError("run_fleet takes a TrainerSpec")
+    rspec = replay if replay is not None else ReplaySpec()
+    backend = get_backend(device if device is not None else "ideal")
+    tele = backend.telemetry
+    D = fleet.n_devices
+    seeds = device_seeds(fleet)
+
+    test_shapes = {(t.x_test.shape, t.y_test.shape) for t in tasks}
+    if len(test_shapes) != 1:
+        raise ValueError("run_fleet needs shape-uniform eval sets "
+                         "(one trace serves the whole fleet)")
+
+    _, _, opt = _make_raw_steps(cfg, trainer, backend)
+    inputs, scheds = [], []
+    for s in seeds:
+        tsp = dataclasses.replace(trainer, seed=int(s))
+        inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend, tasks,
+                                        opt)
+        if inp is None:
+            raise ValueError("run_fleet needs a shape-uniform task "
+                             "stream (ragged schedules cannot share the "
+                             "fleet trace)")
+        inputs.append(inp)
+        scheds.append(sched)
+
+    n_tasks = len(tasks)
+    S = inputs[0].xs.shape[1]
+    track_writes = backend.tracker is not None or tele.enabled
+    in_graph = get_policy_class(rspec.resolved_policy).in_graph
+    if tele.enabled:
+        # Host-side replay-traffic credit, once per chip's schedule —
+        # the same accounting as run_compiled's seed loop.
+        T, F = tasks[0].x_train.shape[1:]
+        for sched in scheds:
+            traffic = _ingraph_replay_traffic(
+                rspec, trainer.batch_size, sched.steps_per_task,
+                (T, F)) if in_graph else sched.replay_traffic
+            if traffic:
+                tele.record(traffic)
+    run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
+                       baseline, ingraph_rspec=rspec if in_graph else None)
+
+    eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
+    eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[i.as_arrays() for i in inputs])
+
+    het = draw_heterogeneity(fleet)
+    # Host copy up front: the draws alias the donated device-state
+    # pytree ("_het" leaves), so the device buffers die with the run.
+    het_np = ({k: np.asarray(v) for k, v in het.items()}
+              if het is not None else None)
+    if het is not None:
+        # Replace the homogeneous device states with per-chip
+        # programming under each chip's own parameter draw.
+        dev_state = overlay_device_states(backend, stacked[0], seeds, het)
+        stacked = stacked[:2] + (dev_state,) + stacked[3:]
+
+    n_shards = fleet_shard_count(D, max_shards)
+    n_local = D // n_shards
+    mesh = Mesh(np.array(jax.devices()[:n_shards]), (fleet.mesh_axis,))
+    ax = P(fleet.mesh_axis)
+    vrun = jax.vmap(run, in_axes=(0,) * 8 + (None, None))
+    # Donate the mutated state buffers (params; the conductance pairs) —
+    # the shard-local copies alias in place. The deferred telemetry
+    # callback fires once per shard over the n_local-scaled deltas, so
+    # the counter totals are mesh-shape invariant.
+    fn = jax.jit(shard_map(vrun, mesh=mesh,
+                           in_specs=(ax,) * 8 + (P(), P()),
+                           out_specs=ax),
+                 donate_argnums=(0, 2))
+    t0 = time.perf_counter()
+    with tele.scaled(n_local):
+        res = fn(*stacked, eval_x, eval_y)
+    res = jax.tree.map(np.asarray, res)
+    wall_s = time.perf_counter() - t0
+
+    # Host-side accounting of the scan-summed write pulses — fleet
+    # totals into the meters/tracker, per-device maps kept for the
+    # population lifetime distributions.
+    wcounts = res.pop("wcounts")
+    per_device_wcounts = None
+    if track_writes and wcounts:
+        per_device_wcounts = {k: np.asarray(v) for k, v in wcounts.items()}
+        counts = {k: v.sum(axis=0) for k, v in per_device_wcounts.items()}
+        total_steps = n_tasks * S * D
+        tele.meter_write_counts(counts, total_steps)
+        if backend.tracker is not None:
+            backend.tracker.record_counts(counts, total_steps)
+
+    per_device = [_summarize_run(res["R_full"][i], res["baseline_row"][i],
+                                 res["losses"][i], baseline)
+                  for i in range(D)]
+    out: dict[str, Any] = dict(per_device[0])
+    out.update(_aggregate_seeds(per_device, seeds))
+    out["per_device"] = out.pop("per_seed")
+    out["device_seeds"] = out.pop("seeds")
+    out.update({
+        "compiled": True,
+        "fleet": fleet,
+        "n_devices": D,
+        "n_shards": n_shards,
+        "n_local": n_local,
+        "wall_s": wall_s,
+        "steps_per_task": S,
+        "updates_per_device": n_tasks * S,
+        "het": het_np,
+        "wcounts": per_device_wcounts,
+        "params": jax.tree.map(lambda v: v[0], res["params"]),
+        "params_fleet": res["params"],
+    })
+    if backend.tracker is not None:
+        out["endurance"] = backend.tracker
+    if tele.enabled:
+        out["telemetry"] = tele
+    return out

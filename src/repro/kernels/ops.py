@@ -43,11 +43,24 @@ def quantize_inputs(x: jax.Array, n_bits: int
     return quantize_signed(x, n_bits)
 
 
+def pad_wbs_weights(w: jax.Array, block: int = 128) -> jax.Array:
+    """Pre-pad a weight tile to the block multiples ``wbs_matmul`` would
+    derive for it — the once-per-forward half of the pad work, hoistable
+    out of a per-timestep scan (``DeviceBackend.prepare_weights``). The
+    (K, N) padding depends only on the tile shape and block size, never
+    on the drive, so one padded copy serves every call."""
+    K, N = w.shape
+    bk = min(block, round_up(K, 128))
+    bn = min(block, round_up(N, 128))
+    return _pad2(w, round_up(K, bk), round_up(N, bn))
+
+
 def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
                gains: jax.Array, adc_bits: Optional[int] = None,
                adc_range: float = 4.0, block: int = 128,
                read_sigma: float = 0.0,
-               read_key: Optional[jax.Array] = None) -> jax.Array:
+               read_key: Optional[jax.Array] = None,
+               w_prepared: Optional[jax.Array] = None) -> jax.Array:
     """Padded/dispatched WBS crossbar matmul. See wbs_matmul_pallas.
 
     ``read_sigma``/``read_key`` model per-access conductance read noise.
@@ -55,6 +68,10 @@ def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
     draw per weight-tile access); in interpret mode (CPU) the TPU PRNG
     has no lowering, so the jnp reference model — one draw per weight
     element per call — is applied to ``w`` up front.
+
+    ``w_prepared`` is a :func:`pad_wbs_weights` copy of ``w`` (same
+    block size); it skips the per-call pad except where the per-call
+    noise model rewrote ``w``.
     """
     M, K = sign.shape
     _, N = w.shape
@@ -66,6 +83,7 @@ def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
             w = w * (1.0 + read_sigma
                      * jax.random.normal(read_key, w.shape))
             read_sigma = 0.0
+            w_prepared = None    # per-call perturbation: must re-pad
         else:
             seed = jax.random.randint(read_key, (1,), 0, 2 ** 31 - 1,
                                       dtype=jnp.int32)
@@ -75,7 +93,10 @@ def wbs_matmul(sign: jax.Array, code: jax.Array, w: jax.Array,
     Mp, Kp, Np = round_up(M, bm), round_up(K, bk), round_up(N, bn)
     sign_p = _pad2(sign, Mp, Kp)     # sign=0 ⇒ padded inputs contribute 0
     code_p = _pad2(code, Mp, Kp)
-    w_p = _pad2(w, Kp, Np)
+    if w_prepared is not None and w_prepared.shape == (Kp, Np):
+        w_p = w_prepared
+    else:
+        w_p = _pad2(w, Kp, Np)
     y = wbs_matmul_pallas(sign_p, code_p, w_p, gains, adc_bits=adc_bits,
                           adc_range=adc_range, bm=bm, bk=bk, bn=bn,
                           read_sigma=read_sigma, seed=seed,
@@ -87,7 +108,8 @@ def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
               adc_bits: Optional[int] = 8, adc_range: float = 4.0,
               gains: Optional[jax.Array] = None,
               read_sigma: float = 0.0,
-              read_key: Optional[jax.Array] = None) -> jax.Array:
+              read_key: Optional[jax.Array] = None,
+              w_prepared: Optional[jax.Array] = None) -> jax.Array:
     """QuantMode.WBS linear layer: float activations → sign-magnitude
     codes → bit-plane crossbar matmul. x (..., K) @ w (K, N)."""
     lead = x.shape[:-1]
@@ -96,7 +118,8 @@ def wbs_dense(x: jax.Array, w: jax.Array, n_bits: int = 8,
         gains = 2.0 ** (-jnp.arange(1, n_bits + 1, dtype=jnp.float32))
     sign, code = quantize_inputs(x2, n_bits)
     y = wbs_matmul(sign, code, w, gains, adc_bits, adc_range,
-                   read_sigma=read_sigma, read_key=read_key)
+                   read_sigma=read_sigma, read_key=read_key,
+                   w_prepared=w_prepared)
     return y.reshape(*lead, w.shape[-1])
 
 

@@ -56,7 +56,9 @@ def ingraph_init(capacity: int, feature_shape: tuple[int, ...],
 
 def ingraph_insert(state: ReplayState, key: jax.Array, xs: jax.Array,
                    ys: jax.Array, prios: jax.Array, n_bits: int,
-                   valid: Optional[jax.Array] = None) -> ReplayState:
+                   valid: Optional[jax.Array] = None,
+                   decay: float = 1.0,
+                   n_classes: Optional[int] = None) -> ReplayState:
     """Offer a batch of (features, label, priority) rows sequentially.
 
     While the buffer is filling, every valid row is appended. Once full,
@@ -66,6 +68,29 @@ def ingraph_insert(state: ReplayState, key: jax.Array, xs: jax.Array,
     (rehearsed rows spliced into the batch tail are never re-offered,
     mirroring the host schedule's fresh-rows-only rule).
 
+    ``decay`` < 1 applies a *staleness decay* to every stored priority
+    once per offer round, before the new rows compete: CE scores are
+    nonstationary (the model keeps training after a row is scored), so
+    an undecayed stored score is not comparable to a fresh one.
+    ``decay=1`` reproduces the legacy no-decay buffer bit-for-bit.
+
+    ``n_classes`` switches eviction to *class-aware* loss prioritization
+    — the fix for the loss_aware task-boundary collapse. With global
+    min-priority eviction, every task boundary floods the buffer: the
+    new task's fresh rows are scored under a model that has never seen
+    their classes, so their CE beats anything stored (decayed or not)
+    and within a few batches the buffer holds only current-task rows —
+    rehearsal then protects nothing and class-incremental accuracy
+    collapses to last-task-only. Class-aware eviction keeps the
+    *coverage* invariant instead: an incoming row whose class is
+    under-represented always enters by evicting the minimum-priority
+    slot of the most-over-represented class; a row of an already-largest
+    class must beat the minimum stored priority of its own class. Slot
+    occupancy stays balanced across observed classes (the property that
+    makes the host ``class_balanced`` policy work), while retention
+    *within* a class — and the rehearsal draw itself — remain
+    loss-prioritized. ``n_classes=None`` is the legacy global rule.
+
     Rows are stochastically quantized with per-row keys folded from
     ``key`` — one vmapped dispatch, like the host buffer's add_batch.
     """
@@ -73,15 +98,33 @@ def ingraph_insert(state: ReplayState, key: jax.Array, xs: jax.Array,
     capacity = state["feat"].shape[0]
     if valid is None:
         valid = jnp.ones((B,), bool)
+    if decay != 1.0:
+        state = dict(state)
+        state["prio"] = state["prio"] * jnp.float32(decay)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
     q = jax.vmap(lambda x, k: stochastic_quantize(x, k, n_bits))(xs, keys)
 
     def body(i, st):
         size = st["size"]
         full = size >= capacity
-        evict = jnp.argmin(st["prio"]).astype(jnp.int32)
+        if n_classes is None:
+            evict = jnp.argmin(st["prio"]).astype(jnp.int32)
+            beat = prios[i] > st["prio"][evict]
+        else:
+            occ = jnp.arange(capacity) < size
+            counts = jnp.zeros((n_classes,), jnp.int32) \
+                .at[st["label"]].add(occ.astype(jnp.int32),
+                                     mode="drop")
+            cls = ys[i].astype(jnp.int32)
+            big = jnp.argmax(counts).astype(jnp.int32)
+            under = counts[cls] < counts[big]
+            victim_cls = jnp.where(under, big, cls)
+            in_cls = (st["label"] == victim_cls) & occ
+            evict = jnp.argmin(
+                jnp.where(in_cls, st["prio"], jnp.inf)).astype(jnp.int32)
+            beat = under | (prios[i] > st["prio"][evict])
         slot = jnp.where(full, evict, size)
-        accept = valid[i] & (~full | (prios[i] > st["prio"][slot]))
+        accept = valid[i] & (~full | beat)
         return {
             "feat": st["feat"].at[slot].set(
                 jnp.where(accept, q[i], st["feat"][slot])),
@@ -97,15 +140,29 @@ def ingraph_insert(state: ReplayState, key: jax.Array, xs: jax.Array,
 
 
 def ingraph_sample(state: ReplayState, key: jax.Array, batch: int,
-                   n_bits: int) -> tuple[jax.Array, jax.Array]:
+                   n_bits: int, n_classes: Optional[int] = None
+                   ) -> tuple[jax.Array, jax.Array]:
     """Priority-proportional rehearsal draw (with replacement) over the
     occupied slots: P(slot) ∝ priority + ε. Dequantizes on the paper's
     1/2^n scale. On an empty buffer the draw degenerates to slot 0
-    (zeros) — callers gate mixing on ``size > 0``."""
+    (zeros) — callers gate mixing on ``size > 0``.
+
+    With ``n_classes`` the priorities are *normalized per class* before
+    the draw: each observed class gets equal total probability, split
+    within the class ∝ priority. Raw global weighting concentrates the
+    rehearsal draw on whichever rows were scored most recently (their CE
+    is least decayed and the model least trained on them — i.e. the
+    current task), starving the very classes rehearsal exists to
+    protect; class normalization keeps the exposure balanced while
+    retention and within-class emphasis stay loss-aware."""
     capacity = state["feat"].shape[0]
     occupied = jnp.arange(capacity) < state["size"]
-    logits = jnp.where(occupied, jnp.log(state["prio"] + _PRIO_EPS),
-                       -jnp.inf)
+    pr = jnp.where(occupied, state["prio"] + _PRIO_EPS, 0.0)
+    if n_classes is not None:
+        cls_sum = jnp.zeros((n_classes,), pr.dtype) \
+            .at[state["label"]].add(pr, mode="drop")
+        pr = pr / jnp.maximum(cls_sum[state["label"]], _PRIO_EPS)
+    logits = jnp.where(occupied, jnp.log(pr), -jnp.inf)
     safe = jnp.where(jnp.arange(capacity) == 0, 0.0, -jnp.inf)
     logits = jnp.where(state["size"] > 0, logits, safe)
     idx = jax.random.categorical(key, logits, shape=(batch,))
@@ -113,17 +170,19 @@ def ingraph_sample(state: ReplayState, key: jax.Array, batch: int,
 
 
 def ingraph_mix(state: ReplayState, key: jax.Array, x: jax.Array,
-                y: jax.Array, n_rep: int, active: jax.Array, n_bits: int
+                y: jax.Array, n_rep: int, active: jax.Array, n_bits: int,
+                n_classes: Optional[int] = None
                 ) -> tuple[jax.Array, jax.Array]:
     """Replace the tail ``n_rep`` rows of a fresh batch with a rehearsal
     draw when ``active`` (a traced bool: replay enabled, past task 0,
     buffer non-empty) — the same tail-splice layout the host schedule
-    materializes."""
+    materializes. ``n_classes`` enables the class-normalized draw (see
+    :func:`ingraph_sample`)."""
     if n_rep <= 0:
         return x, y
     B = x.shape[0]
     active = active & (state["size"] > 0)
-    xr, yr = ingraph_sample(state, key, n_rep, n_bits)
+    xr, yr = ingraph_sample(state, key, n_rep, n_bits, n_classes)
     mixed_x = jnp.concatenate([x[:B - n_rep], xr.astype(x.dtype)])
     mixed_y = jnp.concatenate([y[:B - n_rep], yr.astype(y.dtype)])
     return (jnp.where(active, mixed_x, x), jnp.where(active, mixed_y, y))

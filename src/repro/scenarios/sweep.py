@@ -83,6 +83,14 @@ class _SeedInputs:
     eval_keys: np.ndarray   # (n_tasks, 2)
     rstate: Any = None      # in-graph replay buffer (loss_aware), or None
 
+    def as_arrays(self) -> tuple:
+        """The positional argument tuple ``_make_run_fn``'s run consumes
+        (minus the shared eval buffers) — one definition used by the
+        seed-vmapped path here and the fleet runner's device axis."""
+        return (self.params, self.opt_state, self.dev_state, self.rstate,
+                jnp.asarray(self.xs), jnp.asarray(self.ys),
+                jnp.asarray(self.step_keys), jnp.asarray(self.eval_keys))
+
 
 def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
                        backend: DeviceBackend, tasks: list[TaskData],
@@ -186,6 +194,27 @@ def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
                 "wcounts": wcounts, "baseline_row": base_row}
 
     return run
+
+
+def _summarize_run(R_full, base_row, losses, baseline: bool) -> dict:
+    """One run's summary dict from its raw outputs — shared by the
+    seed-vmapped path here and the fleet runner's device axis.
+
+    float64 like run_continual's R (float32 accuracies are exactly
+    representable, so the widening keeps bit-equality with the loop)."""
+    R_full = np.asarray(R_full, np.float64)
+    n_tasks = R_full.shape[0]
+    R = np.tril(R_full)
+    return {
+        "R": R, "R_full": R_full,
+        "MA": float(R_full[-1].mean()),
+        "acc_after_each": [float(R[t, :t + 1].mean())
+                           for t in range(n_tasks)],
+        "losses": [float(v) for v in np.asarray(losses).reshape(-1)],
+        "metrics": continual_metrics(
+            R_full, base_row if baseline else None),
+        "baseline_row": base_row,
+    }
 
 
 def _aggregate_seeds(per_seed: list[dict], seeds: Sequence[int]) -> dict:
@@ -307,11 +336,6 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
     eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
 
-    def arrays(i: _SeedInputs):
-        return (i.params, i.opt_state, i.dev_state, i.rstate,
-                jnp.asarray(i.xs), jnp.asarray(i.ys),
-                jnp.asarray(i.step_keys), jnp.asarray(i.eval_keys))
-
     # Donate the mutated state buffers (params; the conductance pairs).
     # opt_state is excluded: DFA's is the pass-through Ψ and XLA declines
     # to alias the Adam moments on CPU — donating either only warns.
@@ -319,11 +343,11 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     donate = (0, 2) if not many else ()
     if many:
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[arrays(i) for i in inputs])
+                               *[i.as_arrays() for i in inputs])
         fn = jax.jit(jax.vmap(run, in_axes=(0,) * 8 + (None, None)))
         scope = tele.scaled(len(seed_list))
     else:
-        stacked = arrays(inputs[0])
+        stacked = inputs[0].as_arrays()
         fn = jax.jit(run, donate_argnums=donate)
         scope = contextlib.nullcontext()
 
@@ -344,32 +368,17 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         if backend.tracker is not None:
             backend.tracker.record_counts(counts, total_steps)
 
-    def summarize(R_full, base_row, losses):
-        # float64 like run_continual's R (float32 accuracies are exactly
-        # representable, so the widening keeps bit-equality with the loop).
-        R_full = np.asarray(R_full, np.float64)
-        R = np.tril(R_full)
-        return {
-            "R": R, "R_full": R_full,
-            "MA": float(R_full[-1].mean()),
-            "acc_after_each": [float(R[t, :t + 1].mean())
-                               for t in range(n_tasks)],
-            "losses": [float(v) for v in losses.reshape(-1)],
-            "metrics": continual_metrics(
-                R_full, base_row if baseline else None),
-            "baseline_row": base_row,
-        }
-
     out: dict[str, Any]
     if many:
-        per_seed = [summarize(res["R_full"][i], res["baseline_row"][i],
-                              res["losses"][i])
+        per_seed = [_summarize_run(res["R_full"][i], res["baseline_row"][i],
+                                   res["losses"][i], baseline)
                     for i in range(len(seed_list))]
         out = dict(per_seed[0])
         out.update(_aggregate_seeds(per_seed, seed_list))
         out["params"] = jax.tree.map(lambda v: v[0], res["params"])
     else:
-        out = summarize(res["R_full"], res["baseline_row"], res["losses"])
+        out = _summarize_run(res["R_full"], res["baseline_row"],
+                             res["losses"], baseline)
         out["params"] = res["params"]
         if res["dev_state"]:
             out["device_state"] = res["dev_state"]
@@ -412,6 +421,7 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
     Returns ``{"cells": {f"{scenario}/{backend}": cell, ...}, ...}``.
     """
     from repro.analog.costmodel import M2RUCostModel
+    from repro.analog.endurance import EnduranceTracker
     from repro.telemetry import telemetry_report
 
     trainer = trainer if trainer is not None else TrainerSpec()
@@ -431,6 +441,12 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
             metered = meter and backend.spec.input_bits is not None
             if metered:
                 backend.telemetry.enable()
+                # Endurance tracking rides along: the compiled run's
+                # write-count maps land in the tracker host-side, so the
+                # cell gets lifetime columns (incl. per-cell ζ write-rate
+                # percentiles) at no extra trace cost.
+                if backend.tracker is None:
+                    backend.tracker = EnduranceTracker()
             res = run_compiled(cfg, tsp, tasks, replay=rsp,
                                device=backend, seeds=seeds,
                                uniform=sc.uniform)
@@ -449,10 +465,17 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
                 kind = "cmos" if be_name == "cmos" else "analog"
                 rep = telemetry_report(
                     backend.telemetry, model=M2RUCostModel(n_h=n_h),
-                    kind=kind)
+                    kind=kind, tracker=backend.tracker)
                 cell["power_mw"] = rep["metered"]["power_mw"]
                 cell["gops_per_w"] = rep["metered"]["gops_per_w"]
                 cell["pj_per_op"] = rep["metered"]["pj_per_op"]
+                if "lifetime" in rep:
+                    lt = rep["lifetime"]
+                    cell["lifetime_years"] = lt["years_mean"]
+                    cell["lifetime_hot_tail_years"] = lt["years_hot_tail"]
+                    # Per-cell ζ write-rate percentiles, not just the
+                    # mean — the wear spread across the write map.
+                    cell["zeta_write_rate"] = lt["rate_percentiles"]
             cells[f"{sc_name}/{be_name}"] = cell
     return {"cells": cells,
             "scenarios": list(scenarios), "backends": list(backends),

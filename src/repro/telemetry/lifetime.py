@@ -34,6 +34,10 @@ class LifetimeProjection:
     years_hot_tail: float              # 99th-percentile device (Fig. 5b tail)
     endurance_cycles: float
     update_period_s: float
+    #: Per-cell ζ write-rate percentiles (writes per device-update at
+    #: p50/p90/p99 across the write map) — the within-chip wear spread
+    #: behind the mean/hot-tail pair above.
+    rate_percentiles: Optional[dict[str, float]] = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -53,6 +57,8 @@ def project_lifetime(tracker: EnduranceTracker,
     rate_mean = float(counts.mean()) / updates if counts.size else 0.0
     rate_hot = (float(np.percentile(counts, 99)) / updates
                 if counts.size else 0.0)
+    rate_pcts = ({f"p{p}": float(np.percentile(counts, p)) / updates
+                  for p in (50, 90, 99)} if counts.size else None)
     pulses = rate_mean * hw.ziksa_pulse_rate
     return LifetimeProjection(
         updates_observed=updates,
@@ -64,4 +70,5 @@ def project_lifetime(tracker: EnduranceTracker,
             rate_hot * hw.ziksa_pulse_rate, hw.endurance_cycles,
             update_period_s),
         endurance_cycles=hw.endurance_cycles,
-        update_period_s=update_period_s)
+        update_period_s=update_period_s,
+        rate_percentiles=rate_pcts)

@@ -22,9 +22,12 @@ def telemetry_report(telemetry: Telemetry,
                      model: Optional[M2RUCostModel] = None,
                      kind: str = "analog",
                      tracker: Optional[EnduranceTracker] = None,
-                     update_period_s: float = 1e-3) -> dict:
+                     update_period_s: float = 1e-3,
+                     fleet: Optional[dict] = None) -> dict:
     """Metered Table I numbers (+ lifetime when a tracker is given), side
-    by side with the closed-form cost model for the same geometry."""
+    by side with the closed-form cost model for the same geometry.
+    ``fleet`` (a :func:`repro.fleet.fleet_aggregate` dict) attaches the
+    population-distribution section ``format_report`` renders."""
     model = model if model is not None else M2RUCostModel()
     energy = MeteredEnergy(model)
     counters = telemetry.snapshot()
@@ -64,6 +67,8 @@ def telemetry_report(telemetry: Telemetry,
     if tracker is not None and tracker.updates_applied:
         out["lifetime"] = project_lifetime(
             tracker, model.hw, update_period_s).as_dict()
+    if fleet is not None:
+        out["fleet"] = fleet
     return out
 
 
@@ -118,4 +123,50 @@ def format_report(rep: dict) -> str:
             f"{lt['update_period_s']*1e3:.0f} ms updates "
             f"(hot-tail {lt['years_hot_tail']:.1f}; "
             f"{lt['writes_per_device_update']:.2f} writes/device/update)")
+        if lt.get("rate_percentiles"):
+            rp = lt["rate_percentiles"]
+            lines.append(
+                "  ζ write-rate       "
+                + "  ".join(f"{k} {v:.3f}" for k, v in rp.items())
+                + "  writes/device/update")
+    if "fleet" in rep:
+        lines.append(format_fleet(rep["fleet"]))
+    return "\n".join(lines)
+
+
+#: Fleet distributions rendered by :func:`format_fleet`, in display
+#: order: (result key, label, unit).
+_FLEET_ROWS = (
+    ("average_accuracy", "accuracy", ""),
+    ("forgetting", "forgetting", ""),
+    ("power_mw", "power", " mW"),
+    ("gops_per_w", "efficiency", " GOPS/W"),
+    ("pj_per_op", "energy/op", " pJ"),
+    ("lifetime_years", "lifetime", " years"),
+    ("lifetime_hot_tail_years", "lifetime hot-tail", " years"),
+    ("writes_per_device_update", "ζ write rate", ""),
+)
+
+
+def format_fleet(agg: dict) -> str:
+    """Printable fleet-distribution block (from
+    :func:`repro.fleet.fleet_aggregate`): one row per figure with the
+    population p50/p95/p99 — the deployment question is the tail chip,
+    not the mean."""
+    prof = agg.get("het_profile") or "none"
+    lines = [f"fleet: {agg['n_devices']} devices over "
+             f"{agg.get('n_shards', 1)} shard(s), heterogeneity "
+             f"'{prof}'"]
+    for key, label, unit in _FLEET_ROWS:
+        if key not in agg:
+            continue
+        d = agg[key]
+        lines.append(
+            f"  {label:<18} p50 {d['p50']:10.4g}  p95 {d['p95']:10.4g}  "
+            f"p99 {d['p99']:10.4g}{unit}")
+    hot = agg.get("hot_tail") or {}
+    if hot:
+        lines.append("  worst chips        "
+                     + "  ".join(f"{k.replace('_device', '')}: #{v}"
+                                 for k, v in sorted(hot.items())))
     return "\n".join(lines)

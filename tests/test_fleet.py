@@ -1,0 +1,265 @@
+"""repro.fleet — sharded device-fleet simulation.
+
+Pins the subsystem's three contracts:
+
+  * zero-heterogeneity parity: a fleet run with ``het_profile="none"``
+    is bit-identical to ``run_compiled``'s seed-vmapped path on the same
+    Xorshift32-derived seeds (the fleet axis adds no arithmetic);
+  * mesh-shape invariance: the same fleet over 1/2/8 emulated host
+    devices returns identical results and telemetry (subprocess — the
+    device count must be set before jax imports);
+  * per-device independence: Xorshift32 seed streams are pairwise
+    distinct and fleet-seed-keyed; heterogeneity draws are deterministic
+    and strictly positive.
+
+Plus the prepared-weights cache (backends hoist the per-forward weight
+pad/scale out of the per-step loop) staying bitwise-neutral.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core.continual import ReplaySpec, TrainerSpec
+from repro.fleet import (HET_PROFILES, FleetSpec, device_seeds,
+                         distribution, draw_heterogeneity, fleet_aggregate,
+                         fleet_shard_count, run_fleet,
+                         supports_heterogeneity)
+from repro.scenarios import build_scenario, run_compiled
+from repro.scenarios.sweep import scenario_miru_config
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=24)
+    return cfg, TrainerSpec(algo="dfa", epochs_per_task=1), tasks
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec / seed streams / heterogeneity draws
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="n_devices"):
+        FleetSpec(n_devices=0)
+    with pytest.raises(ValueError, match="het_profile"):
+        FleetSpec(het_profile="extreme")
+    assert FleetSpec(het_profile="mild").profile is HET_PROFILES["mild"]
+
+
+def test_device_seeds_distinct_and_keyed():
+    """The Xorshift32 chain gives pairwise-distinct per-device streams,
+    reproducibly keyed on the fleet seed."""
+    a = device_seeds(FleetSpec(n_devices=64, seed=0))
+    assert len(set(a)) == 64
+    assert a == device_seeds(FleetSpec(n_devices=64, seed=0))
+    b = device_seeds(FleetSpec(n_devices=64, seed=1))
+    assert set(a).isdisjoint(set(b))
+    # Prefix property: a bigger fleet extends, not reshuffles.
+    assert device_seeds(FleetSpec(n_devices=8, seed=0)) == a[:8]
+
+
+def test_heterogeneity_draws():
+    assert draw_heterogeneity(FleetSpec(het_profile="none")) is None
+    spec = FleetSpec(n_devices=32, het_profile="mild", seed=5)
+    het = draw_heterogeneity(spec)
+    assert set(het) == {"prog_sigma", "read_sigma", "write_sigma",
+                        "drift_rate"}
+    for name, v in het.items():
+        assert v.shape == (32,) and v.dtype == jnp.float32
+        assert np.all(np.asarray(v) > 0), name          # physical sigmas
+        assert np.std(np.asarray(v)) > 0, name          # actual spread
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(draw_heterogeneity(spec)[name]))
+    harsh = draw_heterogeneity(
+        FleetSpec(n_devices=32, het_profile="harsh", seed=5))
+    assert np.asarray(harsh["read_sigma"]).mean() \
+        > np.asarray(het["read_sigma"]).mean()
+
+
+def test_supports_heterogeneity():
+    assert supports_heterogeneity(get_backend("analog_state"))
+    assert not supports_heterogeneity(get_backend("ideal"))
+
+
+def test_fleet_shard_count():
+    # 1 host device in-process: always 1 shard.
+    assert fleet_shard_count(8) == max(
+        d for d in range(1, min(len(jax.devices()), 8) + 1) if 8 % d == 0)
+    assert fleet_shard_count(8, max_shards=1) == 1
+    assert fleet_shard_count(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# Zero-heterogeneity parity with run_compiled
+# ---------------------------------------------------------------------------
+
+def test_zero_het_parity_with_run_compiled(small_setup):
+    """het_profile="none" attaches nothing to the device-state pytree,
+    so the fleet program is run_compiled's seed-vmapped program — the
+    results must match bit for bit, per device."""
+    cfg, trainer, tasks = small_setup
+    fleet = FleetSpec(n_devices=3, het_profile="none", seed=11)
+    seeds = device_seeds(fleet)
+    fl = run_fleet(cfg, trainer, tasks, fleet,
+                   replay=ReplaySpec(capacity=32), device="ideal")
+    rc = run_compiled(cfg, trainer, tasks, replay=ReplaySpec(capacity=32),
+                      device="ideal", seeds=seeds)
+    assert fl["device_seeds"] == seeds
+    for i in range(3):
+        np.testing.assert_array_equal(
+            fl["per_device"][i]["R_full"], rc["per_seed"][i]["R_full"])
+        assert fl["per_device"][i]["losses"] \
+            == rc["per_seed"][i]["losses"]
+    # Device 0's final params are the seed-0 run's final params.
+    for name, v in rc["params"].items():
+        np.testing.assert_array_equal(
+            np.asarray(fl["params"][name]), np.asarray(v), name)
+    assert fl["metrics"] == rc["metrics"]
+
+
+def test_heterogeneous_fleet_differs_across_devices(small_setup):
+    """A mild-profile fleet on the conductance-domain backend: runs end
+    to end, per-chip results actually differ (the draws bite), and the
+    het overlay is reported."""
+    cfg, trainer, tasks = small_setup
+    fleet = FleetSpec(n_devices=2, het_profile="mild", seed=4)
+    fl = run_fleet(cfg, trainer, tasks, fleet,
+                   replay=ReplaySpec(capacity=32), device="analog_state")
+    assert set(fl["het"]) == {"prog_sigma", "read_sigma", "write_sigma",
+                              "drift_rate"}
+    r0, r1 = (fl["per_device"][i]["R_full"] for i in range(2))
+    assert not np.array_equal(r0, r1)
+
+
+def test_het_profile_requires_stateful_backend(small_setup):
+    cfg, trainer, tasks = small_setup
+    with pytest.raises(ValueError, match="analog_state"):
+        run_fleet(cfg, trainer, tasks,
+                  FleetSpec(n_devices=2, het_profile="mild"),
+                  device="ideal")
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+def test_distribution_schema():
+    d = distribution([1.0, 2.0, 3.0, 4.0])
+    assert set(d) == {"mean", "std", "min", "max", "p50", "p95", "p99"}
+    assert d["min"] == 1.0 and d["max"] == 4.0
+    assert d["p50"] == pytest.approx(2.5)
+
+
+def test_fleet_aggregate_sections(small_setup):
+    """Aggregate over a metered fleet run: energy, lifetime and learning
+    sections all present with the full percentile schema, and the
+    per-device energy books sum back to the fleet totals."""
+    cfg, trainer, tasks = small_setup
+    backend = get_backend("wbs")
+    backend.telemetry.enable()
+    try:
+        fleet = FleetSpec(n_devices=2, het_profile="none", seed=2)
+        fl = run_fleet(cfg, trainer, tasks, fleet,
+                       replay=ReplaySpec(capacity=32), device=backend)
+        agg = fleet_aggregate(fl)
+    finally:
+        backend.telemetry.disable()
+    for key in ("average_accuracy", "forgetting", "power_mw",
+                "gops_per_w", "lifetime_years", "lifetime_hot_tail_years",
+                "writes_per_device_update"):
+        assert set(agg[key]) >= {"p50", "p95", "p99"}, key
+    assert agg["n_devices"] == 2
+    assert {"min_accuracy_device", "max_forgetting_device",
+            "min_lifetime_device"} <= set(agg["hot_tail"])
+    # ζ within-chip percentiles rode through the lifetime projection.
+    assert set(agg["zeta_rate_percentiles"]) == {"p50", "p90", "p99"}
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shape invariance (emulated host devices; subprocess because the
+# device count must be fixed before jax import — same idiom as
+# tests/test_moe_ep.py)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.core.continual import ReplaySpec, TrainerSpec
+    from repro.fleet import FleetSpec, run_fleet
+    from repro.scenarios import build_scenario
+    from repro.scenarios.sweep import scenario_miru_config
+
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=24)
+    trainer = TrainerSpec(algo="dfa", epochs_per_task=1)
+    fleet = FleetSpec(n_devices=8, het_profile="none", seed=3)
+
+    runs = {}
+    for shards in (1, 2, 8):
+        out = run_fleet(cfg, trainer, tasks, fleet,
+                        replay=ReplaySpec(capacity=32), device="ideal",
+                        max_shards=shards)
+        assert out["n_shards"] == shards, (shards, out["n_shards"])
+        runs[shards] = out
+    ref = runs[1]
+    for shards in (2, 8):
+        for i in range(8):
+            np.testing.assert_array_equal(
+                ref["per_device"][i]["R_full"],
+                runs[shards]["per_device"][i]["R_full"])
+        for name in ref["params"]:
+            np.testing.assert_array_equal(
+                np.asarray(ref["params"][name]),
+                np.asarray(runs[shards]["params"][name]), name)
+    print("MESH-INVARIANT-OK")
+""")
+
+
+@pytest.mark.slow
+def test_mesh_shape_invariance():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "MESH-INVARIANT-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Prepared-weights cache (the per-forward pad/scale hoist)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["wbs", "cmos"])
+def test_prepared_weights_bitwise_neutral(name):
+    """device_vmm through a prepare_weights cache is the same bits as
+    the uncached call — the hoist moves work, never changes it."""
+    backend = get_backend(name)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (24, 12))
+    drive = jax.random.normal(jax.random.fold_in(key, 2), (4, 24))
+    params = {"w_h": w}
+    prepared = backend.prepare_weights(params)
+    assert prepared is not None and "w_h" in prepared
+    y_plain = backend.device_vmm(drive, w, key, tag="w_h")
+    y_prep = backend.device_vmm(drive, w, key, tag="w_h",
+                                prepared=prepared)
+    np.testing.assert_array_equal(np.asarray(y_plain), np.asarray(y_prep))
+
+
+def test_prepare_weights_default_none():
+    assert get_backend("ideal").prepare_weights({"w": jnp.ones((4, 4))}) \
+        is None
