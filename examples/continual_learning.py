@@ -20,6 +20,16 @@ task_stratified | loss_aware); without the flag, the scenario's
 preferred policy applies (class_incremental rehearses class-balanced,
 drift rides the FIFO ring) and reservoir remains the global default.
 
+Observability (repro.obs, see docs/observability.md): --obs-cadence N
+collects the in-scan metric streams into a RunLog (timeline rendered in
+the telemetry report), --trace writes a Chrome/Perfetto trace.json with
+schedule/compile/execute spans, --record appends a schema-versioned
+run-record JSONL. One command produces all three:
+
+    PYTHONPATH=src python examples/continual_learning.py \
+        --backend analog_state --obs-cadence 10 \
+        --trace trace.json --record run.jsonl
+
     PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog_state
     PYTHONPATH=src python examples/continual_learning.py --scenario rotated --seeds 3
     PYTHONPATH=src python examples/continual_learning.py --scenario class_incremental --replay-policy loss_aware
@@ -75,7 +85,23 @@ def main():
                          "substrates that support it)")
     ap.add_argument("--no-telemetry", action="store_true",
                     help="skip activity metering + the energy report")
+    ap.add_argument("--obs-cadence", type=int, default=None, metavar="N",
+                    help="collect the repro.obs metric streams, windowed "
+                         "every N training steps (timeline in the report)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json "
+                         "(schedule/compile/execute spans)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="append a schema-versioned run-record to this "
+                         "JSONL file")
     args = ap.parse_args()
+
+    obs = tracer = None
+    if args.obs_cadence is not None or args.trace or args.record:
+        from repro.obs import ObsSpec, Tracer
+        if args.trace:
+            tracer = Tracer(process_name="continual_learning")
+        obs = ObsSpec(cadence=args.obs_cadence or 1, tracer=tracer)
 
     tasks = build_scenario(args.scenario, seed=0, n_tasks=args.tasks,
                            n_train=600, n_test=200)
@@ -126,11 +152,11 @@ def main():
             ap.error("--seeds replicates inside the compiled sweep; "
                      "drop --loop to use it")
         res = run_continual(cfg, trainer, tasks, replay=replay,
-                            device=backend)
+                            device=backend, obs=obs)
     else:
         seeds = list(range(args.seeds)) if args.seeds > 1 else None
         res = run_compiled(cfg, trainer, tasks, replay=replay,
-                           device=backend, seeds=seeds)
+                           device=backend, seeds=seeds, obs=obs)
 
     print("\naccuracy after each task (mean over seen tasks):")
     for t, a in enumerate(res["acc_after_each"]):
@@ -161,7 +187,8 @@ def main():
         # weight registers in the CMOS baseline have no endurance limit.
         tracker = res.get("endurance") if kind == "analog" else None
         rep = telemetry_report(backend.telemetry, model=m, kind=kind,
-                               tracker=tracker)
+                               tracker=tracker,
+                               runlog=res.get("runlog"))
         print("\ndevice telemetry (metered from this run):")
         print(format_report(rep))
     elif "endurance" in res:
@@ -174,6 +201,35 @@ def main():
               f"on workload write density)")
         print(f"accelerator: {m.gops():.1f} GOPS @ "
               f"{m.power_w()*1e3:.2f} mW → {m.gops_per_watt():.0f} GOPS/W")
+
+    if "runlog" in res and not backend.telemetry.enabled:
+        # Telemetry off but streams requested: render the timeline alone.
+        from repro.telemetry import format_timeline
+        from repro.obs import timeline
+        print("\n" + format_timeline(timeline(res["runlog"])))
+
+    if tracer is not None:
+        if "compile_s" in res:
+            print(f"\ncompile {res['compile_s']:.2f} s / execute "
+                  f"{res['execute_s']:.3f} s (AOT-separated)")
+        path = tracer.export_chrome(args.trace)
+        print(f"trace written to {path}")
+    if args.record:
+        from repro.obs import JsonlSink, run_record
+        metrics = {"MA": res["MA"], "wall_s": res.get("wall_s")}
+        if "metrics" in res:
+            metrics.update(res["metrics"])
+        rec = run_record(
+            "run", "continual", metrics,
+            counters=(backend.telemetry.snapshot()
+                      if backend.telemetry.enabled else None),
+            timeline=(res["runlog"].as_dict(max_points=200)
+                      if "runlog" in res else None),
+            extra={"scenario": args.scenario, "backend": backend.name,
+                   "algo": trainer.algo,
+                   "replay_policy": replay.resolved_policy})
+        path = JsonlSink(args.record).emit(rec)
+        print(f"run record appended to {path}")
 
 
 if __name__ == "__main__":

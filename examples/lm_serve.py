@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python examples/lm_serve.py --arch qwen2-0.5b
 (uses the arch's reduced smoke config so it runs on CPU in seconds)
+
+``--device <backend>`` runs the quantized substrate metered and reports
+pJ/request next to the latency percentiles; ``--trace out.json`` writes
+a Chrome trace of the serve loop (chrome://tracing / Perfetto).
 """
 import argparse
 
@@ -16,6 +20,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--device", default=None,
+                    help="quantized substrate registry name (e.g. wbs); "
+                         "enables metering and pJ/request")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace.json of the serve loop")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -23,8 +32,14 @@ def main():
         raise SystemExit("enc-dec serving needs an encoder pass; "
                          "use a decoder-only arch for this example")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(cfg, ServeConfig(batch_slots=4, max_len=64,
-                                          eos_token=-1), params)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(process_name="lm_serve")
+    scfg = ServeConfig(batch_slots=4, max_len=64, eos_token=-1,
+                       device=args.device, meter=args.device is not None,
+                       tracer=tracer)
+    engine = ServeEngine(cfg, scfg, params)
 
     reqs = []
     for i in range(args.requests):
@@ -37,6 +52,25 @@ def main():
         print(f"prompt={prompt} -> generated={req.tokens}")
     print(f"served {len(reqs)} requests in {engine.steps_run} "
           f"engine steps with 4 slots")
+
+    model = None
+    if args.device is not None:
+        from repro.analog.costmodel import M2RUCostModel
+        model = M2RUCostModel()
+    stats = engine.request_stats(model=model)
+    lat = stats["latency_ms"]
+    print(f"latency    p50 {lat['p50']:.2f} ms  p99 {lat['p99']:.2f} ms "
+          f"(mean {lat['mean']:.2f})")
+    print(f"throughput {stats['sequences_per_s']:.2f} sequences/s  "
+          f"{stats['tokens_per_s']:.1f} tokens/s")
+    if "energy" in stats:
+        e = stats["energy"]
+        pj = e["pj_per_request"]
+        print(f"energy     {e['total_j']*1e6:.2f} µJ metered; "
+              f"pJ/request p50 {pj['p50']:.3g}  p99 {pj['p99']:.3g}")
+    if tracer is not None:
+        path = tracer.export_chrome(args.trace)
+        print(f"trace written to {path}")
 
 
 if __name__ == "__main__":

@@ -438,10 +438,18 @@ class BatchSchedule:
     (meter-keyed rows/bytes) consumed while materializing the stream;
     the runner that actually *uses* the schedule credits it to its
     backend's telemetry exactly once.
+
+    ``occupancy[t][s]`` is the host replay buffer's fill after step
+    ``s`` of task ``t``'s offers — the schedule-derived occupancy
+    stream :mod:`repro.obs` reports for host-materialized policies
+    (in-graph policies read theirs from the scan-carried buffer
+    instead). Not part of :meth:`digest` — the golden schedule hash
+    covers only the batch content.
     """
     x: list[np.ndarray]
     y: list[np.ndarray]
     replay_traffic: dict = dataclasses.field(default_factory=dict)
+    occupancy: list[np.ndarray] = dataclasses.field(default_factory=list)
 
     def digest(self) -> str:
         """sha256 over the materialized stream — the schedule's identity
@@ -464,6 +472,15 @@ class BatchSchedule:
         the precondition for stacking into a scan-over-tasks."""
         shapes = {xt.shape for xt in self.x}
         return len(shapes) == 1
+
+    def occupancy_stream(self) -> np.ndarray:
+        """The per-step buffer-fill series flattened across tasks,
+        ``(total_steps,)`` int32 (zeros for in-graph fresh-only
+        schedules, which carry no host buffer)."""
+        if not self.occupancy:
+            return np.zeros(sum(self.steps_per_task), np.int32)
+        return np.concatenate(
+            [np.asarray(o, np.int32) for o in self.occupancy])
 
 
 # Pinned digest of the permuted reference schedule (permuted scenario,
@@ -524,10 +541,12 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
 
     xs_all: list[np.ndarray] = []
     ys_all: list[np.ndarray] = []
+    occ_all: list[np.ndarray] = []
     for t, task in enumerate(tasks):
         n = task.x_train.shape[0]
         xs_t: list[np.ndarray] = []
         ys_t: list[np.ndarray] = []
+        occ_t: list[int] = []
         for _ in range(trainer.epochs_per_task):
             order = host_rng.permutation(n)
             for s in range(0, n - bs + 1, bs):
@@ -554,13 +573,16 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
                                      task_ids=np.full(n_fresh, t))
                 xs_t.append(xb)
                 ys_t.append(yb)
+                occ_t.append(buffer.size if buffer is not None else 0)
         xs_all.append(np.stack(xs_t) if xs_t
                       else np.zeros((0, bs, T, F), np.float32))
         ys_all.append(np.stack(ys_t) if ys_t
                       else np.zeros((0, bs), np.int32))
+        occ_all.append(np.asarray(occ_t, np.int32))
     return BatchSchedule(x=xs_all, y=ys_all,
                          replay_traffic=dict(buffer.traffic)
-                         if buffer is not None else {})
+                         if buffer is not None else {},
+                         occupancy=occ_all)
 
 
 def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
@@ -606,14 +628,23 @@ def run_continual(cfg: MiRUConfig,
                   spec: Union[ContinualConfig, TrainerSpec],
                   tasks: list[TaskData],
                   replay: Optional[ReplaySpec] = None,
-                  device: Union[str, DeviceBackend, None] = None
-                  ) -> dict[str, Any]:
+                  device: Union[str, DeviceBackend, None] = None,
+                  obs: Optional[Any] = None) -> dict[str, Any]:
     """Train through the task sequence; return the R matrix, MA, and
     (optionally) endurance statistics.
 
     ``spec`` is a :class:`TrainerSpec` (with ``replay`` and ``device`` —
     a registered backend name or instance — supplied separately), or a
     legacy :class:`ContinualConfig` that maps onto all three.
+
+    ``obs`` is a :class:`repro.obs.ObsSpec`; when it asks for metric
+    streams the result carries ``"runlog"`` — a
+    :class:`repro.obs.RunLog` matching the compiled sweep's for the
+    same run: integer streams bit-identical, float streams to the same
+    few-ulp tolerance as the existing loop/compiled ``losses`` parity
+    (the loop computes the identical per-step scalars with the same
+    jitted :func:`repro.obs.step_stats`).
+    ``obs=None`` (the default) adds nothing to the loop.
     """
     trainer, rspec, backend = _resolve_specs(spec, replay, device)
 
@@ -648,6 +679,18 @@ def run_continual(cfg: MiRUConfig,
     if backend.telemetry.enabled and replay_traffic:
         backend.telemetry.record(replay_traffic)
 
+    # Observability streams (repro.obs): the loop computes the same
+    # per-step scalars the compiled scan emits, with the same jitted
+    # reduction, so the two RunLogs are bit-identical.
+    obs_on = obs is not None and getattr(obs, "metrics", False)
+    if obs_on:
+        from repro.obs import build_runlog, drift_stream, step_stats
+        stats_fn = jax.jit(step_stats)
+        obs_loss: list[np.ndarray] = []
+        obs_pulses: list[np.ndarray] = []
+        obs_dg: list[np.ndarray] = []
+        obs_occ: list[np.ndarray] = []
+
     n_tasks = len(tasks)
     R = np.zeros((n_tasks, n_tasks))
     losses: list[float] = []
@@ -669,6 +712,12 @@ def run_continual(cfg: MiRUConfig,
                     jnp.asarray(schedule.x[t][s]),
                     jnp.asarray(schedule.y[t][s]), dev_state)
             losses.append(float(loss))
+            if obs_on:
+                pu, dg, oc = stats_fn(applied, rstate)
+                obs_loss.append(np.asarray(loss))
+                obs_pulses.append(np.asarray(pu))
+                obs_dg.append(np.asarray(dg))
+                obs_occ.append(np.asarray(oc))
             backend.record_endurance(applied)
         key, k_eval = jax.random.split(key)
         R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t,
@@ -682,6 +731,23 @@ def run_continual(cfg: MiRUConfig,
         "losses": losses,
         "params": params,
     }
+    if obs_on:
+        cb = backend.spec.crossbar
+        drifting = (dev_state is not None and cb is not None
+                    and getattr(cb, "drift_rate", 0.0) > 0)
+        total = sum(schedule.steps_per_task)
+        out["runlog"] = build_runlog(
+            cadence=obs.cadence,
+            steps_per_task=schedule.steps_per_task,
+            loss=np.stack(obs_loss) if obs_loss else np.zeros(0),
+            write_pulses=np.stack(obs_pulses) if obs_pulses
+            else np.zeros(0, np.int64),
+            dg_mag=np.stack(obs_dg) if obs_dg else np.zeros(0),
+            replay_occupancy=(np.stack(obs_occ) if obs_occ
+                              else np.zeros(0, np.int32)) if in_graph
+            else schedule.occupancy_stream(),
+            drift_ticks=drift_stream(total, drifting=drifting),
+            task_acc=R)
     if dev_state is not None:
         out["device_state"] = dev_state
     if backend.tracker is not None:

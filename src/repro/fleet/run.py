@@ -29,6 +29,7 @@ tests/test_fleet.py and benchmarks/fleet_bench.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -72,7 +73,8 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
               replay: Optional[ReplaySpec] = None,
               device: Union[str, DeviceBackend, None] = None,
               *, baseline: bool = True,
-              max_shards: Optional[int] = None) -> dict[str, Any]:
+              max_shards: Optional[int] = None,
+              obs: Optional[Any] = None) -> dict[str, Any]:
     """Train ``fleet.n_devices`` heterogeneous chips through the task
     sequence inside one sharded compiled program.
 
@@ -90,6 +92,12 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
                         fleet size that fits the available devices)
       metrics/metrics_std  fleet mean/std, as in the seed-vmapped path
 
+    ``obs`` is a :class:`repro.obs.ObsSpec`: the result gains a
+    ``"runlog"`` whose streams carry a leading ``(n_devices,)`` chip
+    axis (``timeline`` reduces it — counters summed across the fleet,
+    gauges averaged), and the tracer records ``schedule`` / ``compile``
+    / ``execute`` spans plus ``compile_s``/``execute_s`` keys.
+
     Raises on ragged task streams (the fleet axis needs one trace) and
     on heterogeneity profiles with a backend that has no conductance-
     domain state.
@@ -100,6 +108,8 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
     rspec = replay if replay is not None else ReplaySpec()
     backend = get_backend(device if device is not None else "ideal")
     tele = backend.telemetry
+    obs_on = obs is not None and getattr(obs, "metrics", False)
+    tracer = getattr(obs, "tracer", None) if obs is not None else None
     D = fleet.n_devices
     seeds = device_seeds(fleet)
 
@@ -109,17 +119,20 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
                          "(one trace serves the whole fleet)")
 
     _, _, opt = _make_raw_steps(cfg, trainer, backend)
+    sched_scope = tracer.span("schedule", n_devices=D) \
+        if tracer is not None else contextlib.nullcontext()
     inputs, scheds = [], []
-    for s in seeds:
-        tsp = dataclasses.replace(trainer, seed=int(s))
-        inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend, tasks,
-                                        opt)
-        if inp is None:
-            raise ValueError("run_fleet needs a shape-uniform task "
-                             "stream (ragged schedules cannot share the "
-                             "fleet trace)")
-        inputs.append(inp)
-        scheds.append(sched)
+    with sched_scope:
+        for s in seeds:
+            tsp = dataclasses.replace(trainer, seed=int(s))
+            inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend,
+                                            tasks, opt)
+            if inp is None:
+                raise ValueError("run_fleet needs a shape-uniform task "
+                                 "stream (ragged schedules cannot share "
+                                 "the fleet trace)")
+            inputs.append(inp)
+            scheds.append(sched)
 
     n_tasks = len(tasks)
     S = inputs[0].xs.shape[1]
@@ -136,7 +149,8 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
             if traffic:
                 tele.record(traffic)
     run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
-                       baseline, ingraph_rspec=rspec if in_graph else None)
+                       baseline, ingraph_rspec=rspec if in_graph else None,
+                       obs_metrics=obs_on)
 
     eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
     eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
@@ -168,10 +182,28 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
                            out_specs=ax),
                  donate_argnums=(0, 2))
     t0 = time.perf_counter()
-    with tele.scaled(n_local):
-        res = fn(*stacked, eval_x, eval_y)
-    res = jax.tree.map(np.asarray, res)
+    compile_s = execute_s = None
+    if tracer is not None:
+        # AOT lowering separates compile from execute; the telemetry
+        # scale scope wraps the lowering — that is when the per-shard
+        # deltas are recorded.
+        with tracer.span("compile", backend=backend.name, n_devices=D,
+                         n_shards=n_shards):
+            with tele.scaled(n_local):
+                lowered = fn.lower(*stacked, eval_x, eval_y)
+            compiled_fn = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        with tracer.span("execute", backend=backend.name, n_devices=D):
+            res = compiled_fn(*stacked, eval_x, eval_y)
+            res = jax.tree.map(np.asarray, res)
+        execute_s = time.perf_counter() - t1
+    else:
+        with tele.scaled(n_local):
+            res = fn(*stacked, eval_x, eval_y)
+        res = jax.tree.map(np.asarray, res)
     wall_s = time.perf_counter() - t0
+    obs_streams = res.pop("obs", None)
 
     # Host-side accounting of the scan-summed write pulses — fleet
     # totals into the meters/tracker, per-device maps kept for the
@@ -207,6 +239,37 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
         "params": jax.tree.map(lambda v: v[0], res["params"]),
         "params_fleet": res["params"],
     })
+    if compile_s is not None:
+        out["compile_s"] = compile_s
+        out["execute_s"] = execute_s
+    if obs_on:
+        from repro.obs.runlog import build_runlog, drift_stream
+
+        def _ps(a):
+            # Per-step stream (D, n_tasks, S) → (D, total).
+            return np.asarray(a).reshape(D, -1)
+
+        if in_graph:
+            occ = _ps(obs_streams["replay_occupancy"])
+        else:
+            occ = np.stack([sc.occupancy_stream() for sc in scheds])
+        cb = backend.spec.crossbar
+        drifting = (inputs[0].dev_state is not None and cb is not None
+                    and (getattr(cb, "drift_rate", 0.0) > 0
+                         or (het_np is not None
+                             and "drift_rate" in het_np)))
+        drift = np.broadcast_to(
+            drift_stream(n_tasks * S, drifting=drifting),
+            (D, n_tasks * S))
+        out["runlog"] = build_runlog(
+            cadence=obs.cadence,
+            steps_per_task=scheds[0].steps_per_task,
+            loss=_ps(res["losses"]),
+            write_pulses=_ps(obs_streams["write_pulses"]),
+            dg_mag=_ps(obs_streams["dg_mag"]),
+            replay_occupancy=occ,
+            drift_ticks=drift,
+            task_acc=res["R_full"])
     if backend.tracker is not None:
         out["endurance"] = backend.tracker
     if tele.enabled:

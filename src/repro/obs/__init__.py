@@ -1,0 +1,31 @@
+"""``repro.obs`` — time-resolved observability.
+
+Three layers on top of the PR-2 aggregate telemetry:
+
+  * **Metric streams** (:mod:`repro.obs.runlog`): per-step scalars
+    (loss, write pulses, ΔG magnitude, replay occupancy, drift ticks)
+    threaded through the runners' ``lax.scan`` bodies and windowed into
+    a :class:`RunLog` at a configurable cadence. Disabled (the default)
+    is bitwise-free; enabled is bitwise-inert on results.
+  * **Span tracing** (:mod:`repro.obs.tracer`): host-side nested spans
+    separating schedule / compile / execute, exported as Chrome/Perfetto
+    ``trace.json``.
+  * **Sinks** (:mod:`repro.obs.sinks`, :mod:`repro.obs.hist`):
+    schema-versioned JSONL run records, the perf-trajectory history
+    under ``benchmarks/results/history/``, and the streaming
+    :class:`Histogram` behind the serve engine's p50/p99.
+
+See ``docs/observability.md``.
+"""
+from repro.obs.hist import Histogram
+from repro.obs.runlog import (ObsSpec, RunLog, build_runlog, drift_stream,
+                              sparkline, step_stats, timeline)
+from repro.obs.sinks import RUN_RECORD_SCHEMA, JsonlSink, run_record
+from repro.obs.tracer import Tracer
+
+__all__ = [
+    "ObsSpec", "RunLog", "build_runlog", "drift_stream", "step_stats",
+    "timeline", "sparkline",
+    "Tracer", "Histogram",
+    "JsonlSink", "run_record", "RUN_RECORD_SCHEMA",
+]

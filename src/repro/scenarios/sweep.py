@@ -131,16 +131,25 @@ def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
 
 def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
                  n_tasks: int, S: int, track_writes: bool, baseline: bool,
-                 ingraph_rspec: Optional[ReplaySpec] = None):
+                 ingraph_rspec: Optional[ReplaySpec] = None,
+                 obs_metrics: bool = False):
     """Build the jitted whole-protocol run. When ``ingraph_rspec`` names
     an in-graph replay policy (loss_aware), the step is the replay-
     wrapped one and the device-resident buffer rides the scan carry —
-    per-task replay enablement (past task 0) enters as a scanned flag."""
+    per-task replay enablement (past task 0) enters as a scanned flag.
+
+    ``obs_metrics`` threads the :mod:`repro.obs` per-step scalars
+    (write pulses, Σ|ΔG|, replay occupancy) through the scan as extra
+    ``ys`` outputs — pure reads of values the step already computes, so
+    the training results are unchanged; False (the default) emits
+    exactly the pre-obs trace."""
     raw_train, raw_eval, _ = _make_raw_steps(cfg, trainer, backend)
     ingraph_step = None
     if ingraph_rspec is not None:
         ingraph_step = _make_ingraph_replay_step(
             cfg, trainer, ingraph_rspec, backend, raw_train)
+    if obs_metrics:
+        from repro.obs.runlog import step_stats
     tele = backend.telemetry
 
     def run(params, opt_state, dev_state, rstate, xs, ys, step_keys,
@@ -166,14 +175,16 @@ def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
                 if wc is not None:
                     wc = {n: wc[n] + (applied[n] != 0).astype(jnp.int32)
                           for n in wc}
-                return (p, o, d, wc, rs), loss
+                ys_out = (loss, *step_stats(applied, rs)) \
+                    if obs_metrics else loss
+                return (p, o, d, wc, rs), ys_out
 
             with tele.scaled(S):
-                carry, losses = jax.lax.scan(step_body, carry,
-                                             (xs_t, ys_t, keys_t))
+                carry, step_ys = jax.lax.scan(step_body, carry,
+                                              (xs_t, ys_t, keys_t))
             p, _, d, _, _ = carry
             accs = eval_all(p, k_eval, d)
-            return carry, (accs, losses)
+            return carry, (accs, step_ys)
 
         wc0 = {n: jnp.zeros(p.shape, jnp.int32)
                for n, p in params.items()
@@ -183,15 +194,23 @@ def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
             base_row = eval_all(params, eval_keys[0], dev_state) \
                 if baseline else jnp.zeros((n_tasks,), jnp.float32)
             with tele.scaled(n_tasks):
-                carry, (R_full, losses) = jax.lax.scan(
+                carry, (R_full, step_ys) = jax.lax.scan(
                     task_body,
                     (params, opt_state, dev_state, wc0, rstate),
                     (xs, ys, step_keys, eval_keys, replay_on))
         tele.emit_pending()
         params, opt_state, dev_state, wcounts, rstate = carry
-        return {"params": params, "dev_state": dev_state,
-                "R_full": R_full, "losses": losses,
-                "wcounts": wcounts, "baseline_row": base_row}
+        if obs_metrics:
+            losses, pulses, dgs, occs = step_ys
+        else:
+            losses = step_ys
+        out = {"params": params, "dev_state": dev_state,
+               "R_full": R_full, "losses": losses,
+               "wcounts": wcounts, "baseline_row": base_row}
+        if obs_metrics:
+            out["obs"] = {"write_pulses": pulses, "dg_mag": dgs,
+                          "replay_occupancy": occs}
+        return out
 
     return run
 
@@ -235,16 +254,19 @@ def _aggregate_seeds(per_seed: list[dict], seeds: Sequence[int]) -> dict:
     }
 
 
-def _fallback_python(cfg, trainer, tasks, rspec, backend, seeds):
+def _fallback_python(cfg, trainer, tasks, rspec, backend, seeds,
+                     obs=None):
     """Non-uniform streams cannot scan: run the per-task Python loop.
     Mirrors the compiled path's multi-seed reporting (metrics are the
     cross-seed mean, with ``metrics_std``), minus FWT — the loop never
-    evaluates unseen tasks or the untrained baseline."""
+    evaluates unseen tasks or the untrained baseline. ``obs`` rides
+    through to :func:`run_continual`; a multi-seed fallback reports the
+    first seed's RunLog."""
     runs = []
     for s in (seeds if seeds is not None else [trainer.seed]):
         tsp = dataclasses.replace(trainer, seed=s)
         runs.append(run_continual(cfg, tsp, tasks, replay=rspec,
-                                  device=backend))
+                                  device=backend, obs=obs))
     per_seed = [{"R": r["R"], "MA": r["MA"],
                  "metrics": continual_metrics(r["R"])} for r in runs]
     out = dict(runs[0])
@@ -260,7 +282,8 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
                  device: Union[str, DeviceBackend, None] = None,
                  *, seeds: Optional[Sequence[int]] = None,
                  baseline: bool = True,
-                 uniform: bool = True) -> dict[str, Any]:
+                 uniform: bool = True,
+                 obs: Optional[Any] = None) -> dict[str, Any]:
     """Train through the task sequence inside one compiled program.
 
     Same contract as :func:`run_continual` (and bit-identical ``R``/
@@ -281,6 +304,13 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     ``vmap``-ed program; per-seed R matrices and metric mean/std come
     back under ``"per_seed"``/``"metrics"``. Initial-state and schedule
     buffers are donated to XLA.
+
+    ``obs`` is a :class:`repro.obs.ObsSpec`: metric streams come back
+    as ``"runlog"`` (with a leading per-seed axis under ``seeds``), and
+    a tracer records ``schedule`` / ``compile`` / ``execute`` spans —
+    compile separated from execute by lowering ahead of time, which is
+    also what ``"compile_s"``/``"execute_s"`` report. ``obs=None`` (the
+    default) compiles and runs the exact pre-obs program.
     """
     trainer = spec
     if not isinstance(trainer, TrainerSpec):
@@ -289,6 +319,8 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     rspec = replay if replay is not None else ReplaySpec()
     backend = get_backend(device if device is not None else "ideal")
     tele = backend.telemetry
+    obs_on = obs is not None and getattr(obs, "metrics", False)
+    tracer = getattr(obs, "tracer", None) if obs is not None else None
 
     test_shapes = {(t.x_test.shape, t.y_test.shape) for t in tasks}
     seed_list = list(seeds) if seeds is not None else None
@@ -298,22 +330,25 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         # Declared ragged (ScenarioSpec.uniform=False): skip schedule
         # materialization and run the loop directly.
         return _fallback_python(cfg, trainer, tasks, rspec, backend,
-                                seed_list)
+                                seed_list, obs=obs)
 
     _, _, opt = _make_raw_steps(cfg, trainer, backend)
+    sched_scope = tracer.span("schedule", n_tasks=len(tasks)) \
+        if tracer is not None else contextlib.nullcontext()
     inputs, scheds = [], []
-    for s in (seed_list if seed_list is not None else [trainer.seed]):
-        tsp = dataclasses.replace(trainer, seed=s)
-        inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend, tasks,
-                                        opt)
-        inputs.append(inp)
-        scheds.append(sched)
+    with sched_scope:
+        for s in (seed_list if seed_list is not None else [trainer.seed]):
+            tsp = dataclasses.replace(trainer, seed=s)
+            inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend,
+                                            tasks, opt)
+            inputs.append(inp)
+            scheds.append(sched)
     if any(i is None for i in inputs) or len(test_shapes) != 1:
         # The materialized schedules are discarded — their replay
         # traffic is *not* credited here; the loop fallback meters its
         # own (run_continual records its schedule's traffic).
         return _fallback_python(cfg, trainer, tasks, rspec, backend,
-                                seed_list)
+                                seed_list, obs=obs)
 
     n_tasks = len(tasks)
     S = inputs[0].xs.shape[1]
@@ -331,7 +366,8 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
             if traffic:
                 tele.record(traffic)
     run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
-                       baseline, ingraph_rspec=rspec if in_graph else None)
+                       baseline, ingraph_rspec=rspec if in_graph else None,
+                       obs_metrics=obs_on)
 
     eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
     eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
@@ -352,10 +388,28 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         scope = contextlib.nullcontext()
 
     t0 = time.perf_counter()
-    with scope:
-        res = fn(*stacked, eval_x, eval_y)
-    res = jax.tree.map(np.asarray, res)
+    compile_s = execute_s = None
+    if tracer is not None:
+        # Lower ahead of time so the compile span excludes execution.
+        # The telemetry scale scope wraps the *lowering* — trace-time
+        # pending deltas are what the multiplier applies to.
+        with tracer.span("compile", backend=backend.name,
+                         n_tasks=n_tasks, steps_per_task=S):
+            with scope:
+                lowered = fn.lower(*stacked, eval_x, eval_y)
+            compiled_fn = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        with tracer.span("execute", backend=backend.name):
+            res = compiled_fn(*stacked, eval_x, eval_y)
+            res = jax.tree.map(np.asarray, res)
+        execute_s = time.perf_counter() - t1
+    else:
+        with scope:
+            res = fn(*stacked, eval_x, eval_y)
+        res = jax.tree.map(np.asarray, res)
     wall_s = time.perf_counter() - t0
+    obs_streams = res.pop("obs", None)
 
     # Host-side accounting of the data-dependent write pulses the scan
     # summed (the Python loop meters these per step in record_endurance).
@@ -385,6 +439,42 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     out["compiled"] = True
     out["wall_s"] = wall_s
     out["steps_per_task"] = S
+    if compile_s is not None:
+        out["compile_s"] = compile_s
+        out["execute_s"] = execute_s
+    if obs_on:
+        from repro.obs.runlog import build_runlog, drift_stream
+
+        def _ps(a):
+            # Per-step stream: (n_tasks, S) → (total,), with the seed
+            # axis leading under vmap.
+            a = np.asarray(a)
+            return a.reshape(len(seed_list), -1) if many \
+                else a.reshape(-1)
+
+        if in_graph:
+            occ = _ps(obs_streams["replay_occupancy"])
+        else:
+            # Host-materialized policies: the buffer lives outside the
+            # graph; its fill was recorded when the schedule was built.
+            occ = np.stack([sc.occupancy_stream() for sc in scheds]) \
+                if many else scheds[0].occupancy_stream()
+        cb = backend.spec.crossbar
+        drifting = (inputs[0].dev_state is not None and cb is not None
+                    and getattr(cb, "drift_rate", 0.0) > 0)
+        drift = drift_stream(n_tasks * S, drifting=drifting)
+        if many:
+            drift = np.broadcast_to(drift,
+                                    (len(seed_list),) + drift.shape)
+        out["runlog"] = build_runlog(
+            cadence=obs.cadence,
+            steps_per_task=scheds[0].steps_per_task,
+            loss=_ps(res["losses"]),
+            write_pulses=_ps(obs_streams["write_pulses"]),
+            dg_mag=_ps(obs_streams["dg_mag"]),
+            replay_occupancy=occ,
+            drift_ticks=drift,
+            task_acc=res["R_full"])
     if backend.tracker is not None:
         out["endurance"] = backend.tracker
     if tele.enabled:
@@ -411,12 +501,18 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
               replay: Optional[ReplaySpec] = None,
               *, seed: int = 0, seeds: Optional[Sequence[int]] = None,
               n_h: int = 100, meter: bool = True,
-              scenario_kwargs: Optional[dict] = None) -> dict[str, Any]:
+              scenario_kwargs: Optional[dict] = None,
+              obs: Optional[Any] = None) -> dict[str, Any]:
     """The scenario × backend grid. Each cell runs the compiled sweep
     (falling back to the Python loop for non-uniform streams) and reports
     average accuracy, forgetting, BWT, FWT — and, when ``meter`` is set
     and the substrate is a metered device, the live-metered power and
     GOPS/W from ``repro.telemetry``.
+
+    ``obs`` (an :class:`repro.obs.ObsSpec`) rides into every cell's
+    :func:`run_compiled`: each cell opens a ``cell:{scenario}/{backend}``
+    span on the tracer, metered cells grow a ``timeline`` section in
+    their report, and the cell dict carries ``compile_s``/``execute_s``.
 
     Returns ``{"cells": {f"{scenario}/{backend}": cell, ...}, ...}``.
     """
@@ -447,9 +543,14 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
                 # percentiles) at no extra trace cost.
                 if backend.tracker is None:
                     backend.tracker = EnduranceTracker()
-            res = run_compiled(cfg, tsp, tasks, replay=rsp,
-                               device=backend, seeds=seeds,
-                               uniform=sc.uniform)
+            tracer = getattr(obs, "tracer", None) if obs is not None \
+                else None
+            cell_scope = tracer.span(f"cell:{sc_name}/{be_name}") \
+                if tracer is not None else contextlib.nullcontext()
+            with cell_scope:
+                res = run_compiled(cfg, tsp, tasks, replay=rsp,
+                                   device=backend, seeds=seeds,
+                                   uniform=sc.uniform, obs=obs)
             cell = {
                 "scenario": sc_name, "backend": be_name,
                 "replay_policy": rsp.resolved_policy,
@@ -461,11 +562,17 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
             }
             if "metrics_std" in res:
                 cell["metrics_std"] = res["metrics_std"]
+            if "compile_s" in res:
+                cell["compile_s"] = res["compile_s"]
+                cell["execute_s"] = res["execute_s"]
+            if "runlog" in res:
+                cell["runlog"] = res["runlog"]
             if metered:
                 kind = "cmos" if be_name == "cmos" else "analog"
                 rep = telemetry_report(
                     backend.telemetry, model=M2RUCostModel(n_h=n_h),
-                    kind=kind, tracker=backend.tracker)
+                    kind=kind, tracker=backend.tracker,
+                    runlog=res.get("runlog"))
                 cell["power_mw"] = rep["metered"]["power_mw"]
                 cell["gops_per_w"] = rep["metered"]["gops_per_w"]
                 cell["pj_per_op"] = rep["metered"]["pj_per_op"]

@@ -17,7 +17,9 @@ decode activity on its telemetry when ``ServeConfig.meter`` is set.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Optional, Union
 
@@ -51,6 +53,10 @@ class ServeConfig:
     # engine enables it, later-compiled steps on that name meter too).
     # Use distinct registered names for isolated metering.
     meter: bool = False
+    # A repro.obs.Tracer: the engine opens a span per engine step (and
+    # per prefill) so the serve loop shows up in trace.json next to the
+    # training runners' compile/execute spans. None is free.
+    tracer: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -60,6 +66,12 @@ class Request:
     max_new: int = 32
     tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Observability: submit/finish wall-clock and the number of decode
+    # dispatches this request consumed (prefill + generated tokens) —
+    # the per-request share of the metered energy.
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    steps: int = 0
 
 
 class ServeEngine:
@@ -110,6 +122,14 @@ class ServeEngine:
 
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self.steps_run = 0
+        # Per-request observability (repro.obs): end-to-end latency
+        # histogram (submit → done, ms) and the finished requests'
+        # decode-step shares for pJ/request attribution.
+        from repro.obs import Histogram
+        self.latency = Histogram()
+        self._finished: list[Request] = []
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
 
     @property
     def telemetry(self):
@@ -120,8 +140,23 @@ class ServeEngine:
     def submit(self, prompt: list[int], max_new: int = 32) -> Request:
         req = Request(rid=len(self.queue) + 1000 * self.steps_run,
                       prompt=list(prompt), max_new=max_new)
+        req.t_submit = time.perf_counter()
+        if self._t_first_submit is None:
+            self._t_first_submit = req.t_submit
         self.queue.append(req)
         return req
+
+    def _tracer_span(self, name: str, **args):
+        tracer = self.scfg.tracer
+        return tracer.span(name, **args) if tracer is not None \
+            else contextlib.nullcontext()
+
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self._t_last_done = req.t_done
+        self.latency.add((req.t_done - req.t_submit) * 1e3)
+        self._finished.append(req)
 
     def _admit(self) -> None:
         for slot in range(self.scfg.batch_slots):
@@ -132,8 +167,10 @@ class ServeEngine:
                 # Prefill the prompt token-by-token through the decode
                 # path (single compiled executable; a production engine
                 # adds a chunked-prefill fast path).
-                for t in req.prompt[:-1]:
-                    self._advance_slot(slot, t, sample=False)
+                with self._tracer_span("serve.prefill", rid=req.rid,
+                                       prompt_len=len(req.prompt)):
+                    for t in req.prompt[:-1]:
+                        self._advance_slot(slot, t, sample=False)
                 req.tokens = []
                 req.pending_token = req.prompt[-1]
 
@@ -144,6 +181,9 @@ class ServeEngine:
         logits, self.caches = self._step(self.params, self.caches,
                                          jnp.asarray(toks), pos)
         self.slot_pos[slot] += 1
+        req = self.slot_req[slot]
+        if req is not None:
+            req.steps += 1
         if not sample:
             return -1
         return self._pick(logits[slot])
@@ -158,6 +198,10 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """Advance every active slot one token. Returns #active slots."""
+        with self._tracer_span("serve.step", step=self.steps_run):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
         self._admit()
         active = [s for s in range(self.scfg.batch_slots)
                   if self.slot_req[s] is not None]
@@ -185,11 +229,12 @@ class ServeEngine:
                 req = self.slot_req[s]
                 nxt = self._pick(logits[s])
                 req.tokens.append(nxt)
+                req.steps += 1
                 self.slot_pos[s] += 1
                 if (nxt == self.scfg.eos_token
                         or len(req.tokens) >= req.max_new
                         or self.slot_pos[s] >= self.scfg.max_len - 1):
-                    req.done = True
+                    self._finish(req)
                     self.slot_req[s] = None
         self.steps_run += 1
         return len(active)
@@ -198,3 +243,58 @@ class ServeEngine:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
+
+    # ------------------------------------------------------------------
+    def request_stats(self, model: Optional[Any] = None) -> dict:
+        """Per-request serving figures over the finished requests.
+
+          requests         completed count
+          latency_ms       end-to-end (submit → done) p50/p95/p99/mean
+          sequences_per_s  completed / (last done − first submit)
+          tokens_per_s     generated tokens over the same window
+
+        With ``model`` (a :class:`repro.analog.costmodel.M2RUCostModel`)
+        and a metered substrate, adds ``energy``: the run's metered
+        joules and a pJ/request distribution — each finished request is
+        charged its share of the total by decode-dispatch count
+        (prefill + generated tokens), the allocation unit the batched
+        engine actually dispatches.
+        """
+        out: dict[str, Any] = {
+            "requests": len(self._finished),
+            "steps_run": self.steps_run,
+            "latency_ms": self.latency.summary(),
+        }
+        if self._finished and self._t_last_done is not None:
+            span = self._t_last_done - self._t_first_submit
+            n_tok = sum(len(r.tokens) for r in self._finished)
+            out["sequences_per_s"] = len(self._finished) / span \
+                if span > 0 else float("inf")
+            out["tokens_per_s"] = n_tok / span if span > 0 \
+                else float("inf")
+            out["tokens_generated"] = n_tok
+        tele = self.telemetry
+        if model is not None and tele is not None and tele.enabled \
+                and self._finished:
+            from repro.obs import Histogram
+            from repro.telemetry.energy import MeteredEnergy
+            kind = "cmos" if self.cfg.quant_mode == "cmos" else "analog"
+            en = MeteredEnergy(model)
+            counters = tele.snapshot()
+            try:
+                total_j = en.report(counters, kind=kind).energy_j
+            except ValueError:
+                # The workload's meter tags don't map onto the M2RU
+                # chip-geometry cycle model (e.g. LM decode): charge the
+                # metered ops at the model's per-op energy instead.
+                pj_op = model.digital_pj_per_op() if kind == "cmos" \
+                    else model.pj_per_op()
+                total_j = en.ops(counters) * pj_op * 1e-12
+            total_steps = sum(r.steps for r in self._finished)
+            if total_j > 0 and total_steps > 0:
+                pj = Histogram()
+                for r in self._finished:
+                    pj.add(total_j * r.steps / total_steps * 1e12)
+                out["energy"] = {"total_j": total_j,
+                                 "pj_per_request": pj.summary()}
+        return out

@@ -19,11 +19,12 @@ from repro.telemetry.meters import Telemetry
 from repro.telemetry.energy import EnergyReport, MeteredEnergy
 from repro.telemetry.lifetime import LifetimeProjection, project_lifetime
 from repro.telemetry.report import (cmos_comparison, format_report,
-                                    telemetry_report)
+                                    format_timeline, telemetry_report)
 
 __all__ = [
     "Telemetry",
     "EnergyReport", "MeteredEnergy",
     "LifetimeProjection", "project_lifetime",
     "telemetry_report", "cmos_comparison", "format_report",
+    "format_timeline",
 ]

@@ -95,6 +95,13 @@ class MeteredEnergy:
         return 2.0 * _meter(counters, M.MACS) + 3.0 * _meter(counters,
                                                              M.INTERP)
 
+    def ops(self, counters: Mapping[str, int]) -> float:
+        """Metered arithmetic ops (MAC = 2) across all tags — workload-
+        agnostic, unlike the M2RU-geometry cycle model the full reports
+        use. The serve engine's pJ/request falls back to this when the
+        workload's tags don't map onto the chip geometry."""
+        return self._ops(counters)
+
     def _chip_cycles(self, counters: Mapping[str, int]) -> float:
         m = self.model
         # Hidden crossbar: [W_h; U_h] share wordlines (Fig. 2) and stream

@@ -122,10 +122,19 @@ class Telemetry:
         iteration while the deltas already carry the scan's ``scaled``
         multiplier — double counting. The compiled scenario sweep wraps its
         scan-over-tasks in ``deferred()`` and flushes once at the top level
-        of the jitted run."""
+        of the jitted run.
+
+        Exception-safe: a trace aborted inside the scope (shape error,
+        interrupt) rolls the pending buffer back to its entry state —
+        otherwise the partial trace's deltas would leak into the next
+        successful trace's flush and overcount."""
         prev, self._deferred = self._deferred, True
+        entry = dict(self._pending)
         try:
             yield self
+        except BaseException:
+            self._pending = entry
+            raise
         finally:
             self._deferred = prev
 

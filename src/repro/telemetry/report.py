@@ -23,11 +23,15 @@ def telemetry_report(telemetry: Telemetry,
                      kind: str = "analog",
                      tracker: Optional[EnduranceTracker] = None,
                      update_period_s: float = 1e-3,
-                     fleet: Optional[dict] = None) -> dict:
+                     fleet: Optional[dict] = None,
+                     runlog: Optional[object] = None) -> dict:
     """Metered Table I numbers (+ lifetime when a tracker is given), side
     by side with the closed-form cost model for the same geometry.
     ``fleet`` (a :func:`repro.fleet.fleet_aggregate` dict) attaches the
-    population-distribution section ``format_report`` renders."""
+    population-distribution section ``format_report`` renders; ``runlog``
+    (a :class:`repro.obs.RunLog`) attaches the ``timeline`` section —
+    write-rate-over-time next to the lifetime projection, per-task
+    forgetting next to the final scalar."""
     model = model if model is not None else M2RUCostModel()
     energy = MeteredEnergy(model)
     counters = telemetry.snapshot()
@@ -69,6 +73,9 @@ def telemetry_report(telemetry: Telemetry,
             tracker, model.hw, update_period_s).as_dict()
     if fleet is not None:
         out["fleet"] = fleet
+    if runlog is not None:
+        from repro.obs.runlog import timeline
+        out["timeline"] = timeline(runlog)
     return out
 
 
@@ -131,6 +138,40 @@ def format_report(rep: dict) -> str:
                 + "  writes/device/update")
     if "fleet" in rep:
         lines.append(format_fleet(rep["fleet"]))
+    if "timeline" in rep:
+        lines.append(format_timeline(rep["timeline"]))
+    return "\n".join(lines)
+
+
+#: Timeline streams rendered by :func:`format_timeline`, in display
+#: order: (timeline key, label, formatter for the aggregate column).
+_TIMELINE_ROWS = (
+    ("loss", "loss", lambda v: f"last {v[-1]:.4f}"),
+    ("write_pulses", "write pulses", lambda v: f"Σ {sum(v):.0f}"),
+    ("dg_mag", "Σ|ΔG|", lambda v: f"Σ {sum(v):.3g}"),
+    ("replay_occupancy", "replay fill", lambda v: f"max {max(v):.0f}"),
+    ("drift_ticks", "drift ticks", lambda v: f"Σ {sum(v):.0f}"),
+)
+
+
+def format_timeline(tl: dict) -> str:
+    """Printable timeline block (from :func:`repro.obs.timeline`):
+    sparkline per stream — the *when* next to the report's lifetime
+    aggregates — plus the per-task forgetting trajectory."""
+    from repro.obs.runlog import sparkline
+    lines = [f"timeline: {tl['n_steps']} steps @ cadence "
+             f"{tl['cadence']} ({len(tl['steps'])} windows)"]
+    for key, label, agg in _TIMELINE_ROWS:
+        v = tl.get(key)
+        if not v:
+            continue
+        if key == "drift_ticks" and not any(v):
+            continue
+        lines.append(f"  {label:<18} {sparkline(v):<48} {agg(v)}")
+    fg = tl.get("forgetting_after_task")
+    if fg is not None and len(fg) > 1:
+        lines.append("  forgetting/task    "
+                     + " ".join(f"{v:.3f}" for v in fg))
     return "\n".join(lines)
 
 

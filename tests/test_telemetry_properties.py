@@ -1,0 +1,164 @@
+"""Property-based tests for the Telemetry pending-buffer protocol
+(satellite of the observability PR).
+
+The accumulator's exactness contract under jit (meters.py): deltas
+recorded at trace time land in a pending buffer, multiplied by the
+active ``scaled`` scopes, and ``emit_pending`` drains them into one
+io_callback that fires once per *execution* of the compiled program —
+so the counters equal delta × Π(scales) × executions regardless of how
+many times XLA retraces or how the scopes nest. Properties over the
+scaled × deferred × recompile matrix:
+
+  exactness       counters = delta · Π(scales) · n_executions
+  recompile       a retrace (new shape) drains its own pending — traces
+                  never double-count each other's deltas
+  deferred        interior flushes inside ``deferred()`` are suppressed;
+                  exactly one top-level flush counts everything once
+  rollback        a trace aborted inside ``deferred()`` restores the
+                  pending buffer to its entry state (no leakage into the
+                  next successful trace)
+  scope unwind    ``scaled`` restores the multiplier on exception
+  concrete path   records with a concrete anchor count immediately,
+                  still scale-multiplied, and never touch the pending
+                  buffer
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.telemetry.meters import Telemetry
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3),
+       st.booleans())
+def test_scaled_jit_exactness(scale_a, scale_b, n_exec, nested):
+    """delta × Π(scales) × executions, for flat and nested scopes."""
+    tele = Telemetry(enabled=True)
+
+    def f(x):
+        if nested:
+            with tele.scaled(scale_a):
+                with tele.scaled(scale_b):
+                    tele.record({"macs/w": 2}, anchor=x)
+        else:
+            with tele.scaled(scale_a * scale_b):
+                tele.record({"macs/w": 2}, anchor=x)
+        tele.emit_pending()
+        return x * 2.0
+
+    jf = jax.jit(f)
+    for i in range(n_exec):
+        jf(jnp.float32(i)).block_until_ready()
+    assert tele.snapshot().get("macs/w", 0) == 2 * scale_a * scale_b \
+        * n_exec
+    assert tele._pending == {}
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3))
+def test_recompile_each_trace_counts_once(scale, n_shapes, n_exec):
+    """Each retrace (distinct input shape) drains its own pending buffer:
+    total = Σ_shapes delta · scale · executions_of_that_shape."""
+    tele = Telemetry(enabled=True)
+
+    def f(x):
+        with tele.scaled(scale):
+            tele.record({"vmm_rows/t": 5}, anchor=x)
+        tele.emit_pending()
+        return x.sum()
+
+    jf = jax.jit(f)
+    for shape in range(1, n_shapes + 1):     # each shape → one retrace
+        for i in range(n_exec):
+            jf(jnp.ones((shape,)) * i).block_until_ready()
+    assert tele.snapshot().get("vmm_rows/t", 0) == \
+        5 * scale * n_shapes * n_exec
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 3))
+def test_deferred_suppresses_interior_flushes(scale, n_exec, n_interior):
+    """A metered sub-function that flushes itself, traced inside a
+    ``deferred()`` scope: its interior emit_pending must be a no-op and
+    the single top-level flush counts everything exactly once."""
+    tele = Telemetry(enabled=True)
+
+    def f(x):
+        with tele.deferred():
+            with tele.scaled(scale):
+                tele.record({"macs/a": 3}, anchor=x)
+                for _ in range(n_interior):
+                    tele.emit_pending()      # suppressed, not dropped
+        tele.emit_pending()                  # the one real flush
+        return x + 1.0
+
+    jf = jax.jit(f)
+    for i in range(n_exec):
+        jf(jnp.float32(i)).block_until_ready()
+    assert tele.snapshot().get("macs/a", 0) == 3 * scale * n_exec
+    assert tele._pending == {}
+
+
+def test_deferred_exception_rolls_back_pending():
+    """A trace aborted inside ``deferred()`` (shape error, interrupt)
+    restores the pending buffer: the partial trace's deltas must not
+    leak into the next successful trace's flush."""
+    tele = Telemetry(enabled=True)
+
+    def seed(x):
+        tele.record({"macs/kept": 1}, anchor=x)
+        return x
+
+    jax.make_jaxpr(seed)(1.0)               # pending: {"macs/kept": 1}
+    entry = dict(tele._pending)
+
+    def aborts(x):
+        tele.record({"macs/leaked": 7}, anchor=x)
+        raise RuntimeError("trace aborted")
+
+    with pytest.raises(RuntimeError, match="trace aborted"):
+        with tele.deferred():
+            jax.make_jaxpr(aborts)(1.0)
+    assert tele._pending == entry            # rollback, no leakage
+    assert not tele._deferred                # flag restored too
+
+    # The surviving pending flushes normally afterwards.
+    def ok(x):
+        tele.emit_pending()
+        return x * 1.0
+
+    jax.jit(ok)(jnp.float32(0)).block_until_ready()
+    snap = tele.snapshot()
+    assert snap.get("macs/kept", 0) == 1
+    assert "macs/leaked" not in snap
+
+
+def test_scaled_restores_multiplier_on_exception():
+    tele = Telemetry(enabled=True)
+    with pytest.raises(ValueError):
+        with tele.scaled(8):
+            raise ValueError("boom")
+    assert tele._scale == 1
+    tele.record({"macs/x": 1})               # concrete: immediate
+    assert tele.snapshot()["macs/x"] == 1    # not ×8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4))
+def test_concrete_anchor_counts_immediately(scale, delta):
+    tele = Telemetry(enabled=True)
+    with tele.scaled(scale):
+        tele.record({"adc_conversions/h": delta}, anchor=None)
+    assert tele._pending == {}
+    assert tele.counters["adc_conversions/h"] == delta * scale
+
+
+def test_disabled_is_inert():
+    tele = Telemetry(enabled=False)
+    with tele.scaled(4), tele.deferred():
+        tele.record({"macs/x": 3}, anchor=None)
+    tele.emit_pending()
+    assert tele.snapshot() == {} and tele._pending == {}
