@@ -53,20 +53,24 @@ def main():
     print(f"served {len(reqs)} requests in {engine.steps_run} "
           f"engine steps with 4 slots")
 
-    model = None
-    if args.device is not None:
-        from repro.analog.costmodel import M2RUCostModel
-        model = M2RUCostModel()
-    stats = engine.request_stats(model=model)
+    # Metered runs report energy through the transformer-shape
+    # DenseCostModel built from this arch's quantized projections
+    # (request_stats' default when metering an LM engine).
+    stats = engine.request_stats()
     lat = stats["latency_ms"]
     print(f"latency    p50 {lat['p50']:.2f} ms  p99 {lat['p99']:.2f} ms "
           f"(mean {lat['mean']:.2f})")
+    qw, dec = stats["queue_wait_ms"], stats["decode_ms"]
+    print(f"           queue-wait p50 {qw['p50']:.2f} ms  "
+          f"decode p50 {dec['p50']:.2f} ms")
     print(f"throughput {stats['sequences_per_s']:.2f} sequences/s  "
           f"{stats['tokens_per_s']:.1f} tokens/s")
     if "energy" in stats:
         e = stats["energy"]
         pj = e["pj_per_request"]
-        print(f"energy     {e['total_j']*1e6:.2f} µJ metered; "
+        print(f"energy     {e['total_j']*1e6:.2f} µJ metered at "
+              f"{e['power_mw']:.1f} mW ({e['gops_per_w']:.1f} GOPS/W, "
+              f"{e['pj_per_op']:.1f} pJ/op); "
               f"pJ/request p50 {pj['p50']:.3g}  p99 {pj['p99']:.3g}")
     if tracer is not None:
         path = tracer.export_chrome(args.trace)

@@ -163,3 +163,139 @@ class M2RUCostModel:
         from repro.analog.endurance import lifespan_years
         return lifespan_years(writes_per_update_mean_rate,
                               self.hw.endurance_cycles, update_period_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCostModel:
+    """Crossbar-mapped dense projection stack — the transformer-shape
+    energy model for the model zoo's quantized serving path.
+
+    The zoo's LM layers route every quantized projection through the WBS
+    crossbar (``models/layers.dense``, tag ``dense``); this model maps
+    that projection stack onto the same 65 nm mixed-signal circuit
+    vocabulary as :class:`M2RUCostModel` — weights stationary in
+    differential memristor pairs, WBS drive at one input bit per cycle,
+    shared high-speed ADCs scanning the bitlines — so model-zoo serving
+    runs report GOPS/W and pJ/op on the same footing as the M2RU chip.
+
+    ``shapes`` lists the (K, N) of each quantized projection one token
+    row traverses per decode step: attention/SSM in/out projections, the
+    active FFN or expert stack, and the untied LM head. Unquantized ops
+    (router logits, embeddings, norms, attention itself) are outside the
+    crossbar and excluded — consistent with what the ``dense`` meter tag
+    actually counts. Build it from a ModelConfig via
+    :meth:`from_model_config`; feed it metered counters through
+    :meth:`repro.telemetry.energy.MeteredEnergy.dense_report`.
+    """
+    shapes: tuple[tuple[int, int], ...]
+    n_bits: int = 8
+    #: Bitline channels per shared high-speed ADC (one extra bank per
+    #: 128 outputs — the M2RU sizing rule applied to wide projections).
+    adc_bank_channels: int = 128
+    hw: HardwareConstants = HardwareConstants()
+
+    def __post_init__(self):
+        if not self.shapes:
+            raise ValueError("DenseCostModel needs at least one "
+                             "(K, N) projection shape")
+
+    # ------------------------------------------------------------------
+    @property
+    def cycle_s(self) -> float:
+        return 1.0 / self.hw.clock_hz
+
+    @property
+    def n_projections(self) -> int:
+        return len(self.shapes)
+
+    def adc_banks(self, n_out: int) -> int:
+        return max(1, math.ceil(n_out / self.adc_bank_channels))
+
+    def adc_scan_cycles(self, n_out: int) -> int:
+        """Banks scan their channel groups concurrently."""
+        t = math.ceil(n_out / self.adc_banks(n_out)) \
+            * self.hw.adc_s_per_channel
+        return max(1, math.ceil(t / self.cycle_s - 1e-9))
+
+    def row_cycles(self) -> int:
+        """Cycles for one token row through the full stack: the
+        projections are sequentially dependent, each streams ``n_bits``
+        WBS phases then scans its output bitlines."""
+        return sum(self.n_bits + self.adc_scan_cycles(n)
+                   for _, n in self.shapes)
+
+    def row_latency_s(self) -> float:
+        return self.row_cycles() * self.cycle_s
+
+    def ops_per_row(self) -> int:
+        return sum(2 * k * n for k, n in self.shapes)
+
+    def gops(self) -> float:
+        return self.ops_per_row() / self.row_latency_s() / 1e9
+
+    # ------------------------------------------------------------------
+    def power_breakdown_w(self) -> dict[str, float]:
+        hw = self.hw
+        n_devices = 2 * sum(k * n for k, n in self.shapes)
+        n_bitlines = sum(n for _, n in self.shapes)
+        n_adc = sum(self.adc_banks(n) for _, n in self.shapes)
+        return {
+            "adc": n_adc * hw.p_adc_w,
+            "opamp": n_bitlines * hw.p_opamp_w,
+            "crossbar": 0.5 * n_devices * hw.v_bit ** 2 * hw.g_ref,
+            "digital": (hw.p_digital_base_w
+                        + n_bitlines * hw.p_digital_per_unit_w),
+        }
+
+    def power_w(self) -> float:
+        return sum(self.power_breakdown_w().values())
+
+    def gops_per_watt(self) -> float:
+        return self.gops() / self.power_w()
+
+    def pj_per_op(self) -> float:
+        return self.power_w() / (self.gops() * 1e9) * 1e12
+
+    def digital_pj_per_op(self) -> float:
+        """Digital 65 nm baseline at iso-throughput — same calibrated
+        29× mixed-signal advantage as :meth:`M2RUCostModel.digital_pj_per_op`."""
+        return 29.0 * self.pj_per_op()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_model_config(cls, cfg, n_bits: int = 8) -> "DenseCostModel":
+        """The quantized (K, N) stack one decode token traverses, per
+        architecture family — mirrors exactly which projections
+        ``models/*`` route through ``layers.dense`` with a quant mode
+        (the counters' ``dense`` tag): GQA or MLA attention, dense FFN or
+        the active expert set (router is fp32), Mamba in/out projections,
+        the untied LM head. Per-layer composition follows
+        ``ModelConfig.is_ssm_layer`` / ``is_moe_layer``."""
+        D, hd = cfg.d_model, cfg.hd()
+        q, kv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        if cfg.use_mla:
+            attn = [(D, cfg.q_lora_rank),
+                    (cfg.q_lora_rank, cfg.n_heads
+                     * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)),
+                    (D, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                    (cfg.kv_lora_rank, cfg.n_heads
+                     * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+                    (cfg.n_heads * cfg.v_head_dim, D)]
+        else:
+            attn = [(D, q), (D, kv), (D, kv), (q, D)]
+        ffn = [(D, cfg.d_ff), (D, cfg.d_ff), (cfg.d_ff, D)]
+        moe_one = [(D, cfg.moe_d_ff), (D, cfg.moe_d_ff), (cfg.moe_d_ff, D)]
+        d_in = cfg.ssm_expand * D
+        ssm = [(D, 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+                + (d_in // cfg.ssm_head_dim if cfg.ssm_head_dim else 0)),
+               (d_in, D)] if cfg.ssm_state else []
+        shapes: list[tuple[int, int]] = []
+        for i in range(cfg.n_layers):
+            shapes += ssm if cfg.is_ssm_layer(i) else attn
+            if cfg.is_moe_layer(i):
+                shapes += (cfg.top_k + cfg.n_shared_experts) * moe_one
+            elif cfg.d_ff:
+                shapes += ffn
+        if not cfg.tie_embeddings:
+            shapes.append((D, cfg.vocab))
+        return cls(shapes=tuple(shapes), n_bits=n_bits)

@@ -193,12 +193,16 @@ class DeviceBackend(abc.ABC):
 
     def device_recurrence(self, params: PyTree, cfg, x_seq: jax.Array,
                           key: jax.Array, *, state: Optional[Any] = None,
-                          fused: Optional[bool] = None
+                          fused: Optional[bool] = None,
+                          h0: Optional[jax.Array] = None
                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Run the full MiRU hidden recurrence (eqs. 1-2) on this
         substrate over ``x_seq`` (B, T, n_x). ``cfg`` is a
         :class:`repro.core.miru.MiRUConfig`-shaped record (beta, lam,
         n_h, dtype). Returns (h_all, h_prev, pre), each (B, T, n_h).
+        ``h0`` (B, n_h) resumes the recurrence from a carried hidden
+        state (the serve engine's state slab); None starts from zeros —
+        the training forward's convention.
 
         The default is the per-timestep scan: two ``device_vmm`` calls
         and one ``device_readout`` per step, PRNG key split 3-way per
@@ -231,7 +235,8 @@ class DeviceBackend(abc.ABC):
             h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
             return (h_new, k), (h_new, h, pre)
 
-        h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
+        if h0 is None:
+            h0 = jnp.zeros((B, cfg.n_h), cfg.dtype)
         with self.telemetry.scaled(T):
             (_, _), (h_all, h_prev, pre) = jax.lax.scan(
                 step, (h0, key), jnp.swapaxes(x_seq, 0, 1))

@@ -185,7 +185,7 @@ class WBSBackend(DeviceBackend):
                 and self.spec.adc_bits is not None)
 
     def device_recurrence(self, params, cfg, x_seq, key, *,
-                          state=None, fused=None):
+                          state=None, fused=None, h0=None):
         """Fused WBS×MiRU recurrence: ONE batched crossbar call for the
         input projection (no sequential dependency) + one kernel for the
         sequential part with ``u_h`` and ``h`` VMEM-resident across all
@@ -198,7 +198,8 @@ class WBSBackend(DeviceBackend):
         use_fused = self.fused_recurrence if fused is None else fused
         if not (use_fused and self._fused_recurrence_ok(state)):
             return super().device_recurrence(params, cfg, x_seq, key,
-                                             state=state, fused=fused)
+                                             state=state, fused=fused,
+                                             h0=h0)
         from repro.kernels import ops as kops
         B, T, _ = x_seq.shape
         n_bits = self.spec.input_bits or 8
@@ -221,7 +222,7 @@ class WBSBackend(DeviceBackend):
         drive = _ste_matmul(jax.lax.stop_gradient(drive), x_seq,
                             params["w_h"])
         h_all, h_prev, pre = kops.wbs_miru_scan(
-            drive, params["u_h"], params["b_h"], beta=cfg.beta,
+            drive, params["u_h"], params["b_h"], h0, beta=cfg.beta,
             lam=cfg.lam, n_bits=n_bits, adc_bits=self.spec.adc_bits,
             adc_range=self.spec.adc_range, weight_scale=scale,
             gains=gains_u, use_kernel=self.use_kernel)

@@ -1,4 +1,27 @@
-"""Serving: batched decode engine."""
-from repro.serve.engine import ServeEngine, ServeConfig
+"""Serving: batched LM decode + continuous-batching recurrent streams.
 
-__all__ = ["ServeEngine", "ServeConfig"]
+Two engines share the slot/continuous-batching pattern:
+
+  * :class:`ServeEngine` — token-by-token LM decode over a KV-cache
+    slab (the model-zoo serving path).
+  * :class:`RecurrentServeEngine` — stateful MiRU streams over a
+    :class:`StateSlab` of per-user hidden vectors with LRU host spill,
+    driven by the deterministic traffic in :mod:`repro.serve.loadgen`.
+
+See ``docs/serving.md``.
+"""
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.loadgen import (Arrival, TrafficSpec, make_arrivals,
+                                 replay, request_frames)
+from repro.serve.recurrent import (RecurrentServeConfig,
+                                   RecurrentServeEngine, StreamRequest,
+                                   serve_backend)
+from repro.serve.slab import SlabFullError, StateSlab
+
+__all__ = [
+    "ServeEngine", "ServeConfig",
+    "RecurrentServeEngine", "RecurrentServeConfig", "StreamRequest",
+    "serve_backend",
+    "StateSlab", "SlabFullError",
+    "TrafficSpec", "Arrival", "make_arrivals", "request_frames", "replay",
+]

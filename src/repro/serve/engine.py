@@ -21,7 +21,7 @@ import contextlib
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Optional, Union
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +57,10 @@ class ServeConfig:
     # per prefill) so the serve loop shows up in trace.json next to the
     # training runners' compile/execute spans. None is free.
     tracer: Optional[Any] = None
+    # Injectable wall clock (seconds). Every latency-relevant timestamp
+    # (t_submit / t_admit / t_done) and all three histograms read only
+    # this — tests script it and assert exact percentiles.
+    clock: Callable[[], float] = time.perf_counter
 
 
 @dataclasses.dataclass
@@ -66,10 +70,12 @@ class Request:
     max_new: int = 32
     tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # Observability: submit/finish wall-clock and the number of decode
-    # dispatches this request consumed (prefill + generated tokens) —
-    # the per-request share of the metered energy.
+    # Observability: submit/admit/finish wall-clock (per ServeConfig's
+    # injectable clock) and the number of decode dispatches this request
+    # consumed (prefill + generated tokens) — the per-request share of
+    # the metered energy.
     t_submit: float = 0.0
+    t_admit: float = 0.0
     t_done: float = 0.0
     steps: int = 0
 
@@ -123,10 +129,13 @@ class ServeEngine:
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self.steps_run = 0
         # Per-request observability (repro.obs): end-to-end latency
-        # histogram (submit → done, ms) and the finished requests'
+        # (submit → done), its queue-wait (submit → admit) / decode
+        # (admit → done) split, all in ms, and the finished requests'
         # decode-step shares for pJ/request attribution.
         from repro.obs import Histogram
         self.latency = Histogram()
+        self.queue_wait = Histogram()
+        self.decode = Histogram()
         self._finished: list[Request] = []
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
@@ -140,7 +149,7 @@ class ServeEngine:
     def submit(self, prompt: list[int], max_new: int = 32) -> Request:
         req = Request(rid=len(self.queue) + 1000 * self.steps_run,
                       prompt=list(prompt), max_new=max_new)
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.scfg.clock()
         if self._t_first_submit is None:
             self._t_first_submit = req.t_submit
         self.queue.append(req)
@@ -153,9 +162,10 @@ class ServeEngine:
 
     def _finish(self, req: Request) -> None:
         req.done = True
-        req.t_done = time.perf_counter()
+        req.t_done = self.scfg.clock()
         self._t_last_done = req.t_done
         self.latency.add((req.t_done - req.t_submit) * 1e3)
+        self.decode.add((req.t_done - req.t_admit) * 1e3)
         self._finished.append(req)
 
     def _admit(self) -> None:
@@ -164,6 +174,8 @@ class ServeEngine:
                 req = self.queue.popleft()
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = 0
+                req.t_admit = self.scfg.clock()
+                self.queue_wait.add((req.t_admit - req.t_submit) * 1e3)
                 # Prefill the prompt token-by-token through the decode
                 # path (single compiled executable; a production engine
                 # adds a chunked-prefill fast path).
@@ -253,17 +265,24 @@ class ServeEngine:
           sequences_per_s  completed / (last done − first submit)
           tokens_per_s     generated tokens over the same window
 
-        With ``model`` (a :class:`repro.analog.costmodel.M2RUCostModel`)
-        and a metered substrate, adds ``energy``: the run's metered
+        On a metered substrate, adds ``energy``: the run's metered
         joules and a pJ/request distribution — each finished request is
         charged its share of the total by decode-dispatch count
         (prefill + generated tokens), the allocation unit the batched
-        engine actually dispatches.
+        engine actually dispatches. ``model`` picks the energy model:
+        None defaults to a transformer-shape
+        :class:`repro.analog.costmodel.DenseCostModel` of the served
+        architecture (adding metered power and GOPS/W); an
+        :class:`~repro.analog.costmodel.M2RUCostModel` charges the M2RU
+        chip geometry (falling back to per-op energy where the LM
+        workload's tags don't map onto it).
         """
         out: dict[str, Any] = {
             "requests": len(self._finished),
             "steps_run": self.steps_run,
             "latency_ms": self.latency.summary(),
+            "queue_wait_ms": self.queue_wait.summary(),
+            "decode_ms": self.decode.summary(),
         }
         if self._finished and self._t_last_done is not None:
             span = self._t_last_done - self._t_first_submit
@@ -274,27 +293,41 @@ class ServeEngine:
                 else float("inf")
             out["tokens_generated"] = n_tok
         tele = self.telemetry
-        if model is not None and tele is not None and tele.enabled \
-                and self._finished:
+        if tele is not None and tele.enabled and self._finished:
+            from repro.analog.costmodel import DenseCostModel
             from repro.obs import Histogram
             from repro.telemetry.energy import MeteredEnergy
             kind = "cmos" if self.cfg.quant_mode == "cmos" else "analog"
-            en = MeteredEnergy(model)
+            en = MeteredEnergy() if model is None else MeteredEnergy(model)
             counters = tele.snapshot()
-            try:
-                total_j = en.report(counters, kind=kind).energy_j
-            except ValueError:
-                # The workload's meter tags don't map onto the M2RU
-                # chip-geometry cycle model (e.g. LM decode): charge the
-                # metered ops at the model's per-op energy instead.
-                pj_op = model.digital_pj_per_op() if kind == "cmos" \
-                    else model.pj_per_op()
-                total_j = en.ops(counters) * pj_op * 1e-12
+            extra: dict[str, Any] = {}
+            if model is None or isinstance(model, DenseCostModel):
+                # Transformer-shape energy model: the metered dense-tag
+                # activity through the served architecture's crossbar-
+                # mapped projection stack — this is where the model-zoo
+                # serving GOPS/W figure comes from.
+                dm = model if model is not None \
+                    else DenseCostModel.from_model_config(self.cfg)
+                rep = en.dense_report(counters, dm)
+                total_j = rep.energy_j
+                extra = {"power_mw": rep.power_w * 1e3,
+                         "gops_per_w": rep.gops_per_w,
+                         "pj_per_op": rep.pj_per_op}
+            else:
+                try:
+                    total_j = en.report(counters, kind=kind).energy_j
+                except ValueError:
+                    # The workload's meter tags don't map onto the M2RU
+                    # chip-geometry cycle model (e.g. LM decode): charge
+                    # the metered ops at the model's per-op energy.
+                    pj_op = model.digital_pj_per_op() if kind == "cmos" \
+                        else model.pj_per_op()
+                    total_j = en.ops(counters) * pj_op * 1e-12
             total_steps = sum(r.steps for r in self._finished)
             if total_j > 0 and total_steps > 0:
                 pj = Histogram()
                 for r in self._finished:
                     pj.add(total_j * r.steps / total_steps * 1e12)
                 out["energy"] = {"total_j": total_j,
-                                 "pj_per_request": pj.summary()}
+                                 "pj_per_request": pj.summary(), **extra}
         return out

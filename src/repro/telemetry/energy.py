@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Optional
 
-from repro.analog.costmodel import M2RUCostModel
+from repro.analog.costmodel import DenseCostModel, M2RUCostModel
 from repro.telemetry import meters as M
 
 #: Off-chip DRAM access energy for the replay buffer, pJ per byte
@@ -87,7 +87,8 @@ class MeteredEnergy:
     """Fold a :class:`Telemetry` counter snapshot into an
     :class:`EnergyReport` for the M2RU chip geometry in ``model``."""
 
-    def __init__(self, model: Optional[M2RUCostModel] = None):
+    def __init__(self, model: "Optional[M2RUCostModel | DenseCostModel]"
+                 = None):
         self.model = model if model is not None else M2RUCostModel()
 
     # ------------------------------------------------------------------
@@ -166,14 +167,55 @@ class MeteredEnergy:
             sample_steps=_meter(counters, M.SAMPLE_STEPS),
             write_pulses=_meter(counters, M.WRITE_PULSES))
 
+    # ------------------------------------------------------------------
+    def dense_report(self, counters: Mapping[str, int],
+                     model: Optional[DenseCostModel] = None,
+                     tag: str = "dense") -> EnergyReport:
+        """Transformer-shape serving energy: the metered ``dense``-tag
+        activity (every quantized projection in the model zoo's LM
+        layers) charged through a :class:`DenseCostModel` of the served
+        architecture. Iso-throughput like :meth:`cmos_report`: busy time
+        is metered ops over the stack's analytical GOPS, so power,
+        GOPS/W and pJ/op are the model's figures while total energy and
+        time scale with what the engine actually dispatched."""
+        m = model if model is not None else self.model
+        if not isinstance(m, DenseCostModel):
+            raise ValueError(
+                "dense_report needs a DenseCostModel (pass one, or "
+                "construct MeteredEnergy with it); got "
+                f"{type(m).__name__}")
+        ops = 2.0 * _meter(counters, M.MACS, tag)
+        if ops <= 0:
+            raise ValueError(
+                f"telemetry has no metered {tag!r} activity; enable the "
+                "substrate's telemetry before the first step is traced")
+        time_s = ops / (m.gops() * 1e9)
+        brk_w = m.power_breakdown_w()
+        breakdown_j = {k: p * time_s for k, p in brk_w.items()}
+        energy_j = sum(breakdown_j.values())
+        power_w = energy_j / time_s
+        gops = ops / time_s / 1e9
+        token_rows = _meter(counters, M.VMM_ROWS, tag) / m.n_projections
+        return EnergyReport(
+            kind="dense", cycles=token_rows * m.row_cycles(),
+            time_s=time_s, ops=ops, energy_j=energy_j,
+            breakdown_j=breakdown_j, power_w=power_w,
+            power_training_w=power_w, gops=gops,
+            gops_per_w=gops / power_w,
+            pj_per_op=energy_j / ops * 1e12,
+            sample_steps=token_rows,
+            write_pulses=_meter(counters, M.WRITE_PULSES))
+
     def report(self, counters: Mapping[str, int],
                kind: str = "analog") -> EnergyReport:
         if kind == "analog":
             return self.analog_report(counters)
         if kind == "cmos":
             return self.cmos_report(counters)
+        if kind == "dense":
+            return self.dense_report(counters)
         raise ValueError(f"unknown substrate kind {kind!r}; "
-                         "expected 'analog' or 'cmos'")
+                         "expected 'analog', 'cmos' or 'dense'")
 
 
 def efficiency_ratio(analog: EnergyReport, cmos: EnergyReport) -> float:

@@ -1,0 +1,188 @@
+"""Property suite for the serve engine's state slab (serve/slab.py).
+
+Slot-allocator invariants under adversarial op sequences: free-list
+conservation, no double occupancy, LRU book consistency, pin safety —
+plus the serving-critical guarantee that evict → reload round-trips a
+user's hidden state bit-identically.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serve.slab import SlabFullError, StateSlab
+
+N_H = 7
+
+
+def _fill(slab: StateSlab, uid, seed: int) -> np.ndarray:
+    """Write a distinctive full-precision row for ``uid`` and return it."""
+    rng = np.random.default_rng(seed)
+    row = rng.standard_normal(slab.n_h).astype(np.float32)
+    slab.h = slab.h.at[slab.slot(uid)].set(jnp.asarray(row))
+    return row
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit behavior
+# ---------------------------------------------------------------------------
+
+def test_acquire_is_idempotent_and_slots_distinct():
+    slab = StateSlab(4, N_H)
+    slots = {u: slab.acquire(u) for u in "abcd"}
+    assert sorted(slots.values()) == [0, 1, 2, 3]
+    for u in "abcd":
+        assert slab.acquire(u) == slots[u]   # resident: same slot back
+    slab.check()
+    assert slab.n_free == 0
+
+
+def test_new_user_gets_zero_state_even_in_recycled_slot():
+    slab = StateSlab(1, N_H)
+    slab.acquire("a")
+    _fill(slab, "a", seed=0)
+    slab.release("a")                        # departed, state dropped
+    slab.acquire("b")                        # recycles slot 0
+    assert np.array_equal(slab.read("b"), np.zeros(N_H, np.float32))
+
+
+def test_evict_reload_bit_identity():
+    slab = StateSlab(2, N_H)
+    slab.acquire("a")
+    row = _fill(slab, "a", seed=1)
+    slab.evict("a")
+    assert not slab.is_resident("a") and "a" in slab.spilled
+    # Churn the slab while 'a' is spilled.
+    for u in ("b", "c", "d"):
+        slab.acquire(u)
+        _fill(slab, u, seed=hash(u) % 100)
+    slab.acquire("a")
+    assert np.array_equal(slab.read("a"), row)      # bitwise
+    assert slab.reloads == 1
+    slab.check()
+
+
+def test_lru_eviction_order_respects_touch():
+    slab = StateSlab(3, N_H)
+    for u in ("a", "b", "c"):
+        slab.acquire(u)
+    slab.touch("a")                          # a becomes MRU: order b, c, a
+    slab.acquire("d")                        # evicts b (LRU)
+    assert "b" in slab.spilled
+    assert slab.resident == ("c", "a", "d")
+    slab.acquire("e")                        # evicts c
+    assert "c" in slab.spilled
+    slab.check()
+
+
+def test_pinned_streams_are_never_evicted():
+    slab = StateSlab(2, N_H)
+    slab.acquire("a")
+    slab.pin("a")
+    slab.acquire("b")
+    slab.pin("b")
+    assert not slab.can_acquire("c")
+    with pytest.raises(SlabFullError):
+        slab.acquire("c")
+    slab.unpin("a")                          # a unpinned → evictable
+    assert slab.can_acquire("c")
+    slab.acquire("c")
+    assert "a" in slab.spilled and slab.is_resident("b")
+    slab.check()
+
+
+def test_pin_non_resident_raises():
+    slab = StateSlab(2, N_H)
+    with pytest.raises(KeyError):
+        slab.pin("ghost")
+    slab.acquire("a")
+    slab.evict("a")
+    with pytest.raises(KeyError):
+        slab.pin("a")                        # spilled is not resident
+
+
+def test_evict_pinned_raises_and_release_unpins():
+    slab = StateSlab(2, N_H)
+    slab.acquire("a")
+    slab.pin("a")
+    with pytest.raises(ValueError):
+        slab.evict("a")
+    slab.release("a")                        # release drops the pin too
+    slab.acquire("b")
+    slab.pin("b")
+    slab.check()
+    assert slab.n_free == 1
+
+
+# ---------------------------------------------------------------------------
+# Property: invariants hold under adversarial op sequences
+# ---------------------------------------------------------------------------
+
+_OPS = ("acquire", "release", "evict", "pin", "unpin", "touch")
+
+
+@settings(max_examples=12)
+@given(st.integers(1, 5), st.integers(0, 10_000), st.data())
+def test_slab_invariants_under_random_ops(n_slots, seed, data):
+    """Any sequence of slab operations preserves the structural
+    invariants: every slot free xor occupied by exactly one uid, the LRU
+    book tracks exactly the resident set, spilled ∩ resident = ∅,
+    pinned ⊆ resident — and eviction round-trips state bitwise."""
+    rng = np.random.default_rng(seed)
+    slab = StateSlab(n_slots, N_H)
+    uids = [f"u{i}" for i in range(2 * n_slots + 2)]
+    shadow: dict = {}                       # uid → expected row
+    for step in range(40):
+        op = _OPS[int(rng.integers(len(_OPS)))]
+        uid = uids[int(rng.integers(len(uids)))]
+        if op == "acquire":
+            if slab.can_acquire(uid):
+                was_tracked = slab.is_resident(uid) or uid in slab.spilled
+                slab.acquire(uid)
+                if not was_tracked:
+                    # fresh residency: give it a distinctive row
+                    shadow[uid] = _fill(slab, uid, seed=step)
+            else:
+                with pytest.raises(SlabFullError):
+                    slab.acquire(uid)
+        elif op == "release":
+            slab.release(uid)
+            shadow.pop(uid, None)
+        elif op == "evict":
+            if slab.is_resident(uid) and uid not in slab._pinned:
+                slab.evict(uid)
+        elif op == "pin":
+            if slab.is_resident(uid):
+                slab.pin(uid)
+        elif op == "unpin":
+            slab.unpin(uid)
+        elif op == "touch":
+            if slab.is_resident(uid):
+                slab.touch(uid)
+        slab.check()
+        # the uid the op touched keeps its state bitwise
+        if uid in shadow and (slab.is_resident(uid) or uid in slab.spilled):
+            assert np.array_equal(slab.read(uid), shadow[uid]), \
+                f"state of {uid} corrupted by {op}"
+    # final sweep: every surviving uid's state is bit-identical
+    for u, row in shadow.items():
+        if slab.is_resident(u) or u in slab.spilled:
+            assert np.array_equal(slab.read(u), row), \
+                f"state of {u} corrupted by churn"
+
+
+@settings(max_examples=8)
+@given(st.integers(1, 4), st.integers(0, 10_000))
+def test_free_list_conservation_under_churn(n_slots, seed):
+    """#free + #resident == n_slots at every point, and acquire after
+    arbitrary churn always succeeds while any slot is unpinned."""
+    rng = np.random.default_rng(seed)
+    slab = StateSlab(n_slots, N_H)
+    for i in range(60):
+        uid = f"u{int(rng.integers(0, 3 * n_slots))}"
+        if rng.integers(2) and slab.is_resident(uid):
+            slab.release(uid)
+        else:
+            slab.acquire(uid)               # nothing pinned: always room
+        assert slab.n_free + len(slab.resident) == slab.n_slots
+        slab.check()
