@@ -18,6 +18,14 @@ Fig. 4 hardware runs: 8-bit WBS drive, 8-bit ADC, 2 % plane-gain
 variability, 10 % write variability, |w| ≤ 1.5. Read variability is
 carried by the plane gains by default (``read_sigma=0``); set
 ``crossbar.read_sigma`` to add per-access conductance noise on top.
+
+Fault injection (``DeviceSpec.faults``, see ``docs/faults.md``) rides
+the shared WBS/base paths: stuck-cell masks apply to the logical
+weights *before* the per-access read-noise perturbation (a stuck
+device's conductance still jitters cycle to cycle), writes aimed at
+stuck cells are rejected before the write-noise draw (no pulse, no
+endurance cost), and per-access read noise continues to force the
+per-step recurrence path exactly as it does without faults.
 """
 from __future__ import annotations
 

@@ -39,6 +39,8 @@ from repro.backends.analog import AnalogBackend
 from repro.backends.base import DeviceSpec, PyTree
 from repro.backends.registry import register_backend
 from repro.backends.wbs import WBSBackend, _ste_matmul
+from repro.faults.model import (apply_cell_faults, fault_state,
+                                sample_fault_state)
 from repro.telemetry import meters
 
 
@@ -104,6 +106,14 @@ class AnalogStateBackend(AnalogBackend):
         if het:
             state["_het"] = {k: jnp.asarray(v, jnp.float32)
                              for k, v in het.items()}
+        if self.spec.faults is not None:
+            # Fault masks ride next to the pairs (same vehicle as _het);
+            # the sampler folds its own salt, so the mask stream is
+            # disjoint from the programming keys above.
+            fkey = key if key is not None else jax.random.PRNGKey(0)
+            state["_faults"] = sample_fault_state(
+                params, fkey, self.spec.faults,
+                sa1_value=self._fault_value_scale())
         return state
 
     # ------------------------------------------------------------------
@@ -138,6 +148,12 @@ class AnalogStateBackend(AnalogBackend):
                     * (1.0 + sigma
                        * jax.random.normal(kn, pair["g_neg"].shape))}
         w_eff = pair_weights(pair, cb)
+        fstate = fault_state(state)
+        if fstate is not None and tag in fstate:
+            # Stuck cells override the conductance read-back itself —
+            # the pairs may keep drifting underneath, but the column
+            # current contribution is pinned at the stuck value.
+            w_eff = apply_cell_faults(w_eff, fstate[tag])
         # WBS bit-streaming + plane gains over the device read-back; the
         # outer STE routes gradients to the trainer's logical weights.
         y = WBSBackend.vmm(self, drive, w_eff, k_gain)

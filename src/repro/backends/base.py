@@ -48,6 +48,9 @@ import numpy as np
 
 from repro.analog.crossbar import CrossbarSpec
 from repro.analog.endurance import EnduranceTracker
+from repro.faults.model import (FaultSpec, advance_wear, apply_cell_faults,
+                                apply_read_upsets, fault_state,
+                                mask_updates, sample_fault_state)
 from repro.telemetry.meters import Telemetry
 
 PyTree = dict[str, jax.Array]
@@ -70,6 +73,12 @@ class DeviceSpec:
 
     Bookkeeping:
       track_endurance  attach an :class:`EnduranceTracker` to the backend.
+
+    Fault injection:
+      faults        a :class:`repro.faults.FaultSpec` — stuck cells, dead
+                    lines, read upsets, endurance wear-out. None (the
+                    default) keeps every traced program bitwise identical
+                    to a fault-free build; see ``docs/faults.md``.
     """
     input_bits: Optional[int] = None
     adc_bits: Optional[int] = None
@@ -78,6 +87,7 @@ class DeviceSpec:
     weight_clip: Optional[float] = None
     crossbar: Optional[CrossbarSpec] = None
     track_endurance: bool = False
+    faults: Optional[FaultSpec] = None
 
 
 class DeviceBackend(abc.ABC):
@@ -141,8 +151,19 @@ class DeviceBackend(abc.ABC):
                           key: Optional[jax.Array] = None
                           ) -> Optional[Any]:
         """Build the substrate's physical state for ``params`` (e.g.
-        programmed conductance pairs). Stateless substrates return None."""
-        return None
+        programmed conductance pairs). Stateless substrates return None —
+        unless the spec carries a :class:`FaultSpec`, in which case the
+        sampled fault masks ride the state under ``"_faults"``."""
+        if self.spec.faults is None:
+            return None
+        fkey = key if key is not None else jax.random.PRNGKey(0)
+        return {"_faults": sample_fault_state(
+            params, fkey, self.spec.faults,
+            sa1_value=self._fault_value_scale())}
+
+    def _fault_value_scale(self) -> float:
+        """Logical magnitude a stuck-at-G_on (SA1) cell reads as."""
+        return self.spec.weight_clip or 1.0
 
     # ------------------------------------------------------------------
     # Metered entry points (what the trainers/forwards call)
@@ -174,7 +195,17 @@ class DeviceBackend(abc.ABC):
         energy model can apply the chip's concurrency structure.
         ``prepared`` is a :meth:`prepare_weights` result hoisted by the
         caller (same forward, same params) — substrates consume their own
-        entries and must stay bit-identical without them."""
+        entries and must stay bit-identical without them.
+
+        When the device state carries fault masks (``"_faults"``), the
+        logical weights are read through their stuck-cell mask here —
+        one masked tensor feeds both the compute and the STE gradient
+        path, so gradients at stuck cells vanish automatically. Masking
+        is a projection (idempotent), so substrates that also mask in
+        :meth:`prepare_weights` stay bit-identical."""
+        fstate = fault_state(state)
+        if fstate is not None and tag in fstate:
+            weights = apply_cell_faults(weights, fstate[tag])
         y = self._vmm_impl(drive, weights, key, state, tag, prepared)
         self.telemetry.meter_vmm(drive, weights, self.spec.input_bits, tag)
         return y
@@ -219,10 +250,20 @@ class DeviceBackend(abc.ABC):
         # kernel padding) out of the scan body — the per-step path
         # otherwise re-derives it T times per forward.
         prepared = self.prepare_weights(params, state=state)
+        # Transient read upsets (per-access ADC corruption) need one
+        # extra key per step. The split widens to 4-way only when upsets
+        # are actually active, so zero-fault programs keep the exact
+        # 3-way chain — the bitwise zero-fault contract.
+        upset_rate = self.spec.faults.upset_rate \
+            if (self.spec.faults is not None
+                and fault_state(state) is not None) else 0.0
 
         def step(carry, x_t):
             h, k = carry
-            k, k1, k2 = jax.random.split(k, 3)
+            if upset_rate > 0:
+                k, k1, k2, k3 = jax.random.split(k, 4)
+            else:
+                k, k1, k2 = jax.random.split(k, 3)
             pre = self.device_vmm(x_t, params["w_h"], k1,
                                   state=state, tag="w_h",
                                   prepared=prepared) \
@@ -231,6 +272,9 @@ class DeviceBackend(abc.ABC):
                                   prepared=prepared) \
                 + params["b_h"]
             pre = self.device_readout(pre)
+            if upset_rate > 0:
+                pre = apply_read_upsets(pre, k3, upset_rate,
+                                        self.spec.adc_range)
             h_tilde = jnp.tanh(pre)
             h_new = cfg.lam * h + (1.0 - cfg.lam) * h_tilde
             return (h_new, k), (h_new, h, pre)
@@ -250,8 +294,26 @@ class DeviceBackend(abc.ABC):
         """``apply_update`` that also advances the device state. Write
         pulses are metered later, host-side, in :meth:`record_endurance`
         (only nonzero applied updates cost pulses — a data-dependent
-        count that cannot be derived at trace time)."""
-        return self._apply_update_impl(params, updates, key, state)
+        count that cannot be derived at trace time).
+
+        Under fault masks, write pulses aimed at stuck cells are zeroed
+        before they reach the substrate (a stuck device rejects
+        programming — it must not cost pulses or endurance either), and
+        with wear-out enabled the per-cell write counters advance on the
+        applied updates, converting exhausted cells into stuck cells for
+        every subsequent read."""
+        fspec = self.spec.faults
+        fstate = fault_state(state)
+        if fstate is not None:
+            updates = mask_updates(updates, fstate)
+        new_params, applied, state = self._apply_update_impl(
+            params, updates, key, state)
+        if fstate is not None and fspec is not None and fspec.wearout:
+            state = dict(state)
+            state["_faults"] = advance_wear(
+                fstate, applied, fspec, new_params,
+                sa1_value=self._fault_value_scale())
+        return new_params, applied, state
 
     def _apply_update_impl(self, params, updates, key, state):
         new_params, applied = self.apply_update(params, updates, key)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.analog.wbs import WBSSpec, ideal_gains, wbs_vmm
 from repro.backends.base import DeviceBackend, DeviceSpec, PyTree
 from repro.backends.registry import register_backend
+from repro.faults.model import apply_cell_faults, fault_state
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +96,11 @@ class WBSBackend(DeviceBackend):
     def _weight_scale(self) -> float:
         return self.spec.weight_clip if self.spec.weight_clip else 1.0
 
+    def _fault_value_scale(self) -> float:
+        # SA1 cells saturate at the logical dynamic range (the analog
+        # family derives it from the crossbar spec via _weight_scale).
+        return self._weight_scale()
+
     def _sample_gains(self, key: Optional[jax.Array]) -> jax.Array:
         n_bits = self.spec.input_bits or 8
         gains = ideal_gains(n_bits)
@@ -111,8 +117,11 @@ class WBSBackend(DeviceBackend):
         kernel wrapper otherwise re-applies per call. Entries are keyed
         by parameter name ≡ crossbar tag; each is bit-identical to the
         per-call derivation (same ops, same operands), so consuming them
-        cannot change results."""
-        del state
+        cannot change results. Fault masks (``state["_faults"]``) apply
+        *before* the scale division — the same masked tensor
+        ``device_vmm`` derives per call, so prepared-vs-unprepared stays
+        bit-identical under faults too."""
+        fstate = fault_state(state)
         scale = self._weight_scale()
         use_kernel = self.use_kernel if self.use_kernel is not None \
             else jax.default_backend() != "cpu"
@@ -120,6 +129,8 @@ class WBSBackend(DeviceBackend):
         for name, p in params.items():
             if jnp.ndim(p) < 2:
                 continue
+            if fstate is not None and name in fstate:
+                p = apply_cell_faults(p, fstate[name])
             w = p / scale
             entry = {"w": w}
             if use_kernel:
@@ -180,8 +191,20 @@ class WBSBackend(DeviceBackend):
         bit-identical to the per-step scan; without it (the cmos digital
         accumulator), sub-LSB fp scheduling differences between the two
         program shapes survive, so those substrates keep the per-step
-        path."""
-        return (state is None and self.spec.input_bits is not None
+        path.
+
+        A device state that carries *only* fault masks does not block
+        fusion — static stuck-cell masks apply to the logical weights
+        before they enter either path, so the two stay bit-identical
+        under faults. Transient read upsets do block it (they draw a
+        fresh per-step corruption inside the scan)."""
+        masks_only = state is None or (isinstance(state, dict)
+                                       and not (set(state) - {"_faults"}))
+        upsets = (self.spec.faults is not None
+                  and self.spec.faults.upset_rate > 0
+                  and fault_state(state) is not None)
+        return (masks_only and not upsets
+                and self.spec.input_bits is not None
                 and self.spec.adc_bits is not None)
 
     def device_recurrence(self, params, cfg, x_seq, key, *,
@@ -201,6 +224,15 @@ class WBSBackend(DeviceBackend):
                                              state=state, fused=fused,
                                              h0=h0)
         from repro.kernels import ops as kops
+        fstate = fault_state(state)
+        if fstate is not None:
+            # Read the logical weights through their stuck-cell masks up
+            # front — the identical masked tensors the per-step path
+            # derives in prepare_weights/device_vmm, so fused-vs-per-step
+            # stays bitwise identical under faults.
+            params = {n: (apply_cell_faults(p, fstate[n])
+                          if n in fstate else p)
+                      for n, p in params.items()}
         B, T, _ = x_seq.shape
         n_bits = self.spec.input_bits or 8
         scale = self._weight_scale()

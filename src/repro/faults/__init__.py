@@ -1,0 +1,22 @@
+"""Device-fault injection and graceful degradation (``docs/faults.md``).
+
+Fault masks ride the device-state pytree (the ``"_faults"`` key) like
+the fleet heterogeneity overlay: jit-traced, vmappable over a fleet
+axis, scan-carried through compiled runs. Attach a :class:`FaultSpec`
+to a backend's ``DeviceSpec(faults=...)`` to enable injection; leave it
+None and every program is bitwise identical to a fault-free build.
+"""
+from repro.faults.mitigate import (calibration_drives, compensate_bias,
+                                   march_recover, recalibrate,
+                                   remap_columns)
+from repro.faults.model import (FaultSpec, advance_wear, apply_cell_faults,
+                                apply_read_upsets, effective_masks,
+                                fault_state, mask_updates,
+                                sample_fault_state, stuck_fraction)
+
+__all__ = [
+    "FaultSpec", "advance_wear", "apply_cell_faults", "apply_read_upsets",
+    "calibration_drives", "compensate_bias", "effective_masks",
+    "fault_state", "march_recover", "mask_updates", "recalibrate",
+    "remap_columns", "sample_fault_state", "stuck_fraction",
+]

@@ -1,0 +1,187 @@
+"""Fault detection + graceful degradation for crossbar substrates.
+
+Three composable layers, in the order a real controller would run them:
+
+  march_recover     write/read-back self-test that *recovers* the
+                    stuck-cell map without being told where the faults
+                    are: program a test pattern, read it back through
+                    the device stack, flag deviating cells.
+  remap_columns     redundant-column repair: retire the worst faulty
+                    logical columns onto the tile's spare columns
+                    (``FaultSpec.n_spare_cols``) by rewriting the
+                    column map. Pure metadata — no device writes.
+  compensate_bias   compensation re-programming: fold each stuck cell's
+                    expected pre-activation error (under calibration
+                    drive statistics) into the healthy digital bias
+                    registers, cancelling the fault's mean effect.
+  recalibrate       a short burst of continued on-chip training with the
+                    masks active, letting the healthy cells re-learn
+                    around whatever remains.
+
+``benchmarks/fault_bench.py`` gates the stack end to end: at 1 % stuck
+cells the mitigated model must recover at least half of the accuracy the
+unmitigated faulty model lost.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.model import effective_masks, fault_state
+
+
+# ---------------------------------------------------------------------------
+# Detection — march-style write/read-back self-test
+# ---------------------------------------------------------------------------
+
+def march_recover(backend, params: dict, state: Any, *,
+                  probe: Optional[float] = None,
+                  tol: Optional[float] = None) -> dict:
+    """Recover the stuck-cell map of every crossbar tile by self-test.
+
+    March element: program the whole tile to ``-probe``, read back with
+    one-hot drives (each output element isolates one cell), then repeat
+    at ``+probe``. A healthy cell tracks the programmed value through
+    the WBS/ADC stack to within quantization tolerance; a stuck cell
+    returns the same conductance both times, so it deviates on at least
+    one read. The recovered per-cell value is the mean of the two reads
+    — for a stuck cell, both reads *are* the stuck value.
+
+    Reads go through ``device_vmm`` with a state that carries only the
+    fault masks, so the probe pattern (not the programmed pairs) is what
+    the substrate quantizes — this is the "write" half of the march for
+    conductance-domain backends too. Deterministic: no PRNG key, so
+    plane gains are ideal and read noise is off during the test."""
+    fstate = fault_state(state)
+    v = probe if probe is not None \
+        else 0.5 * backend._fault_value_scale()
+    if tol is None:
+        tol = 0.25 * v
+    probe_state = None if fstate is None else {"_faults": fstate}
+    recovered = {}
+    for name in sorted(params):
+        p = params[name]
+        if jnp.ndim(p) < 2:
+            continue
+        if fstate is not None and name not in fstate:
+            continue
+        eye = jnp.eye(p.shape[0], dtype=p.dtype)
+        w_lo = jnp.full(p.shape, -v, p.dtype)
+        w_hi = jnp.full(p.shape, +v, p.dtype)
+        r_lo = backend.device_vmm(eye, w_lo, state=probe_state, tag=name)
+        r_hi = backend.device_vmm(eye, w_hi, state=probe_state, tag=name)
+        bad = (jnp.abs(r_lo + v) > tol) | (jnp.abs(r_hi - v) > tol)
+        val = jnp.where(bad, 0.5 * (r_lo + r_hi), 0.0).astype(jnp.float32)
+        recovered[name] = {"stuck": bad, "value": val}
+    return recovered
+
+
+# ---------------------------------------------------------------------------
+# Mitigation 1 — redundant-column remap
+# ---------------------------------------------------------------------------
+
+def remap_columns(fstate: dict) -> dict:
+    """Retire the faultiest logical columns onto spare columns.
+
+    Greedy host-side assignment: columns ranked by stuck-cell count,
+    spares ranked by their own (spares can be born faulty too); a column
+    is remapped only onto a strictly healthier spare. Each spare is
+    consumed at most once — the column map stays injective (property-
+    tested). Tiles without spares pass through unchanged."""
+    out = {}
+    for name, tile in fstate.items():
+        if "colmap" not in tile:
+            out[name] = tile
+            continue
+        stuck = np.asarray(tile["stuck"])
+        sp = np.asarray(tile["spare_stuck"])
+        n_out = stuck.shape[1]
+        col_bad = stuck.sum(axis=0)
+        sp_bad = sp.sum(axis=0)
+        spares = list(np.argsort(sp_bad, kind="stable"))
+        colmap = np.arange(n_out, dtype=np.int32)
+        for j in np.argsort(-col_bad, kind="stable"):
+            if not spares or col_bad[j] == 0:
+                break
+            s = spares[0]
+            if sp_bad[s] >= col_bad[j]:
+                break
+            spares.pop(0)
+            colmap[j] = n_out + s
+        out[name] = {**tile, "colmap": jnp.asarray(colmap)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mitigation 2 — compensation re-programming (healthy bias registers)
+# ---------------------------------------------------------------------------
+
+def calibration_drives(backend, params: dict, cfg, x_calib: jax.Array,
+                       key: jax.Array, state: Any = None) -> dict:
+    """Mean drive vector per hidden tile under a calibration batch:
+    the input stream's feature means for ``w_h`` and the faulty
+    forward's mean recurrent drive (β·h) for ``u_h``."""
+    _, h_prev, _ = backend.device_recurrence(params, cfg, x_calib, key,
+                                             state=state)
+    d_x = jnp.mean(x_calib.reshape(-1, x_calib.shape[-1]), axis=0)
+    d_h = cfg.beta * jnp.mean(h_prev.reshape(-1, h_prev.shape[-1]),
+                              axis=0)
+    return {"w_h": d_x, "u_h": d_h}
+
+
+def compensate_bias(params: dict, fstate: dict, drives: dict) -> dict:
+    """Cancel each stuck cell's expected pre-activation contribution by
+    re-programming the healthy digital bias registers:
+
+        b_h[j] -= sum_i  d̄_i · (v_ij − w_ij)   over stuck cells (i, j)
+
+    where d̄ is the tile's calibration drive mean and v the stuck value.
+    First-order mean compensation — residual variance is what
+    :func:`recalibrate` cleans up."""
+    delta = jnp.zeros_like(params["b_h"])
+    for tag, d in drives.items():
+        tile = fstate.get(tag)
+        if tile is None or tag not in params:
+            continue
+        stuck, value = effective_masks(tile)
+        err = jnp.sum(jnp.where(stuck,
+                                (value.astype(params[tag].dtype)
+                                 - params[tag]) * d[:, None], 0.0),
+                      axis=0)
+        delta = delta + err
+    out = dict(params)
+    out["b_h"] = params["b_h"] - delta
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mitigation 3 — recalibration (continued on-chip training under faults)
+# ---------------------------------------------------------------------------
+
+def recalibrate(cfg, trainer, backend, params: dict, state: Any, task, *,
+                steps: int = 8, seed: int = 0):
+    """Run ``steps`` continued training batches with the fault masks
+    active. Writes aimed at stuck cells are rejected by the device layer
+    (``mask_updates``), so only healthy cells move — the network learns
+    around its faults. Returns (params, state)."""
+    from repro.core.continual import _init_run, _make_raw_steps
+
+    train_step, _, opt = _make_raw_steps(cfg, trainer, backend)
+    _, _, psi, _ = _init_run(cfg, trainer, backend)
+    opt_state = opt.init(params) if trainer.algo == "adam" \
+        else {"psi": psi}
+    k = jax.random.PRNGKey(seed)
+    n = task.x_train.shape[0]
+    B = min(trainer.batch_size, n)
+    for _ in range(steps):
+        k, k_step, k_batch = jax.random.split(k, 3)
+        idx = jax.random.choice(k_batch, n, (B,), replace=False)
+        x = jnp.asarray(task.x_train[np.asarray(idx)])
+        y = jnp.asarray(task.y_train[np.asarray(idx)])
+        params, opt_state, _, applied, state = train_step(
+            params, opt_state, k_step, x, y, state)
+        backend.record_endurance(jax.device_get(applied))
+    return params, state

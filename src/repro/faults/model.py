@@ -1,0 +1,297 @@
+"""Device-fault models — jit-compatible fault masks for crossbar tiles.
+
+The paper's 12.2-year lifetime number is an analytical projection from
+per-cell write counts (``analog/endurance.lifespan_years``). This module
+supplies the missing empirical half: what the network actually computes
+when devices *fail*. Faults are represented as a pytree of per-tile masks
+carried in the device-state dict under the ``"_faults"`` key — the same
+vehicle the fleet heterogeneity overlay (``"_het"``) rides — so they are
+traced, vmappable over a fleet axis, and scan-carried through a compiled
+run.
+
+Fault taxonomy (all rates are independent per-cell/row/column Bernoulli
+probabilities, sampled once per device from a PRNG key):
+
+  SA0   stuck-at-G_off — the cell reads logical 0 and rejects writes.
+  SA1   stuck-at-G_on — the cell reads ``±sa1_value`` (the logical
+        dynamic range) with a random sign, and rejects writes.
+  dead row / dead column — driver or line failure: every cell on the
+        line reads 0 (a short to the reference column current).
+  transient read upsets — per-access, per-element ADC latch corruption:
+        with probability ``upset_rate`` an output element is replaced by
+        a uniform draw over the ADC full scale. Transient faults leave
+        no state behind and force the per-step recurrence path (the
+        fused kernel cannot draw per-step upsets).
+  wear-out — endurance exhaustion: each cell carries a write counter and
+        a lognormally-sampled endurance limit; when the counter crosses
+        the limit mid-run the cell becomes stuck (mode-selectable), so a
+        long training run produces an empirical accuracy-vs-age curve to
+        hold against the ``lifespan_years`` projection.
+
+Mask contract (enforced by tests and BENCH_faults gates):
+
+  * zero-fault configurations (``DeviceSpec.faults is None``) never
+    construct masks — the traced program is *byte-identical* to a build
+    without this module;
+  * a zero-rate :class:`FaultSpec` produces all-False masks whose
+    application is bitwise identity;
+  * applying a mask is idempotent (``where(stuck, v, ·)`` is a
+    projection), so read-side and prepare-side masking may compose;
+  * the same masked weight tensor feeds the per-step and fused
+    recurrence paths, so fused-vs-per-step stays bitwise identical
+    *under* faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Key-derivation salt for fault-mask sampling — folds the backend's
+# device-state key into a stream disjoint from conductance programming
+# (analog_state's split chain) and the fleet overlays.
+_FAULT_SALT = 0xFA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fault-injection knobs for a :class:`repro.backends.base.DeviceSpec`.
+
+    Static-mask rates (sampled once per device at state init):
+      sa0_rate        per-cell stuck-at-G_off probability.
+      sa1_rate        per-cell stuck-at-G_on probability (random sign).
+      dead_row_rate   per-row driver-failure probability.
+      dead_col_rate   per-column line-failure probability (spare columns
+                      included — spares can be born dead).
+      n_spare_cols    redundant columns per tile available to the
+                      remap mitigation (0 = no redundancy).
+
+    Transient faults:
+      upset_rate      per-access, per-element read-upset probability.
+
+    Endurance wear-out:
+      wearout             enable per-cell write counters + limits.
+      wearout_endurance   mean endurance limit (writes per cell).
+      wearout_spread      lognormal sigma of the per-cell limit draw.
+      wearout_scale       age acceleration: one training write advances
+                          the counter by this many physical writes, so a
+                          short run sweeps a multi-year virtual age.
+      wearout_mode        what a worn cell reads: "sa0" (G_off), "sa1"
+                          (±range, sign of the last value) or "freeze"
+                          (stuck at the last written value).
+
+    Fleet propagation (consumed by ``fleet/heterogeneity.py``):
+      rate_spread     lognormal sigma of a per-chip multiplier on the
+                      static-mask rates (mean-preserving).
+      dead_chip_rate  per-chip probability that the whole die is dead
+                      (every cell stuck at 0).
+    """
+    sa0_rate: float = 0.0
+    sa1_rate: float = 0.0
+    dead_row_rate: float = 0.0
+    dead_col_rate: float = 0.0
+    n_spare_cols: int = 0
+    upset_rate: float = 0.0
+    wearout: bool = False
+    wearout_endurance: float = 1e9
+    wearout_spread: float = 0.3
+    wearout_scale: float = 1.0
+    wearout_mode: str = "sa0"
+    rate_spread: float = 0.0
+    dead_chip_rate: float = 0.0
+
+    def any_static(self) -> bool:
+        return (self.sa0_rate > 0 or self.sa1_rate > 0
+                or self.dead_row_rate > 0 or self.dead_col_rate > 0
+                or self.wearout)
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def _sample_tile(key: jax.Array, shape: tuple[int, ...], spec: FaultSpec,
+                 sa1_value: float, rate_scale, dead) -> dict[str, jax.Array]:
+    n_in, n_out = shape
+    n_sp = spec.n_spare_cols
+    scale = jnp.float32(1.0) if rate_scale is None \
+        else jnp.asarray(rate_scale, jnp.float32)
+    ku, ks, kr, kc, kw, kp, kq = jax.random.split(key, 7)
+    # One uniform draw decides SA0 vs SA1 vs healthy per cell (disjoint).
+    u = jax.random.uniform(ku, shape)
+    p0 = spec.sa0_rate * scale
+    p1 = spec.sa1_rate * scale
+    sa0 = u < p0
+    sa1 = (u >= p0) & (u < p0 + p1)
+    row_dead = jax.random.uniform(kr, (n_in, 1)) \
+        < spec.dead_row_rate * scale
+    col_u = jax.random.uniform(kc, (1, n_out + n_sp))
+    col_dead_all = col_u < spec.dead_col_rate * scale
+    col_dead = col_dead_all[:, :n_out]
+    line_dead = row_dead | col_dead
+    sign = jnp.where(jax.random.uniform(ks, shape) < 0.5, -1.0, 1.0)
+    stuck = sa0 | sa1 | line_dead
+    value = jnp.where(sa1 & ~line_dead, sign * sa1_value,
+                      0.0).astype(jnp.float32)
+    if dead is not None:
+        d = jnp.asarray(dead)
+        stuck = stuck | d
+        value = jnp.where(d, 0.0, value)
+    tile = {"stuck": stuck, "value": value}
+    if n_sp > 0:
+        usp = jax.random.uniform(kp, (n_in, n_sp))
+        sp_line = row_dead | col_dead_all[:, n_out:]
+        sp1 = (usp >= p0) & (usp < p0 + p1)
+        sp_stuck = (usp < p0 + p1) | sp_line
+        sp_sign = jnp.where(jax.random.uniform(kq, (n_in, n_sp)) < 0.5,
+                            -1.0, 1.0)
+        sp_value = jnp.where(sp1 & ~sp_line, sp_sign * sa1_value,
+                             0.0).astype(jnp.float32)
+        if dead is not None:
+            d = jnp.asarray(dead)
+            sp_stuck = sp_stuck | d
+            sp_value = jnp.where(d, 0.0, sp_value)
+        tile["spare_stuck"] = sp_stuck
+        tile["spare_value"] = sp_value
+        tile["colmap"] = jnp.arange(n_out, dtype=jnp.int32)
+    if spec.wearout:
+        s = spec.wearout_spread
+        z = jax.random.normal(kw, shape)
+        # Mean-preserving lognormal endurance limits per cell.
+        tile["wear_limit"] = (spec.wearout_endurance
+                              * jnp.exp(s * z - 0.5 * s * s)
+                              ).astype(jnp.float32)
+        tile["wear_count"] = jnp.zeros(shape, jnp.float32)
+    return tile
+
+
+def sample_fault_state(params: dict, key: jax.Array, spec: FaultSpec, *,
+                       sa1_value: float = 1.0, rate_scale=None,
+                       dead=None) -> dict[str, dict[str, jax.Array]]:
+    """Sample per-tile fault masks for every ≥2-D (crossbar) parameter.
+
+    ``rate_scale`` (traced scalar) multiplies the static-mask rates —
+    the fleet heterogeneity overlay's per-chip draw. ``dead`` (traced
+    bool) forces the whole device stuck-at-0 (a dead chip). Both may be
+    traced under vmap, so a fleet of chips samples in one program."""
+    names = sorted(n for n, p in params.items() if jnp.ndim(p) >= 2)
+    base = jax.random.fold_in(key, _FAULT_SALT)
+    return {name: _sample_tile(jax.random.fold_in(base, i),
+                               jnp.shape(params[name]), spec,
+                               sa1_value, rate_scale, dead)
+            for i, name in enumerate(names)}
+
+
+# ---------------------------------------------------------------------------
+# Mask application
+# ---------------------------------------------------------------------------
+
+def fault_state(state: Any) -> Optional[dict]:
+    """The fault-mask pytree riding a device-state dict, or None."""
+    return state.get("_faults") if isinstance(state, dict) else None
+
+
+def effective_masks(tile: dict) -> tuple[jax.Array, jax.Array]:
+    """(stuck, value) for a tile *after* column remapping: logical
+    column j reads physical column ``colmap[j]``, which may be a spare.
+    Without spares the primary masks apply directly (no gather)."""
+    stuck, value = tile["stuck"], tile["value"]
+    cm = tile.get("colmap")
+    if cm is None:
+        return stuck, value
+    stuck = jnp.concatenate([stuck, tile["spare_stuck"]], axis=1)[:, cm]
+    value = jnp.concatenate([value, tile["spare_value"]], axis=1)[:, cm]
+    return stuck, value
+
+
+def apply_cell_faults(w: jax.Array, tile: Optional[dict]) -> jax.Array:
+    """Read a logical weight matrix through its stuck-cell mask.
+    Idempotent (a projection); identity when the mask is all-False."""
+    if tile is None:
+        return w
+    stuck, value = effective_masks(tile)
+    return jnp.where(stuck, value.astype(w.dtype), w)
+
+
+def mask_updates(updates: dict, fstate: dict) -> dict:
+    """Zero write pulses aimed at stuck cells — a stuck device rejects
+    programming, so it must not advance endurance counters either."""
+    out = {}
+    for name, u in updates.items():
+        tile = fstate.get(name)
+        if tile is None:
+            out[name] = u
+        else:
+            stuck, _ = effective_masks(tile)
+            out[name] = jnp.where(stuck, jnp.zeros((), u.dtype), u)
+    return out
+
+
+def apply_read_upsets(pre: jax.Array, key: jax.Array, rate: float,
+                      scale: float) -> jax.Array:
+    """Transient read upsets: each output element is independently
+    replaced, with probability ``rate``, by a uniform draw over the ADC
+    full scale ``[-scale, scale]`` — a corrupted ADC latch."""
+    ku, kv = jax.random.split(key)
+    hit = jax.random.uniform(ku, pre.shape) < rate
+    garbage = jax.random.uniform(kv, pre.shape, minval=-scale,
+                                 maxval=scale)
+    return jnp.where(hit, garbage.astype(pre.dtype), pre)
+
+
+# ---------------------------------------------------------------------------
+# Endurance wear-out
+# ---------------------------------------------------------------------------
+
+def advance_wear(fstate: dict, applied: dict, spec: FaultSpec,
+                 new_params: dict, *, sa1_value: float = 1.0) -> dict:
+    """Advance per-cell write counters by the nonzero applied updates
+    (scaled by the age-acceleration factor) and convert cells whose
+    counter crossed its sampled endurance limit into stuck cells.
+
+    Virtual device age after ``n`` updates is
+    ``n * wearout_scale * update_period_s``; a cell written at the mean
+    per-update rate fails at exactly the age ``lifespan_years`` projects
+    for that rate — the acceleration factor cancels — which is what the
+    BENCH_faults wear-out gate checks empirically."""
+    out = {}
+    for name, tile in fstate.items():
+        if "wear_count" not in tile or name not in applied:
+            out[name] = tile
+            continue
+        wrote = (applied[name] != 0) & ~tile["stuck"]
+        count = tile["wear_count"] \
+            + spec.wearout_scale * wrote.astype(jnp.float32)
+        newly = (count >= tile["wear_limit"]) & ~tile["stuck"]
+        p = new_params[name]
+        if spec.wearout_mode == "freeze":
+            worn_value = p.astype(jnp.float32)
+        elif spec.wearout_mode == "sa1":
+            worn_value = jnp.where(p >= 0, sa1_value,
+                                   -sa1_value).astype(jnp.float32)
+        else:  # "sa0"
+            worn_value = jnp.zeros_like(tile["value"])
+        out[name] = {**tile,
+                     "stuck": tile["stuck"] | newly,
+                     "value": jnp.where(newly, worn_value, tile["value"]),
+                     "wear_count": count}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers (host-side reporting)
+# ---------------------------------------------------------------------------
+
+def stuck_fraction(fstate: Optional[dict]) -> float:
+    """Fraction of cells currently stuck across all tiles (effective,
+    i.e. post-remap — what the network actually reads through)."""
+    if not fstate:
+        return 0.0
+    tot = bad = 0
+    for tile in fstate.values():
+        stuck, _ = effective_masks(tile)
+        tot += stuck.size
+        bad += int(jnp.sum(stuck))
+    return bad / max(tot, 1)

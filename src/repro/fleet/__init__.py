@@ -8,13 +8,15 @@ M2RU chips: per-device parameter draws (:mod:`.heterogeneity`), a
 """
 from repro.fleet.aggregate import distribution, fleet_aggregate
 from repro.fleet.heterogeneity import (HET_PROFILES, FleetSpec, HetProfile,
-                                       device_seeds, draw_heterogeneity,
+                                       device_seeds, draw_fleet_faults,
+                                       draw_heterogeneity,
                                        supports_heterogeneity)
 from repro.fleet.run import fleet_shard_count, run_fleet
 
 __all__ = [
     "FleetSpec", "HetProfile", "HET_PROFILES",
-    "device_seeds", "draw_heterogeneity", "supports_heterogeneity",
+    "device_seeds", "draw_heterogeneity", "draw_fleet_faults",
+    "supports_heterogeneity",
     "run_fleet", "fleet_shard_count",
     "fleet_aggregate", "distribution",
 ]

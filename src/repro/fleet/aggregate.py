@@ -109,6 +109,32 @@ def fleet_aggregate(result: dict[str, Any], *, model=None,
         "max_forgetting_device": int(np.argmax(forg)),
     }
 
+    finfo = result.get("faults")
+    if finfo is not None:
+        # The fault-stricken tail: accuracy's *lower* percentiles are
+        # where stuck-cell damage shows (the standard distribution's
+        # p95/p99 describe the healthy upper tail), plus the dead-chip
+        # census and the severity spread the chips actually drew.
+        acc_arr = np.asarray(acc, np.float64)
+        dead = finfo.get("dead_chips")
+        sec: dict[str, Any] = {
+            "dead_chip_count": int(np.asarray(dead).sum())
+            if dead is not None else 0,
+            "stricken_tail_accuracy": {
+                "p1": float(np.percentile(acc_arr, 1)),
+                "p5": float(np.percentile(acc_arr, 5)),
+                "min": float(acc_arr.min()),
+            },
+        }
+        scale = finfo.get("rate_scale")
+        if scale is not None:
+            sec["rate_scale"] = distribution(scale)
+            hot["max_fault_rate_device"] = int(np.argmax(scale))
+        if dead is not None and np.asarray(dead).any():
+            sec["dead_devices"] = [int(i) for i in
+                                   np.flatnonzero(np.asarray(dead))]
+        out["faults"] = sec
+
     tele = result.get("telemetry")
     if tele is not None and getattr(tele, "enabled", False):
         snap = tele.snapshot()

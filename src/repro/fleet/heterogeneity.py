@@ -49,6 +49,10 @@ _HET_FOLD = 0x48E7
 #: prog_sigma).
 _PROG_FOLD = 0xF1EE7
 
+#: fold_in constant for the fleet-level fault draws (per-chip rate
+#: multipliers, dead-chip coin flips) and each chip's mask-sampling key.
+_FAULT_FOLD = 0xFA11
+
 
 @dataclasses.dataclass(frozen=True)
 class HetProfile:
@@ -189,3 +193,59 @@ def overlay_device_states(backend, stacked_params, seeds: list[int],
         return backend.init_device_state(params, key, het=het_slice)
 
     return jax.vmap(one)(stacked_params, prog_keys, het)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level fault draws (repro.faults)
+# ---------------------------------------------------------------------------
+
+def draw_fleet_faults(fleet: FleetSpec, fspec):
+    """Per-chip fault severity for a :class:`repro.faults.FaultSpec`.
+
+    Returns ``(rate_scale, dead)`` — a mean-preserving lognormal
+    multiplier on the static-mask rates per chip (``fspec.rate_spread``)
+    and a Bernoulli whole-chip-death draw (``fspec.dead_chip_rate``) —
+    or ``(None, None)`` when the spec has no fleet-level spread (every
+    chip then samples its masks at the base rates from its own seed,
+    and the fleet program is untouched)."""
+    if fspec is None or (fspec.rate_spread <= 0
+                         and fspec.dead_chip_rate <= 0):
+        return None, None
+    base = jax.random.fold_in(jax.random.PRNGKey(fleet.seed), _FAULT_FOLD)
+    k_rate, k_dead = jax.random.split(base)
+    D = fleet.n_devices
+    s = fspec.rate_spread
+    if s > 0:
+        z = jax.random.normal(k_rate, (D,))
+        scale = jnp.exp(s * z - 0.5 * s * s).astype(jnp.float32)
+    else:
+        scale = jnp.ones((D,), jnp.float32)
+    if fspec.dead_chip_rate > 0:
+        dead = jax.random.uniform(k_dead, (D,)) < fspec.dead_chip_rate
+    else:
+        dead = jnp.zeros((D,), bool)
+    return scale, dead
+
+
+def overlay_fault_states(backend, stacked_params, seeds: list[int],
+                         scale: jax.Array, dead: jax.Array, fspec):
+    """Re-sample every chip's fault masks under its fleet-level draw.
+
+    Each chip's masks come from a key folded off its *own data-stream
+    seed* (chip-local, like the programming keys), with the chip's rate
+    multiplier and dead-chip flag applied as traced scalars — one vmapped
+    sampling program covers the whole fleet. Returns the stacked
+    ``"_faults"`` pytree (device axis in front), structurally identical
+    to the per-seed masks it replaces."""
+    from repro.faults.model import sample_fault_state
+
+    fkeys = jnp.stack([
+        jax.random.fold_in(jax.random.PRNGKey(s), _FAULT_FOLD)
+        for s in seeds])
+    sa1 = backend._fault_value_scale()
+
+    def one(params, key, sc, dd):
+        return sample_fault_state(params, key, fspec, sa1_value=sa1,
+                                  rate_scale=sc, dead=dd)
+
+    return jax.vmap(one)(stacked_params, fkeys, scale, dead)

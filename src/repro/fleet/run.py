@@ -46,8 +46,10 @@ from repro.core.continual import (ReplaySpec, TrainerSpec,
                                   _ingraph_replay_traffic, _make_raw_steps)
 from repro.data.synthetic import TaskData
 from repro.fleet.heterogeneity import (FleetSpec, device_seeds,
+                                       draw_fleet_faults,
                                        draw_heterogeneity,
-                                       overlay_device_states)
+                                       overlay_device_states,
+                                       overlay_fault_states)
 from repro.replay import get_policy_class
 from repro.scenarios.sweep import (_aggregate_seeds, _build_seed_inputs,
                                    _make_run_fn, _summarize_run)
@@ -168,6 +170,23 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
         dev_state = overlay_device_states(backend, stacked[0], seeds, het)
         stacked = stacked[:2] + (dev_state,) + stacked[3:]
 
+    # Fleet-level fault severity: when the backend's FaultSpec carries a
+    # per-chip rate spread or a dead-chip rate, re-sample every chip's
+    # masks under its own draw (chip-local keys, traced multipliers).
+    # Without those knobs the per-seed masks from _build_seed_inputs
+    # stand, and this block leaves the program untouched.
+    fspec = getattr(backend.spec, "faults", None)
+    fault_scale, dead_chips = draw_fleet_faults(fleet, fspec)
+    fault_scale_np = (np.asarray(fault_scale)
+                      if fault_scale is not None else None)
+    dead_np = np.asarray(dead_chips) if dead_chips is not None else None
+    if fault_scale is not None:
+        dev_state = stacked[2]
+        new_masks = overlay_fault_states(backend, stacked[0], seeds,
+                                         fault_scale, dead_chips, fspec)
+        dev_state = {**dev_state, "_faults": new_masks}
+        stacked = stacked[:2] + (dev_state,) + stacked[3:]
+
     n_shards = fleet_shard_count(D, max_shards)
     n_local = D // n_shards
     mesh = Mesh(np.array(jax.devices()[:n_shards]), (fleet.mesh_axis,))
@@ -239,6 +258,10 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
         "params": jax.tree.map(lambda v: v[0], res["params"]),
         "params_fleet": res["params"],
     })
+    if fspec is not None:
+        out["faults"] = {"spec": fspec,
+                         "rate_scale": fault_scale_np,
+                         "dead_chips": dead_np}
     if compile_s is not None:
         out["compile_s"] = compile_s
         out["execute_s"] = execute_s

@@ -61,6 +61,13 @@ class ServeConfig:
     # (t_submit / t_admit / t_done) and all three histograms read only
     # this — tests script it and assert exact percentiles.
     clock: Callable[[], float] = time.perf_counter
+    # Per-request queue deadline (seconds, on the same clock): a queued
+    # request whose age exceeds this at admission is dropped with
+    # ``timed_out=True`` instead of decoded. None = wait forever. The
+    # check reads the clock once per admission pass and only when a
+    # deadline is set, so deadline-free runs keep their exact
+    # clock-read sequence.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -70,6 +77,9 @@ class Request:
     max_new: int = 32
     tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Dropped at admission: queue wait exceeded ServeConfig.deadline_s
+    # (set together with ``done``; the request never decoded a token).
+    timed_out: bool = False
     # Observability: submit/admit/finish wall-clock (per ServeConfig's
     # injectable clock) and the number of decode dispatches this request
     # consumed (prefill + generated tokens) — the per-request share of
@@ -128,6 +138,7 @@ class ServeEngine:
 
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self.steps_run = 0
+        self.timed_out = 0
         # Per-request observability (repro.obs): end-to-end latency
         # (submit → done), its queue-wait (submit → admit) / decode
         # (admit → done) split, all in ms, and the finished requests'
@@ -169,6 +180,19 @@ class ServeEngine:
         self._finished.append(req)
 
     def _admit(self) -> None:
+        if self.scfg.deadline_s is not None and self.queue:
+            now = self.scfg.clock()
+            kept: deque[Request] = deque()
+            while self.queue:
+                req = self.queue.popleft()
+                if now - req.t_submit > self.scfg.deadline_s:
+                    req.timed_out = True
+                    req.done = True
+                    req.t_done = now
+                    self.timed_out += 1
+                else:
+                    kept.append(req)
+            self.queue = kept
         for slot in range(self.scfg.batch_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.popleft()
@@ -279,6 +303,7 @@ class ServeEngine:
         """
         out: dict[str, Any] = {
             "requests": len(self._finished),
+            "timed_out": self.timed_out,
             "steps_run": self.steps_run,
             "latency_ms": self.latency.summary(),
             "queue_wait_ms": self.queue_wait.summary(),

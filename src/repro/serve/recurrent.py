@@ -99,6 +99,22 @@ class RecurrentServeConfig:
     fused: Optional[bool] = None
     #: Dispatch depth-1 ahead of retirement (host/device overlap).
     pipeline: bool = True
+    #: Per-request queue deadline (seconds, on the injectable clock):
+    #: a request whose queue age exceeds this at admission time is
+    #: dropped with ``timed_out=True`` instead of served (counted in
+    #: ``request_stats()["timed_out"]``). None = wait forever. The
+    #: deadline check reads the clock once per admission pass, and only
+    #: when a deadline is set — deadline-free configs see the exact
+    #: clock-read sequence they always did.
+    deadline_s: Optional[float] = None
+    #: Fault injection (repro.faults): 0-based dispatch-attempt indices
+    #: at which the serving chip "fails" mid-step. The dispatch aborts
+    #: before any RNG is consumed, the slab's rows migrate to a
+    #: replacement chip through the host-spill path, and the affected
+    #: streams retry from their pre-dispatch cursors — so the output
+    #: streams stay bitwise identical to a failure-free run (gated in
+    #: benchmarks/fault_bench.py).
+    fail_at_steps: tuple = ()
     seed: int = 0
     #: Injectable wall clock (seconds). Latency/queue-wait/decode
     #: histograms read only this — tests drive it with a script.
@@ -120,6 +136,9 @@ class StreamRequest:
     emitted: int = 0                # frames whose logits materialized
     done: bool = False
     rejected: bool = False
+    #: Dropped at admission because queue wait exceeded ``deadline_s``
+    #: (set together with ``done``; the request was never served).
+    timed_out: bool = False
     _logits: Optional[np.ndarray] = None
 
     @property
@@ -168,6 +187,10 @@ class RecurrentServeEngine:
         self._anon = 0
         self.steps_run = 0
         self.rejected = 0
+        self.timed_out = 0
+        self.chip_failures = 0
+        self.retried = 0
+        self._dispatch_attempts = 0
         self._step = self._make_step()
 
         from repro.obs import Histogram
@@ -257,9 +280,18 @@ class RecurrentServeEngine:
         whose user is mid-stream stays queued (later users may overtake
         it); otherwise requests admit in submit order while a slot can
         be acquired without evicting a pinned stream."""
+        now = self.scfg.clock() if self.scfg.deadline_s is not None \
+            else None
         kept: deque[StreamRequest] = deque()
         while self._waiting:
             req = self._waiting.popleft()
+            if now is not None \
+                    and now - req.t_submit > self.scfg.deadline_s:
+                req.timed_out = True
+                req.done = True
+                req.t_done = now
+                self.timed_out += 1
+                continue
             if req.uid in self._active:
                 kept.append(req)
                 continue
@@ -305,6 +337,15 @@ class RecurrentServeEngine:
             req.cursor += c
             self.slab.touch(uid)
         if entries:
+            # Fault-injection point: the chip dies mid-step, before this
+            # dispatch consumed any RNG — so the retry on the replacement
+            # chip draws the exact key the lost dispatch would have, and
+            # every output stream stays bitwise identical.
+            attempt = self._dispatch_attempts
+            self._dispatch_attempts += 1
+            if attempt in self.scfg.fail_at_steps:
+                self._chip_failure(entries)
+                return len(entries)
             self._rng, sub = jax.random.split(self._rng)
             self.slab.h, logits = self._step(
                 self.params, self.slab.h, jnp.asarray(x),
@@ -318,6 +359,33 @@ class RecurrentServeEngine:
         while len(self._inflight) > depth:
             self._retire(*self._inflight.popleft())
         return len(entries)
+
+    def _chip_failure(self, entries: list) -> None:
+        """Recover from a simulated chip death mid-dispatch.
+
+        The aborted streams roll back to their pre-dispatch cursors and
+        retry; results already in flight were computed before the
+        failure and retire normally. Every surviving state row —
+        resident and spilled — migrates to a fresh slab (the
+        replacement chip) through the host-spill path, whose reload is
+        bit-exact; rows are lane-independent, so the new slot
+        assignment leaves every stream's output unchanged.
+        """
+        for req, _slot, start, _c in entries:
+            req.cursor = start
+        self.chip_failures += 1
+        self.retried += len(entries)
+        self.flush()
+        old = self.slab
+        rows = {uid: old.read(uid)
+                for uid in set(old.resident) | set(old.spilled)}
+        self.slab = StateSlab(self.scfg.batch_slots, self.cfg.n_h,
+                              self.cfg.dtype)
+        for uid, row in rows.items():
+            self.slab.preload(uid, row)
+        for uid in self._active:
+            self.slab.acquire(uid)
+            self.slab.pin(uid)
 
     def _retire(self, logits: jax.Array, entries: list) -> None:
         arr = np.asarray(logits)             # blocks until step done
@@ -370,7 +438,10 @@ class RecurrentServeEngine:
         out: dict[str, Any] = {
             "requests": len(self._finished),
             "rejected": self.rejected,
+            "timed_out": self.timed_out,
             "steps_run": self.steps_run,
+            "chip_failures": self.chip_failures,
+            "retried": self.retried,
             "latency_ms": self.latency.summary(),
             "queue_wait_ms": self.queue_wait.summary(),
             "decode_ms": self.decode.summary(),

@@ -181,6 +181,19 @@ class StateSlab:
             f"all {self.n_slots} slots are pinned mid-batch; "
             "hold the request in the queue until a stream completes")
 
+    def preload(self, uid: Hashable, row: np.ndarray) -> None:
+        """Seed ``uid``'s state as a host-spilled row. The chip-failure
+        migration path: a failed chip's rows enter the replacement slab
+        through the same spill dict the LRU evictor uses, so the next
+        ``acquire`` reloads them with the bit-exact round-trip the spill
+        path already guarantees."""
+        if uid in self._slot_of:
+            raise ValueError(f"uid {uid!r} is already resident")
+        row = np.asarray(row)
+        if row.shape != (self.n_h,):
+            raise ValueError(f"row must be ({self.n_h},), got {row.shape}")
+        self._spill[uid] = row
+
     # ------------------------------------------------------------------
     def read(self, uid: Hashable) -> np.ndarray:
         """Host copy of ``uid``'s current state (resident or spilled)."""

@@ -47,11 +47,18 @@ class HealthMonitor:
         self.straggler_events: list[tuple[int, float]] = []
 
     def record(self, step: int, duration_s: float) -> bool:
-        """Returns True if this step is a straggler."""
+        """Returns True if this step is a straggler.
+
+        Flagged steps are excluded from the EWMA: folding a straggler's
+        duration into the very baseline it was judged against inflates
+        the mean, so a run of moderate stragglers would progressively
+        raise the bar and mask later ones.
+        """
         is_straggler = (self.mean_step_s is not None
                         and duration_s > self.factor * self.mean_step_s)
         if is_straggler:
             self.straggler_events.append((step, duration_s))
+            return True
         if self.mean_step_s is None:
             self.mean_step_s = duration_s
         else:
@@ -63,11 +70,14 @@ class HealthMonitor:
 def retry(fn: Callable, attempts: int = 3, backoff_s: float = 0.1,
           retriable=(OSError, RuntimeError)):
     """Bounded retry for transient failures (I/O, collectives timeouts)."""
-    last = None
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
     for i in range(attempts):
         try:
             return fn()
-        except retriable as e:      # pragma: no cover (timing)
+        except retriable as e:
             last = e
+            if i + 1 >= attempts:
+                break               # exhausted: re-raise without sleeping
             time.sleep(backoff_s * (2 ** i))
     raise last

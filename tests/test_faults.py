@@ -1,0 +1,335 @@
+"""repro.faults — device-fault injection and graceful degradation.
+
+Pins the subsystem's contracts:
+
+  * zero-fault parity: ``DeviceSpec.faults=None`` builds the exact
+    program it always did, and a zero-rate :class:`FaultSpec` is
+    bitwise identity end to end (run_compiled included);
+  * fused-vs-per-step recurrence stays bitwise identical *under*
+    faults (both paths read the same masked weight tensor);
+  * stuck cells reject writes (no parameter motion, no endurance
+    pulses) and transient read upsets are keyed, deterministic, and
+    force the per-step path;
+  * wear-out converts cells to stuck mid-run, monotonically;
+  * the mitigation stack: march self-test recovers the exact stuck
+    map, column remap strictly reduces effective damage, bias
+    compensation touches only ``b_h``, recalibration learns around
+    the masks;
+  * fleet propagation: per-chip severity draws, dead chips at chance
+    accuracy, and the ``faults`` aggregate section.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import DeviceSpec, get_backend
+from repro.core.continual import ReplaySpec, TrainerSpec
+from repro.core.miru import MiRUConfig, init_miru_params
+from repro.faults import (FaultSpec, apply_cell_faults, compensate_bias,
+                          effective_masks, fault_state, march_recover,
+                          recalibrate, remap_columns, sample_fault_state,
+                          stuck_fraction)
+from repro.fleet import (FleetSpec, draw_fleet_faults, fleet_aggregate,
+                         run_fleet)
+from repro.scenarios import build_scenario, run_compiled
+from repro.scenarios.sweep import scenario_miru_config
+
+CFG = MiRUConfig(n_x=8, n_h=20, n_y=4)
+WBS = dict(input_bits=8, adc_bits=8, weight_clip=1.0)
+FAULTY = FaultSpec(sa0_rate=0.03, sa1_rate=0.01, dead_row_rate=0.02,
+                   dead_col_rate=0.02)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_miru_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def x_seq():
+    return jax.random.normal(jax.random.PRNGKey(1), (2, 12, CFG.n_x))
+
+
+def _wbs(faults=None):
+    return get_backend("wbs", spec=DeviceSpec(**WBS, faults=faults))
+
+
+def _recur(backend, params, x, state, *, fused=None, seed=3):
+    h, hp, pre = backend.device_recurrence(
+        params, CFG, x, jax.random.PRNGKey(seed), state=state, fused=fused)
+    return np.asarray(h)
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault parity
+# ---------------------------------------------------------------------------
+
+def test_faults_none_builds_no_state(params):
+    be = _wbs()
+    assert be.spec.faults is None
+    assert be.init_device_state(params, jax.random.PRNGKey(0)) is None
+
+
+def test_zero_rate_spec_is_bitwise_identity(params, x_seq):
+    """All-zero rates sample all-False masks; the masked recurrence is
+    bitwise the unfaulted one, fused and per-step."""
+    base = _wbs()
+    zb = _wbs(FaultSpec())
+    zs = zb.init_device_state(params, jax.random.PRNGKey(0))
+    assert set(zs) == {"_faults"}
+    for fused in (None, False):
+        np.testing.assert_array_equal(
+            _recur(base, params, x_seq, None, fused=fused),
+            _recur(zb, params, x_seq, zs, fused=fused))
+
+
+def test_zero_rate_run_compiled_parity():
+    """End to end through run_compiled — forward, update, scan carry —
+    a zero-rate FaultSpec changes no bit of the training run."""
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=20)
+    tr = TrainerSpec(algo="dfa", epochs_per_task=1)
+    kw = dict(replay=ReplaySpec(capacity=32))
+    r0 = run_compiled(cfg, tr, tasks, device=_wbs(), **kw)
+    r1 = run_compiled(cfg, tr, tasks, device=_wbs(FaultSpec()), **kw)
+    np.testing.assert_array_equal(r0["R_full"], r1["R_full"])
+    for name, v in r0["params"].items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(r1["params"][name]), name)
+    assert r0["metrics"] == r1["metrics"]
+
+
+# ---------------------------------------------------------------------------
+# Static masks
+# ---------------------------------------------------------------------------
+
+def test_masks_sampled_per_crossbar_param(params):
+    fs = sample_fault_state(params, jax.random.PRNGKey(2), FAULTY)
+    assert set(fs) == {n for n, p in params.items() if jnp.ndim(p) >= 2}
+    for name, tile in fs.items():
+        assert tile["stuck"].shape == params[name].shape
+        assert tile["value"].dtype == jnp.float32
+    assert 0.0 < stuck_fraction(fs) < 0.5
+    # deterministic in the key
+    fs2 = sample_fault_state(params, jax.random.PRNGKey(2), FAULTY)
+    np.testing.assert_array_equal(np.asarray(fs["w_h"]["stuck"]),
+                                  np.asarray(fs2["w_h"]["stuck"]))
+
+
+def test_faults_change_forward_and_respect_mask(params, x_seq):
+    """Stuck cells actually bite, and the masked weights are exactly
+    what both recurrence paths read (fused ≡ per-step under faults)."""
+    be = _wbs(FAULTY)
+    st = be.init_device_state(params, jax.random.PRNGKey(5))
+    clean = _recur(_wbs(), params, x_seq, None)
+    h_fused = _recur(be, params, x_seq, st, fused=None)
+    h_step = _recur(be, params, x_seq, st, fused=False)
+    assert not np.array_equal(clean, h_fused), "masks must bite"
+    np.testing.assert_array_equal(h_fused, h_step)
+
+
+def test_analog_state_pairs_read_through_masks(params, x_seq):
+    """The conductance-domain backend masks the differential-pair
+    effective weights; zero-rate stays bitwise clean."""
+    mk = lambda f: get_backend(
+        "analog_state", spec=DeviceSpec(**WBS, faults=f))
+    clean, faulty, zero = mk(None), mk(FAULTY), mk(FaultSpec())
+    s0 = clean.init_device_state(params, jax.random.PRNGKey(4))
+    sf = faulty.init_device_state(params, jax.random.PRNGKey(4))
+    sz = zero.init_device_state(params, jax.random.PRNGKey(4))
+    assert "_faults" in sf and "_faults" not in s0
+    np.testing.assert_array_equal(_recur(clean, params, x_seq, s0),
+                                  _recur(zero, params, x_seq, sz))
+    assert not np.array_equal(_recur(clean, params, x_seq, s0),
+                              _recur(faulty, params, x_seq, sf))
+
+
+def test_stuck_cells_reject_writes(params):
+    be = _wbs(FAULTY)
+    st = be.init_device_state(params, jax.random.PRNGKey(5))
+    ups = {n: jnp.full(p.shape, 0.05, p.dtype) for n, p in params.items()}
+    new_p, applied, _ = be.device_apply_update(params, ups, state=st)
+    for name, tile in st["_faults"].items():
+        stuck = np.asarray(effective_masks(tile)[0])
+        assert stuck.any()
+        np.testing.assert_array_equal(
+            np.asarray(applied[name])[stuck], 0.0, name)
+        np.testing.assert_array_equal(
+            np.asarray(new_p[name])[stuck],
+            np.asarray(params[name])[stuck], name)
+
+
+# ---------------------------------------------------------------------------
+# Transient read upsets
+# ---------------------------------------------------------------------------
+
+def test_read_upsets_keyed_deterministic_and_unfused(params, x_seq):
+    be = _wbs(FaultSpec(upset_rate=0.05))
+    st = be.init_device_state(params, jax.random.PRNGKey(0))
+    clean = _recur(_wbs(), params, x_seq, None)
+    a = _recur(be, params, x_seq, st, fused=None)
+    b = _recur(be, params, x_seq, st, fused=None)
+    c = _recur(be, params, x_seq, st, fused=False)
+    np.testing.assert_array_equal(a, b)       # keyed, reproducible
+    np.testing.assert_array_equal(a, c)       # fusion silently declined
+    assert not np.array_equal(a, clean)       # upsets bite
+    assert not np.array_equal(
+        a, _recur(be, params, x_seq, st, seed=4))   # per-key draws
+
+
+# ---------------------------------------------------------------------------
+# Endurance wear-out
+# ---------------------------------------------------------------------------
+
+def test_wearout_accumulates_and_sticks(params):
+    be = _wbs(FaultSpec(wearout=True, wearout_endurance=3.0,
+                        wearout_spread=0.2))
+    st = be.init_device_state(params, jax.random.PRNGKey(1))
+    ups = {n: jnp.full(p.shape, 0.05, p.dtype) for n, p in params.items()}
+    p, fracs = params, []
+    for _ in range(6):
+        p, _, st = be.device_apply_update(p, ups, state=st)
+        fracs.append(stuck_fraction(st["_faults"]))
+    assert fracs == sorted(fracs), "stuck fraction must be monotone"
+    assert fracs[0] == 0.0 and fracs[-1] > 0.9, fracs
+    counts = np.asarray(st["_faults"]["w_h"]["wear_count"])
+    stuck = np.asarray(st["_faults"]["w_h"]["stuck"])
+    # counters freeze once a cell sticks (no pulses reach it)
+    assert counts[stuck].max() <= 6.0
+
+
+def test_wearout_freeze_mode_holds_last_value(params):
+    be = _wbs(FaultSpec(wearout=True, wearout_endurance=1.0,
+                        wearout_spread=0.0, wearout_mode="freeze"))
+    st = be.init_device_state(params, jax.random.PRNGKey(1))
+    ups = {n: jnp.full(p.shape, 0.05, p.dtype) for n, p in params.items()}
+    p1, _, st = be.device_apply_update(params, ups, state=st)
+    tile = st["_faults"]["w_h"]
+    stuck = np.asarray(tile["stuck"])
+    assert stuck.all()                         # endurance 1, no spread
+    np.testing.assert_array_equal(np.asarray(tile["value"]),
+                                  np.asarray(p1["w_h"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mitigation stack
+# ---------------------------------------------------------------------------
+
+def test_march_recovers_exact_stuck_map(params):
+    fs = dataclasses.replace(FAULTY, n_spare_cols=3)
+    be = _wbs(fs)
+    st = be.init_device_state(params, jax.random.PRNGKey(7))
+    rec = march_recover(be, params, st)
+    for name, tile in st["_faults"].items():
+        stuck, value = (np.asarray(a) for a in effective_masks(tile))
+        np.testing.assert_array_equal(
+            np.asarray(rec[name]["stuck"]), stuck, name)
+        # recovered stuck values match to ADC quantization tolerance
+        np.testing.assert_allclose(
+            np.asarray(rec[name]["value"])[stuck], value[stuck],
+            atol=2 / 255, err_msg=name)
+
+
+def test_march_on_clean_device_finds_nothing(params):
+    rec = march_recover(_wbs(), params, None)
+    for name, r in rec.items():
+        assert not np.asarray(r["stuck"]).any(), name
+
+
+def test_remap_reduces_effective_damage(params):
+    fs = dataclasses.replace(FAULTY, n_spare_cols=4)
+    fstate = sample_fault_state(params, jax.random.PRNGKey(9), fs)
+    remapped = remap_columns(fstate)
+    improved = 0
+    for name in fstate:
+        before = int(np.asarray(effective_masks(fstate[name])[0]).sum())
+        after = int(np.asarray(effective_masks(remapped[name])[0]).sum())
+        assert after <= before, name
+        improved += before - after
+        cm = np.asarray(remapped[name]["colmap"])
+        assert len(np.unique(cm)) == len(cm), "colmap must stay injective"
+    assert improved > 0, "spares must absorb some damage"
+
+
+def test_compensate_bias_touches_only_bias(params):
+    fstate = sample_fault_state(params, jax.random.PRNGKey(9), FAULTY)
+    drives = {"w_h": jnp.full((CFG.n_x,), 0.1),
+              "u_h": jnp.full((CFG.n_h,), 0.05)}
+    p2 = compensate_bias(params, fstate, drives)
+    assert not np.array_equal(np.asarray(p2["b_h"]),
+                              np.asarray(params["b_h"]))
+    for k in params:
+        if k != "b_h":
+            np.testing.assert_array_equal(np.asarray(p2[k]),
+                                          np.asarray(params[k]), k)
+
+
+def test_recalibrate_moves_only_healthy_cells():
+    tasks = build_scenario("permuted", seed=0, n_tasks=1, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=20)
+    tr = TrainerSpec(algo="dfa", epochs_per_task=1)
+    p0 = init_miru_params(jax.random.PRNGKey(1), cfg)
+    be = _wbs(FAULTY)
+    st = be.init_device_state(p0, jax.random.PRNGKey(3))
+    p1, st1 = recalibrate(cfg, tr, be, p0, st, tasks[0], steps=4)
+    assert not np.array_equal(np.asarray(p1["w_h"]), np.asarray(p0["w_h"]))
+    for name, tile in st1["_faults"].items():
+        stuck = np.asarray(effective_masks(tile)[0])
+        np.testing.assert_array_equal(np.asarray(p1[name])[stuck],
+                                      np.asarray(p0[name])[stuck], name)
+
+
+# ---------------------------------------------------------------------------
+# Fleet propagation
+# ---------------------------------------------------------------------------
+
+def test_draw_fleet_faults_gating_and_determinism():
+    fleet = FleetSpec(n_devices=16, seed=3)
+    assert draw_fleet_faults(fleet, None) == (None, None)
+    assert draw_fleet_faults(fleet, FAULTY) == (None, None)  # no knobs
+    fs = dataclasses.replace(FAULTY, rate_spread=0.5, dead_chip_rate=0.2)
+    scale, dead = draw_fleet_faults(fleet, fs)
+    assert scale.shape == (16,) and dead.shape == (16,)
+    assert np.all(np.asarray(scale) > 0)
+    s2, d2 = draw_fleet_faults(fleet, fs)
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(dead), np.asarray(d2))
+
+
+def test_fleet_run_reports_faults_and_dead_chips_at_chance():
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=24)
+    tr = TrainerSpec(algo="dfa", epochs_per_task=1)
+    fs = FaultSpec(sa0_rate=0.02, rate_spread=0.5, dead_chip_rate=0.3)
+    fl = run_fleet(cfg, tr, tasks, FleetSpec(n_devices=4, seed=2),
+                   replay=ReplaySpec(capacity=32), device=_wbs(fs))
+    assert fl["faults"]["rate_scale"].shape == (4,)
+    dead = np.asarray(fl["faults"]["dead_chips"])
+    assert dead.any(), "seed chosen to include dead chips"
+    accs = [p["metrics"]["average_accuracy"] for p in fl["per_device"]]
+    for i in np.flatnonzero(dead):
+        assert accs[i] < 0.3, (i, accs[i])    # a dead chip can't learn
+    agg = fleet_aggregate(fl)
+    sec = agg["faults"]
+    assert sec["dead_chip_count"] == int(dead.sum())
+    assert sec["dead_devices"] == [int(i) for i in np.flatnonzero(dead)]
+    assert sec["stricken_tail_accuracy"]["min"] == min(accs)
+    assert "rate_scale" in sec
+    assert "max_fault_rate_device" in agg["hot_tail"]
+
+
+def test_fleet_without_fault_spec_omits_section():
+    tasks = build_scenario("permuted", seed=0, n_tasks=2, n_train=64,
+                           n_test=32)
+    cfg = scenario_miru_config(tasks, n_h=24)
+    tr = TrainerSpec(algo="dfa", epochs_per_task=1)
+    fl = run_fleet(cfg, tr, tasks, FleetSpec(n_devices=2, seed=0),
+                   replay=ReplaySpec(capacity=32), device="ideal")
+    assert "faults" not in fl
+    assert "faults" not in fleet_aggregate(fl)

@@ -338,3 +338,128 @@ def test_metered_energy_report(params):
     assert en["total_j"] > 0 and np.isfinite(en["gops_per_w"])
     assert en["pj_per_request"]["count"] == 5
     assert en["power_mw"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation (repro.faults): deadlines, chip failure
+# ---------------------------------------------------------------------------
+
+class ListClock:
+    """Returns a scripted sequence of times (last value repeats)."""
+
+    def __init__(self, vals):
+        self.vals = list(vals)
+        self.reads = 0
+
+    def __call__(self) -> float:
+        v = self.vals[min(self.reads, len(self.vals) - 1)]
+        self.reads += 1
+        return v
+
+
+def test_deadline_times_out_stale_requests(params):
+    """Queue wait beyond ``deadline_s`` drops the request with
+    ``timed_out=True`` at admission instead of serving it. Scripted
+    clock: submits at t=0,1,2 (same user → serialize); the first
+    admission pass runs at t=3 and admits request 0; every later pass
+    sees t=10, so requests 1 and 2 (ages 9 and 8 > 5) time out."""
+    clock = ListClock([0.0, 1.0, 2.0, 3.0, 3.0] + [10.0] * 60)
+    eng = _engine(params, batch_slots=2, chunk=4, deadline_s=5.0,
+                  clock=clock)
+    spec = TrafficSpec(n_x=CFG.n_x, seed=0)
+    reqs = [eng.submit(request_frames(spec, i, 5), uid="u")
+            for i in range(3)]
+    eng.run_until_drained()
+    st = eng.request_stats()
+    assert st["requests"] == 1 and st["timed_out"] == 2
+    assert reqs[0].done and not reqs[0].timed_out
+    assert reqs[1].timed_out and reqs[1].done and reqs[1].t_done == 10.0
+    assert reqs[2].timed_out
+    assert eng.pending == 0
+
+
+def test_no_deadline_keeps_clock_read_sequence(params):
+    """Deadline-free configs must not read the clock in _admit — the
+    scripted-clock latency tests' exact read counts are a contract."""
+    clock = ListClock(list(range(100)))
+    eng = _engine(params, batch_slots=2, chunk=4, clock=clock)
+    spec = TrafficSpec(n_x=CFG.n_x, seed=0)
+    eng.submit(request_frames(spec, 0, 4), uid="a")
+    eng.run_until_drained()
+    # exactly t_submit, t_admit, t_done
+    assert clock.reads == 3
+
+
+def test_chip_failure_outputs_bitwise_identical(params):
+    """A chip death mid-dispatch aborts before the RNG is consumed,
+    migrates every slab row through the host-spill path, and retries —
+    so every request's output stream is bitwise identical to the
+    failure-free run, and the failure is visible only in the
+    counters."""
+    spec = TrafficSpec(n_requests=8, n_users=3, frames_min=4,
+                       frames_max=11, n_x=CFG.n_x, seed=5)
+
+    def run(fail_at=()):
+        eng = _engine(params, batch_slots=2, chunk=4,
+                      fail_at_steps=fail_at)
+        reqs = [eng.submit(f, uid=a.uid) for a, f in replay(spec)]
+        eng.run_until_drained()
+        eng.slab.check()
+        return eng, reqs
+
+    e0, r0 = run()
+    e1, r1 = run(fail_at=(1, 4))
+    for a, b in zip(r0, r1):
+        assert np.array_equal(np.asarray(a.logits), np.asarray(b.logits))
+    s0, s1 = e0.request_stats(), e1.request_stats()
+    assert s0["chip_failures"] == 0 and s0["retried"] == 0
+    assert s1["chip_failures"] == 2 and s1["retried"] >= 2
+    assert s1["requests"] == s0["requests"] == spec.n_requests
+    # the replacement slab reloaded the migrated rows
+    assert s1["slab"]["reloads"] > 0
+
+
+def test_chip_failure_migrates_spilled_rows(params):
+    """Rows spilled to host before the failure survive the migration:
+    the evicted user's stream continues bitwise on the replacement
+    chip."""
+    spec = TrafficSpec(n_requests=10, n_users=6, frames_min=3,
+                       frames_max=9, n_x=CFG.n_x, seed=2)
+
+    def run(fail_at=()):
+        eng = _engine(params, batch_slots=2, chunk=3,
+                      fail_at_steps=fail_at)
+        reqs = [eng.submit(f, uid=a.uid) for a, f in replay(spec)]
+        eng.run_until_drained()
+        eng.slab.check()
+        return eng, reqs
+
+    e0, r0 = run()
+    assert e0.slab.evictions > 0, "scenario must exercise spill"
+    e1, r1 = run(fail_at=(3,))
+    for a, b in zip(r0, r1):
+        assert np.array_equal(np.asarray(a.logits), np.asarray(b.logits))
+
+
+def test_lm_engine_deadline(params):
+    """The LM ServeEngine's deadline: a queued request whose wait
+    exceeds ``deadline_s`` is dropped with ``timed_out=True``."""
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    lm_params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    # both requests fit the slots: no timeout at deadline_s=None-like
+    clock = ListClock([0.0, 1.0, 20.0] + [20.0] * 40)
+    eng = ServeEngine(cfg, ServeConfig(batch_slots=1, max_len=16,
+                                       eos_token=-1, deadline_s=5.0,
+                                       clock=clock), lm_params)
+    r1 = eng.submit([1, 2], max_new=2)       # t_submit = 0
+    r2 = eng.submit([3, 4], max_new=2)       # t_submit = 1
+    eng.run_until_drained()
+    # admission pass at t=20: both exceed the 5 s deadline.
+    assert r1.timed_out and r2.timed_out
+    assert eng.timed_out == 2
+    assert eng.request_stats()["timed_out"] == 2
+    assert eng.request_stats()["requests"] == 0

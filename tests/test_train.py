@@ -12,7 +12,7 @@ from repro.configs import get_smoke_config
 from repro.data.pipeline import ShardedBatcher
 from repro.data.synthetic import lm_token_batch
 from repro.train import CheckpointManager, TrainConfig, Trainer
-from repro.train.faults import HealthMonitor, PreemptionGuard
+from repro.train.faults import HealthMonitor, PreemptionGuard, retry
 
 
 def _mk_trainer(tmp_path, steps=20, seed=0, checkpoint_every=5, **kw):
@@ -134,6 +134,50 @@ def test_health_monitor_straggler():
         assert not mon.record(s, 0.1)
     assert mon.record(10, 1.0)               # 10× the EWMA
     assert mon.straggler_events[0][0] == 10
+
+
+def test_health_monitor_excludes_stragglers_from_ewma():
+    """A flagged step must not poison the baseline it was judged
+    against: after stragglers the EWMA is unchanged, so a subsequent
+    moderate straggler is still caught."""
+    mon = HealthMonitor(straggler_factor=3.0, ewma=0.9)
+    for s in range(3):
+        assert not mon.record(s, 1.0)
+    assert mon.mean_step_s == pytest.approx(1.0)
+    assert mon.record(3, 4.0)                # straggler: 4 > 3×1.0
+    # the 4.0 did NOT fold into the mean (old code inflated it to 1.3,
+    # after which 3.5 < 3×1.3 slipped through)
+    assert mon.mean_step_s == pytest.approx(1.0)
+    assert mon.record(4, 3.5)                # still caught
+    assert [e[0] for e in mon.straggler_events] == [3, 4]
+
+
+def test_retry_rejects_nonpositive_attempts():
+    with pytest.raises(ValueError, match="attempts"):
+        retry(lambda: 1, attempts=0)
+
+
+def test_retry_success_and_no_sleep_after_last_attempt(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr("repro.train.faults.time.sleep", sleeps.append)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, attempts=3, backoff_s=0.1) == "ok"
+    assert sleeps == [pytest.approx(0.1), pytest.approx(0.2)]
+
+    sleeps.clear()
+    with pytest.raises(RuntimeError, match="always"):
+        retry(lambda: (_ for _ in ()).throw(RuntimeError("always")),
+              attempts=2, backoff_s=0.1)
+    # the final failed attempt re-raises immediately — no trailing
+    # full-backoff sleep
+    assert sleeps == [pytest.approx(0.1)]
 
 
 def test_kwta_and_compression_in_trainer(tmp_path):
