@@ -30,7 +30,14 @@ run-record JSONL. One command produces all three:
         --backend analog_state --obs-cadence 10 \
         --trace trace.json --record run.jsonl
 
+The real sequential streams (seq_mnist, seq_cifar10 — docs/data.md) and
+the ragged keyword_fewshot stream run through the same compiled sweep:
+the scenario's registered PadPolicy routes them through the masked
+program, and --offline pins the checksum-verified download path to the
+deterministic surrogate.
+
     PYTHONPATH=src python examples/continual_learning.py --algo dfa --backend analog_state
+    PYTHONPATH=src python examples/continual_learning.py --scenario seq_mnist --offline
     PYTHONPATH=src python examples/continual_learning.py --scenario rotated --seeds 3
     PYTHONPATH=src python examples/continual_learning.py --scenario class_incremental --replay-policy loss_aware
     PYTHONPATH=src python examples/continual_learning.py --trainer dfa_hw   # legacy
@@ -70,6 +77,10 @@ def main():
                          "(default: the scenario's preferred policy, "
                          "else reservoir)")
     ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--offline", action="store_true",
+                    help="real-data scenarios (seq_mnist, seq_cifar10): "
+                         "skip the download and use the deterministic "
+                         "synthetic surrogate (same as REPRO_DATA_OFFLINE=1)")
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--hidden", type=int, default=100)
     ap.add_argument("--seeds", type=int, default=1,
@@ -103,8 +114,15 @@ def main():
             tracer = Tracer(process_name="continual_learning")
         obs = ObsSpec(cadence=args.obs_cadence or 1, tracer=tracer)
 
-    tasks = build_scenario(args.scenario, seed=0, n_tasks=args.tasks,
-                           n_train=600, n_test=200)
+    scenario_kwargs = dict(n_tasks=args.tasks, n_train=600, n_test=200)
+    if args.offline:
+        # Only the downloading builders take the knob; the synthetic
+        # streams are offline by construction.
+        if args.scenario not in ("seq_mnist", "seq_cifar10"):
+            ap.error("--offline only applies to the real-data scenarios "
+                     "(seq_mnist, seq_cifar10)")
+        scenario_kwargs["offline"] = True
+    tasks = build_scenario(args.scenario, seed=0, **scenario_kwargs)
     cfg = scenario_miru_config(tasks, n_h=args.hidden)
 
     if args.trainer is not None:
@@ -152,11 +170,12 @@ def main():
             ap.error("--seeds replicates inside the compiled sweep; "
                      "drop --loop to use it")
         res = run_continual(cfg, trainer, tasks, replay=replay,
-                            device=backend, obs=obs)
+                            device=backend, obs=obs, pad=scenario.pad)
     else:
         seeds = list(range(args.seeds)) if args.seeds > 1 else None
         res = run_compiled(cfg, trainer, tasks, replay=replay,
-                           device=backend, seeds=seeds, obs=obs)
+                           device=backend, seeds=seeds, obs=obs,
+                           uniform=scenario.uniform, pad=scenario.pad)
 
     print("\naccuracy after each task (mean over seen tasks):")
     for t, a in enumerate(res["acc_after_each"]):

@@ -201,7 +201,8 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
                         x_seq: jax.Array, key: jax.Array,
                         backend: DeviceBackend,
                         state: Optional[Any] = None,
-                        fused: Optional[bool] = None
+                        fused: Optional[bool] = None,
+                        lengths: Optional[jax.Array] = None
                         ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """MiRU forward with the hidden-layer recurrence routed through a
     device backend.
@@ -230,6 +231,14 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
     telemetry is enabled, every tile access, ADC conversion and
     interpolation is metered — including the streamed per-step readout
     the chip performs — and flushed jit-safely at the end.
+
+    ``lengths`` ((B,) int32) supports zero-end-padded ragged sequences:
+    the readout is taken at each row's own last true step instead of
+    t = T−1. The recurrence is causal, so padding never perturbs the
+    states it reads; ``lengths=None`` (or all-full lengths) is
+    bitwise-identical to the historical program. The chip still streams
+    all T steps — the telemetry deliberately meters the padded tail as
+    executed work (docs/data.md).
     """
     B, T, _ = x_seq.shape
     tele = backend.telemetry
@@ -239,7 +248,14 @@ def miru_forward_device(params: dict[str, jax.Array], cfg: MiRUConfig,
     with tele.scaled(T):
         _meter_chip_step(backend, cfg, B, anchor=x_seq)
     tele.record({meters.SEQUENCES: B}, anchor=x_seq)
-    logits = miru_apply_readout(params, cfg, h_all[:, -1, :])
+    if lengths is None:
+        h_last = h_all[:, -1, :]
+    else:
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        h_last = jnp.take_along_axis(
+            h_all, jnp.broadcast_to(idx, (B, 1, h_all.shape[-1])),
+            axis=1)[:, 0, :]
+    logits = miru_apply_readout(params, cfg, h_last)
     tele.emit_pending()
     return logits, {"h_all": h_all, "h_prev": h_prev, "pre": pre}
 
@@ -314,6 +330,84 @@ def _make_raw_steps(cfg: MiRUConfig, trainer: TrainerSpec,
         logits, _ = fwd(params, cfg, x, key, dev_state)
         backend.telemetry.emit_pending()
         return acc_fn(logits, y)
+
+    return train_step, evaluate, opt
+
+
+def _make_masked_steps(cfg: MiRUConfig, trainer: TrainerSpec,
+                       backend: DeviceBackend):
+    """The masked-reduction twins of :func:`_make_raw_steps` for padded
+    ragged schedules (:mod:`repro.data.ragged`).
+
+    ``train_step(params, opt_state, key, x, y, dev_state, valid,
+    lengths)`` and ``evaluate(params, key, x, y, dev_state, valid,
+    lengths)``: ``valid`` is the (B,) row mask (padded rows contribute
+    nothing to loss, gradients or accuracy), ``lengths`` the (B,) true
+    sequence lengths (readout and DFA error at each row's own last
+    step). Every reduction divides by Σvalid with the same ``lax.div``
+    the unmasked mean uses, and masks multiply by exactly 0.0/1.0, so
+    an all-valid, all-full-length batch computes the same values as the
+    raw steps — equal to float32 ulp-level (XLA may fuse the runtime
+    mask multiplies into the reductions and reassociate by ±1 ulp; see
+    :mod:`repro.data.ragged`), the tolerance benchmarks/data_bench.py
+    gates.
+    """
+    opt = adam(trainer.adam_lr)
+
+    def fwd(p, c, xs, k, st, lengths):
+        return miru_forward_device(p, c, xs, k, backend, state=st,
+                                   fused=trainer.fused_recurrence,
+                                   lengths=lengths)
+
+    if trainer.algo == "adam":
+        def train_step(params, opt_state, key, x, y, dev_state, valid,
+                       lengths):
+            k_fwd, k_wr = jax.random.split(key)
+
+            def loss_fn(p):
+                logits, _ = fwd(p, cfg, x, k_fwd, dev_state, lengths)
+                m = valid.astype(logits.dtype)
+                logz = jax.nn.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(logits, y[..., None],
+                                         axis=-1)[..., 0]
+                return jnp.sum((logz - ll) * m) \
+                    / jnp.maximum(jnp.sum(m), 1.0)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, opt_state_ = opt.update(grads, opt_state, params)
+            params, applied, dev_state = backend.device_apply_update(
+                params, updates, k_wr, state=dev_state)
+            backend.telemetry.emit_pending()
+            return params, opt_state_, loss, applied, dev_state
+
+    elif trainer.algo == "dfa":
+        def train_step(params, opt_state, key, x, y, dev_state, valid,
+                       lengths):
+            psi = opt_state["psi"]
+            k_fwd, k_wr = jax.random.split(key)
+            loss, grads = dfa_mod.dfa_grads(
+                params, psi, cfg, x, y,
+                forward_fn=lambda p, c, xs: fwd(p, c, xs, k_fwd,
+                                                dev_state, lengths),
+                row_valid=valid, lengths=lengths)
+            updates = dfa_mod.scaled_sparse_updates(
+                grads, trainer.lr, trainer.kwta_keep_frac,
+                trainer.hidden_lr_scale)
+            params, applied, dev_state = backend.device_apply_update(
+                params, updates, k_wr, state=dev_state)
+            backend.telemetry.emit_pending()
+            return params, opt_state, loss, applied, dev_state
+
+    else:
+        raise ValueError(f"unknown trainer algo {trainer.algo!r}; "
+                         f"expected 'adam' or 'dfa'")
+
+    def evaluate(params, key, x, y, dev_state, valid, lengths):
+        logits, _ = fwd(params, cfg, x, key, dev_state, lengths)
+        backend.telemetry.emit_pending()
+        m = valid.astype(jnp.float32)
+        ok = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return jnp.sum(ok * m) / jnp.maximum(jnp.sum(m), 1.0)
 
     return train_step, evaluate, opt
 
@@ -445,22 +539,46 @@ class BatchSchedule:
     (in-graph policies read theirs from the scan-carried buffer
     instead). Not part of :meth:`digest` — the golden schedule hash
     covers only the batch content.
+
+    ``row_valid``/``lengths`` exist only on schedules built under a
+    :class:`repro.data.ragged.PadPolicy`: per task, ``row_valid[t]`` is
+    (S_t, B) bool (False on zero-padded rows of a kept partial batch)
+    and ``lengths[t]`` is (S_t, B) int32 true sequence lengths. None on
+    both (the default build) is the historical schedule, byte for byte.
     """
     x: list[np.ndarray]
     y: list[np.ndarray]
     replay_traffic: dict = dataclasses.field(default_factory=dict)
     occupancy: list[np.ndarray] = dataclasses.field(default_factory=list)
+    row_valid: Optional[list] = None
+    lengths: Optional[list] = None
 
     def digest(self) -> str:
         """sha256 over the materialized stream — the schedule's identity
         for golden-hash gates (tests/test_determinism.py and the
         bench-scenarios CI job both pin
-        :data:`GOLDEN_PERMUTED_SCHEDULE_SHA256`)."""
+        :data:`GOLDEN_PERMUTED_SCHEDULE_SHA256`). Masked schedules fold
+        the masks in too (mask content is schedule identity)."""
         import hashlib
         h = hashlib.sha256()
         for arr in self.x + self.y:
             h.update(np.ascontiguousarray(arr).tobytes())
+        if self.row_valid is not None:
+            for arr in self.row_valid + self.lengths:
+                h.update(np.ascontiguousarray(arr).tobytes())
         return h.hexdigest()
+
+    @property
+    def has_masks(self) -> bool:
+        """True when any row is padding or any sequence is short — the
+        signal (with eval padding and ``PadPolicy.force``) that the
+        compiled sweep must build the masked program."""
+        if self.row_valid is None:
+            return False
+        if any(not rv.all() for rv in self.row_valid):
+            return True
+        return any(ln.size and int(ln.min()) < xt.shape[2]
+                   for ln, xt in zip(self.lengths, self.x))
 
     @property
     def steps_per_task(self) -> list[int]:
@@ -503,7 +621,8 @@ def _stream_context(tasks: list[TaskData]) -> dict[str, int]:
 
 
 def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
-                         tasks: list[TaskData]) -> BatchSchedule:
+                         tasks: list[TaskData],
+                         pad: Optional[Any] = None) -> BatchSchedule:
     """Materialize the replay-mixed batch stream ``run_continual`` trains
     on, consuming the host RNG streams (epoch shuffle, replay-policy
     sampler, stochastic quantizer) in exactly the order the training
@@ -523,12 +642,27 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
     :attr:`BatchSchedule.replay_traffic`; the runner that consumes the
     schedule credits it to its telemetry (building a schedule that is
     then discarded — e.g. the ragged-stream fallback — meters nothing).
+
+    ``pad`` (a :class:`repro.data.ragged.PadPolicy`) builds the masked
+    schedule for ragged streams: the tasks are expected already
+    time-padded (:func:`repro.data.ragged.pad_tasks`), per-row true
+    lengths are threaded onto :attr:`BatchSchedule.lengths`, and
+    ``pad.last_batch`` picks the partial-final-batch semantics —
+    ``"drop"`` discards it exactly as the default build always has,
+    ``"pad"`` keeps it zero-padded with the pad rows marked invalid in
+    :attr:`BatchSchedule.row_valid` (never offered to the replay
+    buffer; contributing nothing to loss or gradient). A padded batch's
+    replay tail still occupies the last ``n_rep`` rows. With ``pad``
+    given but nothing actually partial or short, the emitted stream —
+    batch content, buffer offers, host-RNG consumption — is byte-
+    identical to the default build.
     """
     from repro.core.replay import ReplayBuffer
     from repro.replay import get_policy_class, make_policy
 
     T, F = tasks[0].x_train.shape[1:]
     bs = trainer.batch_size
+    keep_partial = pad is not None and pad.last_batch == "pad"
     policy_name = replay.resolved_policy
     in_graph = get_policy_class(policy_name).in_graph
     buffer = None
@@ -542,17 +676,39 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
     xs_all: list[np.ndarray] = []
     ys_all: list[np.ndarray] = []
     occ_all: list[np.ndarray] = []
+    rv_all: list[np.ndarray] = []
+    ln_all: list[np.ndarray] = []
     for t, task in enumerate(tasks):
         n = task.x_train.shape[0]
+        row_len = (np.asarray(task.train_lengths, np.int32)
+                   if task.train_lengths is not None
+                   else np.full(n, T, np.int32))
         xs_t: list[np.ndarray] = []
         ys_t: list[np.ndarray] = []
         occ_t: list[int] = []
+        rv_t: list[np.ndarray] = []
+        ln_t: list[np.ndarray] = []
+        stop = n + 1 if keep_partial else n - bs + 1
         for _ in range(trainer.epochs_per_task):
             order = host_rng.permutation(n)
-            for s in range(0, n - bs + 1, bs):
+            for s in range(0, stop, bs):
                 idx = order[s:s + bs]
+                n_real = len(idx)
+                if n_real == 0:
+                    continue
                 xb = task.x_train[idx]
                 yb = task.y_train[idx]
+                rv = np.ones(bs, bool)
+                ln = np.full(bs, T, np.int32)
+                ln[:n_real] = row_len[idx]
+                if n_real < bs:
+                    # Kept partial batch: zero rows, marked invalid.
+                    xb = np.concatenate(
+                        [xb, np.zeros((bs - n_real, T, F), xb.dtype)])
+                    yb = np.concatenate(
+                        [yb, np.zeros(bs - n_real, yb.dtype)])
+                    rv[n_real:] = False
+                    ln[n_real:] = 1
                 # Mix in replay (after the first task has populated it);
                 # replay occupies the tail n_rep rows of the batch.
                 n_rep = 0
@@ -564,25 +720,43 @@ def build_batch_schedule(trainer: TrainerSpec, replay: ReplaySpec,
                         xb = np.concatenate([xb[:bs - n_rep],
                                              xr.reshape(-1, T, F)])
                         yb = np.concatenate([yb[:bs - n_rep], yr])
+                        # Rehearsal rows are real work, replayed at
+                        # full T (the buffer stores fixed-shape rows).
+                        rv[bs - n_rep:] = True
+                        ln[bs - n_rep:] = T
                 # Offer only the *fresh* rows to the policy — all of
                 # them (on task 0 no replay was mixed, so the whole
-                # batch is fresh; never re-offer rehearsed rows).
+                # batch is fresh; never re-offer rehearsed rows), and
+                # never the invalid zero-padding of a partial batch.
                 n_fresh = bs - n_rep
                 if buffer is not None and n_fresh > 0:
+                    # The valid kwarg only appears on padded schedules —
+                    # the historical call shape stays byte-for-byte.
+                    mask_kw = ({"valid": rv[:n_fresh]}
+                               if pad is not None else {})
                     buffer.add_batch(xb[:n_fresh], yb[:n_fresh],
-                                     task_ids=np.full(n_fresh, t))
+                                     task_ids=np.full(n_fresh, t),
+                                     **mask_kw)
                 xs_t.append(xb)
                 ys_t.append(yb)
                 occ_t.append(buffer.size if buffer is not None else 0)
+                rv_t.append(rv)
+                ln_t.append(ln)
         xs_all.append(np.stack(xs_t) if xs_t
                       else np.zeros((0, bs, T, F), np.float32))
         ys_all.append(np.stack(ys_t) if ys_t
                       else np.zeros((0, bs), np.int32))
         occ_all.append(np.asarray(occ_t, np.int32))
+        rv_all.append(np.stack(rv_t) if rv_t
+                      else np.zeros((0, bs), bool))
+        ln_all.append(np.stack(ln_t) if ln_t
+                      else np.zeros((0, bs), np.int32))
     return BatchSchedule(x=xs_all, y=ys_all,
                          replay_traffic=dict(buffer.traffic)
                          if buffer is not None else {},
-                         occupancy=occ_all)
+                         occupancy=occ_all,
+                         row_valid=rv_all if pad is not None else None,
+                         lengths=ln_all if pad is not None else None)
 
 
 def evaluate_tasks(evaluate, params, key, tasks: list[TaskData],
@@ -629,7 +803,8 @@ def run_continual(cfg: MiRUConfig,
                   tasks: list[TaskData],
                   replay: Optional[ReplaySpec] = None,
                   device: Union[str, DeviceBackend, None] = None,
-                  obs: Optional[Any] = None) -> dict[str, Any]:
+                  obs: Optional[Any] = None,
+                  pad: Optional[Any] = None) -> dict[str, Any]:
     """Train through the task sequence; return the R matrix, MA, and
     (optionally) endurance statistics.
 
@@ -645,25 +820,53 @@ def run_continual(cfg: MiRUConfig,
     (the loop computes the identical per-step scalars with the same
     jitted :func:`repro.obs.step_stats`).
     ``obs=None`` (the default) adds nothing to the loop.
+
+    ``pad`` is a :class:`repro.data.ragged.PadPolicy` for ragged task
+    streams: tasks are padded onto one bucketed shape and the loop runs
+    the masked step/eval twins (:func:`_make_masked_steps`) over the
+    masked schedule — or, when nothing is actually ragged and
+    ``pad.force`` is off, the exact unmasked program. The loop walks
+    only real steps (the compiled sweep's step-axis padding does not
+    exist here), on the same PRNG chain, which is what keeps the two
+    paths bit-comparable on padded streams too.
     """
     trainer, rspec, backend = _resolve_specs(spec, replay, device)
 
-    key, params, psi, dev_state = _init_run(cfg, trainer, backend)
+    from repro.replay import get_policy_class, ingraph_init
+    in_graph = get_policy_class(rspec.resolved_policy).in_graph
+    masked = False
+    ev_valid = ev_len = None
+    if pad is not None:
+        from repro.data.ragged import eval_masks, pad_tasks
+        if in_graph:
+            raise ValueError(
+                "in-graph replay policies (loss_aware) are not supported "
+                "on the padded ragged path; pick a host-materialized "
+                "policy (reservoir/ring/class_balanced/task_stratified)")
+        tasks, eval_padded = pad_tasks(tasks, pad)
 
-    raw_train, raw_eval, opt = _make_raw_steps(cfg, trainer, backend)
-    if trainer.algo == "adam":
-        opt_state = opt.init(params)
-    else:
-        opt_state = {"psi": psi}
+    key, params, psi, dev_state = _init_run(cfg, trainer, backend)
 
     # The (host-policy) replay-mixed batch stream is training-state-
     # independent, so it is materialized up front; the compiled sweep
     # consumes the same schedule, which keeps the two paths
     # bit-comparable. In-graph policies (loss_aware) get a fresh-only
     # schedule plus a device-resident buffer carried through the steps.
-    from repro.replay import get_policy_class, ingraph_init
-    in_graph = get_policy_class(rspec.resolved_policy).in_graph
-    schedule = build_batch_schedule(trainer, rspec, tasks)
+    schedule = build_batch_schedule(trainer, rspec, tasks, pad=pad)
+    if pad is not None:
+        from repro.data.ragged import needs_masked_program
+        masked = needs_masked_program(pad, eval_padded, schedule)
+        if masked:
+            ev_valid, ev_len = eval_masks(tasks)
+
+    raw_train, raw_eval, opt = (_make_masked_steps if masked
+                                else _make_raw_steps)(cfg, trainer,
+                                                      backend)
+    if trainer.algo == "adam":
+        opt_state = opt.init(params)
+    else:
+        opt_state = {"psi": psi}
+
     evaluate = jax.jit(raw_eval)
     rstate = None
     if in_graph:
@@ -706,6 +909,13 @@ def run_continual(cfg: MiRUConfig,
                     jnp.asarray(schedule.x[t][s]),
                     jnp.asarray(schedule.y[t][s]), dev_state, rstate,
                     replay_on)
+            elif masked:
+                params, opt_state, loss, applied, dev_state = train_step(
+                    params, opt_state, k_step,
+                    jnp.asarray(schedule.x[t][s]),
+                    jnp.asarray(schedule.y[t][s]), dev_state,
+                    jnp.asarray(schedule.row_valid[t][s]),
+                    jnp.asarray(schedule.lengths[t][s]))
             else:
                 params, opt_state, loss, applied, dev_state = train_step(
                     params, opt_state, k_step,
@@ -720,8 +930,15 @@ def run_continual(cfg: MiRUConfig,
                 obs_occ.append(np.asarray(oc))
             backend.record_endurance(applied)
         key, k_eval = jax.random.split(key)
-        R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval, tasks, t,
-                                      dev_state)
+        if masked:
+            for i, task in enumerate(tasks[:t + 1]):
+                R[t, i] = float(evaluate(
+                    params, k_eval, jnp.asarray(task.x_test),
+                    jnp.asarray(task.y_test), dev_state,
+                    jnp.asarray(ev_valid[i]), jnp.asarray(ev_len[i])))
+        else:
+            R[t, :t + 1] = evaluate_tasks(evaluate, params, k_eval,
+                                          tasks, t, dev_state)
 
     out: dict[str, Any] = {
         "R": R,

@@ -43,6 +43,8 @@ def dfa_grads(params: dict[str, jax.Array], psi: jax.Array, cfg: MiRUConfig,
               use_fused: bool = False,
               forward_fn=None,
               time_norm: bool = True,
+              row_valid: Optional[jax.Array] = None,
+              lengths: Optional[jax.Array] = None,
               ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """DFA-through-time gradients (Algorithm 1).
 
@@ -59,28 +61,59 @@ def dfa_grads(params: dict[str, jax.Array], psi: jax.Array, cfg: MiRUConfig,
         destabilizes training. Folding 1/n_T into Ψ (a shift in hardware)
         restores the match; the paper leaves Ψ's scale as a free design
         choice, so this is a faithful calibration, not a rule change.
+      row_valid: (B,) bool — padded-batch rows to exclude from the loss
+        and the error. The mean reduction becomes sum(valid)/Σvalid,
+        computed with the same divide ops as the unmasked path so an
+        all-valid mask is bitwise-identical to passing None.
+      lengths: (B,) int32 per-example true sequence lengths (zero-end-
+        padded inputs). The output error reads h at each row's own last
+        step, the per-step accumulation is masked past it, and
+        ``time_norm`` scales by 1/length per row. All-full lengths are
+        bitwise-identical to None.
 
     Returns (loss, grads) where grads matches the params pytree.
     """
-    B = x_seq.shape[0]
+    B, T = x_seq.shape[0], x_seq.shape[1]
     fwd = forward_fn if forward_fn is not None else (
         lambda p, c, x: miru_forward(p, c, x, use_fused=use_fused))
     logits, aux = fwd(params, cfg, x_seq)
-    loss = softmax_cross_entropy(logits, labels)
 
-    # Output layer (lines 9-10). Mean-reduced over the batch.
+    # Output layer (lines 9-10). Mean-reduced over the (valid) batch.
     y = onehot(labels, cfg.n_y, dtype=logits.dtype)
-    delta_o = (jax.nn.softmax(logits, axis=-1) - y) / B          # (B, n_y)
-    h_T = aux["h_all"][:, -1, :]                                  # (B, n_h)
+    if row_valid is None:
+        loss = softmax_cross_entropy(logits, labels)
+        delta_o = (jax.nn.softmax(logits, axis=-1) - y) / B      # (B, n_y)
+    else:
+        m = row_valid.astype(logits.dtype)                        # (B,)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        loss = jnp.sum((logz - ll) * m) / denom
+        delta_o = (jax.nn.softmax(logits, axis=-1) - y) \
+            * m[:, None] / denom
+    if lengths is None:
+        h_T = aux["h_all"][:, -1, :]                              # (B, n_h)
+    else:
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        h_T = jnp.take_along_axis(
+            aux["h_all"],
+            jnp.broadcast_to(idx, (B, 1, aux["h_all"].shape[-1])),
+            axis=1)[:, 0, :]
     g_wo = h_T.T @ delta_o
     g_bo = jnp.sum(delta_o, axis=0)
 
     # Hidden layer (lines 12-17). e is shared across time.
     e = delta_o @ psi                                             # (B, n_h)
     if time_norm:
-        e = e / x_seq.shape[1]
+        e = e / (T if lengths is None
+                 else lengths.astype(e.dtype)[:, None])
     dtanh = 1.0 - jnp.tanh(aux["pre"]) ** 2                       # (B,T,n_h)
     delta_h = cfg.lam * e[:, None, :] * dtanh                     # (B,T,n_h)
+    if lengths is not None:
+        tmask = (jnp.arange(T)[None, :]
+                 < lengths[:, None]).astype(delta_h.dtype)
+        delta_h = delta_h * tmask[:, :, None]
     g_wh = jnp.einsum("btx,bth->xh", x_seq, delta_h)
     g_uh = jnp.einsum("bth,btk->hk", cfg.beta * aux["h_prev"], delta_h)
     g_bh = jnp.sum(delta_h, axis=(0, 1))

@@ -301,15 +301,22 @@ class ReplayBuffer:
         return True
 
     def add_batch(self, xs: np.ndarray, ys: np.ndarray,
-                  task_ids=None) -> int:
+                  task_ids=None, valid=None) -> int:
         """Offer a batch to the policy. Equivalent to per-example
         :meth:`add` calls bit-for-bit (same key chain, same quantizer
         draws — asserted in tests/test_replay.py), but all accepted
         examples are quantized in one vmapped dispatch instead of one
-        jax call per example — the schedule-building hot path."""
+        jax call per example — the schedule-building hot path.
+
+        ``valid`` (a (B,) bool mask) gates padded rows out entirely:
+        an invalid row is never offered to the policy and consumes no
+        sampler or quantizer RNG, so a zero-padded batch leaves the
+        buffer in exactly the state the unpadded batch would."""
         slots: list[int] = []
         keep: list[int] = []
         for i in range(len(xs)):
+            if valid is not None and not valid[i]:
+                continue
             tid = int(task_ids[i]) if task_ids is not None else 0
             slot = self.policy.select_insert(int(ys[i]), tid)
             if slot is None:

@@ -1,22 +1,39 @@
-"""Data pipeline: synthetic generators + deterministic sharded batching.
+"""Data pipeline: synthetic + real streams, ragged padding, batching.
 
-MNIST / CIFAR-10 are not available offline; `synthetic` provides matched-
-geometry substitutes (DESIGN.md §8): permuted-prototype sequence streams
-(28 steps × 28 features, 10 classes), split Gaussian-mixture "ResNet-18
-feature" streams (512-d), and the additional continual-learning streams
-(rotated, noisy-label, gradual drift, class-incremental, online
-streaming) registered in `repro.scenarios`. `pipeline` provides the
-sharded, deterministic, restart-safe batch iterator used by the LM
-trainer and the streaming scenario.
+- `synthetic`: matched-geometry substitutes (DESIGN.md §8) — permuted-
+  prototype sequence streams (28 steps × 28 features, 10 classes), split
+  Gaussian-mixture "ResNet-18 feature" streams (512-d), and the further
+  continual-learning streams (rotated, noisy-label, gradual drift,
+  class-incremental, online streaming) registered in `repro.scenarios`.
+- `real`: sequential (row-wise) MNIST and CIFAR-10 adapters with
+  checksum-verified download/cache and a deterministic synthetic
+  surrogate when offline, plus the few-shot keyword stream.
+- `ragged`: the padding contract (`PadPolicy`, `pad_tasks`,
+  `eval_masks`, `needs_masked_program`) that lets unequal-shape task
+  streams run through the one compiled sweep program under validity
+  masks. See docs/data.md.
+- `pipeline`: the sharded, deterministic, restart-safe batch iterator
+  (LM trainer, streaming scenario) and `shard_tasks` — the per-chip
+  fleet data loader.
 """
 from repro.data.synthetic import (TaskData, lm_token_batch,
                                   make_class_incremental_tasks,
                                   make_drift_tasks, make_noisy_label_tasks,
                                   make_permuted_tasks, make_rotated_tasks,
                                   make_split_tasks, make_streaming_tasks)
-from repro.data.pipeline import ShardedBatcher, DataState
+from repro.data.pipeline import (ShardedBatcher, DataState, shard_tasks)
+from repro.data.ragged import (PadPolicy, bucket_size, eval_masks,
+                               needs_masked_program, pad_tasks)
+from repro.data.real import (load_cifar10, load_mnist,
+                             make_keyword_fewshot_tasks,
+                             make_seq_cifar10_tasks, make_seq_mnist_tasks)
 
 __all__ = ["make_permuted_tasks", "make_split_tasks", "make_rotated_tasks",
            "make_noisy_label_tasks", "make_drift_tasks",
            "make_class_incremental_tasks", "make_streaming_tasks",
-           "TaskData", "lm_token_batch", "ShardedBatcher", "DataState"]
+           "TaskData", "lm_token_batch", "ShardedBatcher", "DataState",
+           "shard_tasks",
+           "PadPolicy", "bucket_size", "eval_masks",
+           "needs_masked_program", "pad_tasks",
+           "load_mnist", "load_cifar10", "make_seq_mnist_tasks",
+           "make_seq_cifar10_tasks", "make_keyword_fewshot_tasks"]

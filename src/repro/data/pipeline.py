@@ -13,7 +13,7 @@ Design goals at 1000+ nodes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -26,6 +26,26 @@ class DataState:
     seed: int = 0
 
 
+def _collate_ragged(rows: Sequence[np.ndarray],
+                    pad_to: Optional[int] = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Zero-pad a list of (L_i, ...) rows to one (N, L, ...) array plus
+    the (N,) int32 true lengths. ``pad_to`` pins the padded length (a
+    fixed compile shape across steps); None pads to the batch max —
+    either way the result is a pure function of the rows, so a restored
+    batcher re-collates bit-identically."""
+    rows = [np.asarray(r) for r in rows]
+    lengths = np.array([r.shape[0] for r in rows], np.int32)
+    tgt = int(lengths.max()) if pad_to is None else int(pad_to)
+    if lengths.max() > tgt:
+        raise ValueError(f"ragged row of length {int(lengths.max())} "
+                         f"exceeds pad_to={tgt}")
+    out = np.zeros((len(rows), tgt) + rows[0].shape[1:], rows[0].dtype)
+    for i, r in enumerate(rows):
+        out[i, :r.shape[0]] = r
+    return out, lengths
+
+
 class ShardedBatcher:
     """Produces per-step batches deterministically from (seed, step).
 
@@ -33,19 +53,37 @@ class ShardedBatcher:
     batch; sharding to devices happens via jax.device_put with the target
     sharding (on a single host this is a plain put; under multi-process it
     would use make_array_from_process_local_data — same call signature).
+
+    Ragged generator outputs — a key whose value is a *list* of
+    unequal-length rows — are collated in :meth:`peek`: zero-padded to
+    one array plus a ``{key}_lengths`` companion (``pad_to`` pins the
+    padded length to a fixed compile shape). Because collation happens
+    inside ``peek``, a batcher restored from :meth:`state_dict` replays
+    ragged steps bit-identically — the padding is recomputed from the
+    regenerated rows, never checkpointed.
     """
 
     def __init__(self, gen_fn: Callable[[np.random.Generator, int],
                                         dict[str, np.ndarray]],
-                 seed: int = 0, sharding: Optional[Any] = None):
+                 seed: int = 0, sharding: Optional[Any] = None,
+                 pad_to: Optional[int] = None):
         self._gen = gen_fn
         self.state = DataState(step=0, seed=seed)
         self._sharding = sharding
+        self._pad_to = pad_to
 
     def peek(self, step: int) -> dict[str, np.ndarray]:
         rng = np.random.default_rng(
             np.random.SeedSequence([self.state.seed, step]))
-        return self._gen(rng, step)
+        raw = self._gen(rng, step)
+        batch: dict[str, np.ndarray] = {}
+        for k, v in raw.items():
+            if isinstance(v, (list, tuple)):
+                batch[k], batch[f"{k}_lengths"] = _collate_ragged(
+                    v, self._pad_to)
+            else:
+                batch[k] = v
+        return batch
 
     def next(self) -> dict[str, Any]:
         batch = self.peek(self.state.step)
@@ -63,3 +101,32 @@ class ShardedBatcher:
 
     def load_state_dict(self, d: dict[str, int]) -> None:
         self.state = DataState(step=int(d["step"]), seed=int(d["seed"]))
+
+
+def shard_tasks(tasks, n_shards: int, index: int):
+    """Per-chip training shard of a task stream (repro.fleet data
+    loading): shard ``index`` of ``n_shards`` takes the strided slice
+    ``index::n_shards`` of every task's training rows, truncated to
+    ``n_train // n_shards`` rows so all shards share one compile shape.
+    Shards are pairwise disjoint; test sets are shared untouched (every
+    chip evaluates the full protocol). Requires at least one training
+    row per shard."""
+    from repro.data.synthetic import TaskData
+    if not 0 <= index < n_shards:
+        raise ValueError(f"shard index {index} out of range for "
+                         f"{n_shards} shards")
+    out = []
+    for t in tasks:
+        n = t.x_train.shape[0] // n_shards
+        if n == 0:
+            raise ValueError(
+                f"task {t.task_id} has {t.x_train.shape[0]} training "
+                f"rows — fewer than {n_shards} shards")
+        sl = slice(index, index + n * n_shards, n_shards)
+        out.append(TaskData(
+            x_train=t.x_train[sl], y_train=t.y_train[sl],
+            x_test=t.x_test, y_test=t.y_test, task_id=t.task_id,
+            train_lengths=(None if t.train_lengths is None
+                           else t.train_lengths[sl]),
+            test_lengths=t.test_lengths, test_valid=t.test_valid))
+    return out

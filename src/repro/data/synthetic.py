@@ -22,12 +22,23 @@ import numpy as np
 
 @dataclasses.dataclass
 class TaskData:
-    """One task's train/test split. x: (N, T, F) float32 in [0,1]; y: (N,)"""
+    """One task's train/test split. x: (N, T, F) float32 in [0,1]; y: (N,)
+
+    Ragged streams (unequal sequence length or example count across the
+    stream — see :mod:`repro.data.ragged`) carry the optional mask
+    fields: per-example true sequence lengths for zero-end-padded rows
+    (None means every row runs the full T) and the eval validity mask
+    for zero-padded test rows that must not enter the metrics. Builders
+    of uniform streams leave all three None — the historical contract.
+    """
     x_train: np.ndarray
     y_train: np.ndarray
     x_test: np.ndarray
     y_test: np.ndarray
     task_id: int
+    train_lengths: "np.ndarray | None" = None   # (n_train,) int32
+    test_lengths: "np.ndarray | None" = None    # (n_test,) int32
+    test_valid: "np.ndarray | None" = None      # (n_test,) bool
 
 
 def _prototype_dataset(rng: np.random.Generator, n_classes: int, dim: int,

@@ -44,6 +44,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.backends import DeviceBackend, get_backend
 from repro.core.continual import (ReplaySpec, TrainerSpec,
                                   _ingraph_replay_traffic, _make_raw_steps)
+from repro.data.pipeline import shard_tasks
 from repro.data.synthetic import TaskData
 from repro.fleet.heterogeneity import (FleetSpec, device_seeds,
                                        draw_fleet_faults,
@@ -76,6 +77,7 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
               device: Union[str, DeviceBackend, None] = None,
               *, baseline: bool = True,
               max_shards: Optional[int] = None,
+              shard_data: bool = False,
               obs: Optional[Any] = None) -> dict[str, Any]:
     """Train ``fleet.n_devices`` heterogeneous chips through the task
     sequence inside one sharded compiled program.
@@ -93,6 +95,15 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
       n_shards          mesh size actually used (largest divisor of the
                         fleet size that fits the available devices)
       metrics/metrics_std  fleet mean/std, as in the seed-vmapped path
+
+    ``shard_data=True`` turns the fleet into a data-parallel consumer of
+    one stream: chip ``d`` trains on shard ``d`` of ``n_devices`` from
+    :func:`repro.data.pipeline.shard_tasks` — pairwise-disjoint strided
+    training slices truncated to ``n_train // n_devices`` rows (one
+    compile shape for the whole fleet) — while every chip evaluates the
+    full shared test sets. The default (False) keeps every chip on the
+    complete stream and preserves the bitwise ``run_compiled(seeds=...)``
+    parity gate.
 
     ``obs`` is a :class:`repro.obs.ObsSpec`: the result gains a
     ``"runlog"`` whose streams carry a leading ``(n_devices,)`` chip
@@ -125,10 +136,14 @@ def run_fleet(cfg, spec: TrainerSpec, tasks: list[TaskData],
         if tracer is not None else contextlib.nullcontext()
     inputs, scheds = [], []
     with sched_scope:
-        for s in seeds:
+        for d, s in enumerate(seeds):
             tsp = dataclasses.replace(trainer, seed=int(s))
+            # Per-chip data shard: disjoint strided training slices of
+            # the one stream, equal-sized so one trace serves the fleet.
+            chip_tasks = (shard_tasks(tasks, D, d) if shard_data
+                          else tasks)
             inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend,
-                                            tasks, opt)
+                                            chip_tasks, opt)
             if inp is None:
                 raise ValueError("run_fleet needs a shape-uniform task "
                                  "stream (ragged schedules cannot share "

@@ -51,6 +51,11 @@ class ScenarioSpec:
     # only when the caller's ReplaySpec.policy is None (no explicit
     # choice). None keeps the global default (reservoir).
     replay_policy: Optional[str] = None
+    # The padding policy (repro.data.ragged.PadPolicy) ragged streams
+    # declare so the compiled sweep can run them through the masked
+    # program instead of the Python-loop fallback. None (every uniform
+    # scenario) changes nothing.
+    pad: Optional[Any] = None
 
     def build(self, seed: int = 0, **kwargs) -> list[TaskData]:
         return self.builder(seed, **kwargs)
@@ -71,7 +76,8 @@ _REGISTRY: dict[str, ScenarioSpec] = {}
 def register_scenario(name: str, *, description: str = "",
                       uniform: bool = True,
                       trainer_overrides: Optional[Mapping[str, Any]] = None,
-                      replay_policy: Optional[str] = None):
+                      replay_policy: Optional[str] = None,
+                      pad: Optional[Any] = None):
     """Register a scenario builder (usable as a decorator). Re-registering
     a name overwrites it (tests, experiment sweeps)."""
     def _do(builder: Builder) -> Builder:
@@ -79,7 +85,7 @@ def register_scenario(name: str, *, description: str = "",
             name=name, builder=builder, description=description,
             uniform=uniform,
             trainer_overrides=dict(trainer_overrides or {}),
-            replay_policy=replay_policy)
+            replay_policy=replay_policy, pad=pad)
         return builder
     return _do
 
@@ -165,3 +171,45 @@ register_scenario(
                 "under fresh permutations; each example is seen once.",
     trainer_overrides={"epochs_per_task": 1},
 )(make_streaming_tasks)
+
+
+# ---------------------------------------------------------------------------
+# Real sequential streams — repro.data.real (surrogate fallback offline)
+# ---------------------------------------------------------------------------
+
+def _register_real_scenarios():
+    # Deferred so repro.data.real's module import cost (none at import
+    # time — downloads happen inside the builders) stays off the
+    # registry's critical path and the import cycle stays clean.
+    from repro.data.ragged import PadPolicy
+    from repro.data.real import (make_keyword_fewshot_tasks,
+                                 make_seq_cifar10_tasks,
+                                 make_seq_mnist_tasks)
+
+    register_scenario(
+        "seq_mnist",
+        description="Permuted sequential MNIST on real data (row-by-row, "
+                    "28×28; surrogate offline): the paper's §VI-A "
+                    "benchmark stream.",
+        pad=PadPolicy(last_batch="pad"),
+    )(make_seq_mnist_tasks)
+
+    register_scenario(
+        "seq_cifar10",
+        description="Split sequential CIFAR-10 on real data (row-by-row "
+                    "32×96 RGB rows, class-pair binary head; surrogate "
+                    "offline).",
+        pad=PadPolicy(last_batch="pad"),
+    )(make_seq_cifar10_tasks)
+
+    register_scenario(
+        "keyword_fewshot",
+        description="Few-shot continual keyword stream: variable-length "
+                    "utterances and per-task decreasing shot counts — "
+                    "ragged in T and n_train; compiles via PadPolicy.",
+        uniform=False,
+        pad=PadPolicy(last_batch="pad"),
+    )(make_keyword_fewshot_tasks)
+
+
+_register_real_scenarios()

@@ -73,7 +73,10 @@ __all__ = ["run_compiled", "run_sweep", "scenario_miru_config"]
 
 @dataclasses.dataclass
 class _SeedInputs:
-    """Everything one seed's compiled run consumes."""
+    """Everything one seed's compiled run consumes. The mask fields are
+    populated only on schedules built under a
+    :class:`repro.data.ragged.PadPolicy` (the step axis is padded to the
+    longest task; masks say what is real)."""
     params: Any
     opt_state: Any
     dev_state: Any
@@ -82,6 +85,9 @@ class _SeedInputs:
     step_keys: np.ndarray   # (n_tasks, S, 2)
     eval_keys: np.ndarray   # (n_tasks, 2)
     rstate: Any = None      # in-graph replay buffer (loss_aware), or None
+    step_valid: Any = None  # (n_tasks, S) bool — False on step padding
+    row_valid: Any = None   # (n_tasks, S, B) bool — False on row padding
+    lengths: Any = None     # (n_tasks, S, B) int32 true sequence lengths
 
     def as_arrays(self) -> tuple:
         """The positional argument tuple ``_make_run_fn``'s run consumes
@@ -91,14 +97,36 @@ class _SeedInputs:
                 jnp.asarray(self.xs), jnp.asarray(self.ys),
                 jnp.asarray(self.step_keys), jnp.asarray(self.eval_keys))
 
+    def as_masked_arrays(self) -> tuple:
+        """``as_arrays`` plus the validity masks — the argument tuple of
+        ``_make_masked_run_fn``'s run."""
+        return self.as_arrays() + (jnp.asarray(self.step_valid),
+                                   jnp.asarray(self.row_valid),
+                                   jnp.asarray(self.lengths))
+
+
+def _pad_step_axis(a: np.ndarray, s_max: int, fill=0) -> np.ndarray:
+    """Pad a per-task (S_t, ...) array to (s_max, ...) with ``fill``."""
+    if a.shape[0] == s_max:
+        return a
+    pad = np.full((s_max - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad])
+
 
 def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
                        backend: DeviceBackend, tasks: list[TaskData],
-                       opt) -> tuple[_SeedInputs, Any]:
+                       opt, pad=None) -> tuple[_SeedInputs, Any]:
     """Materialize one seed's schedule, initial state and PRNG streams —
-    the exact sequences :func:`run_continual` would consume."""
-    schedule = build_batch_schedule(trainer, rspec, tasks)
-    if not schedule.uniform:
+    the exact sequences :func:`run_continual` would consume.
+
+    With ``pad`` (a :class:`repro.data.ragged.PadPolicy`) a ragged
+    stream never bails to the loop: per-task step counts pad to the
+    longest task with ``step_valid`` masks (the PRNG chain is split over
+    the *real* step count only, so it stays bit-identical to the loop's;
+    pad steps consume dummy zero keys whose results the scan discards).
+    """
+    schedule = build_batch_schedule(trainer, rspec, tasks, pad=pad)
+    if pad is None and not schedule.uniform:
         return None, schedule
     key, params, psi, dev_state = _init_run(cfg, trainer, backend)
     opt_state = opt.init(params) if trainer.algo == "adam" else {"psi": psi}
@@ -117,11 +145,29 @@ def _build_seed_inputs(cfg, trainer: TrainerSpec, rspec: ReplaySpec,
     if get_policy_class(rspec.resolved_policy).in_graph:
         T, F = tasks[0].x_train.shape[1:]
         rstate = ingraph_init(rspec.capacity, (T, F), rspec.bits)
+    if pad is None:
+        return _SeedInputs(
+            params=params, opt_state=opt_state, dev_state=dev_state,
+            xs=np.stack(schedule.x), ys=np.stack(schedule.y),
+            step_keys=np.stack(step_keys), eval_keys=np.stack(eval_keys),
+            rstate=rstate,
+        ), schedule
+    s_max = max(steps) if steps else 0
     return _SeedInputs(
         params=params, opt_state=opt_state, dev_state=dev_state,
-        xs=np.stack(schedule.x), ys=np.stack(schedule.y),
-        step_keys=np.stack(step_keys), eval_keys=np.stack(eval_keys),
+        xs=np.stack([_pad_step_axis(x, s_max) for x in schedule.x]),
+        ys=np.stack([_pad_step_axis(y, s_max) for y in schedule.y]),
+        step_keys=np.stack([_pad_step_axis(k, s_max) for k in step_keys]),
+        eval_keys=np.stack(eval_keys),
         rstate=rstate,
+        step_valid=np.stack([np.arange(s_max) < s for s in steps]),
+        row_valid=np.stack([_pad_step_axis(v, s_max, fill=False)
+                            for v in schedule.row_valid]),
+        # Pad-step lengths are 1 (an always-in-range gather index; the
+        # step's results are discarded anyway, and 1 avoids the 1/0 in
+        # the DFA time normalization).
+        lengths=np.stack([_pad_step_axis(ln, s_max, fill=1)
+                          for ln in schedule.lengths]),
     ), schedule
 
 
@@ -215,6 +261,94 @@ def _make_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
     return run
 
 
+def _make_masked_run_fn(cfg, trainer: TrainerSpec, backend: DeviceBackend,
+                        n_tasks: int, total_real_steps: int,
+                        track_writes: bool, baseline: bool):
+    """The masked twin of :func:`_make_run_fn` for padded ragged
+    schedules: row-validity/true-length aware steps
+    (:func:`repro.core.continual._make_masked_steps`), step-axis padding
+    discarded by a ``jnp.where`` carry select on ``step_valid``, and
+    telemetry metered for the real step total only (padded rows and
+    timesteps *inside* an executed batch still meter — the chip streams
+    them; see docs/data.md).
+
+    On a stream with no actual raggedness (``PadPolicy(force=True)``)
+    every mask is all-true, the carry select is the identity, and the
+    outputs agree with ``_make_run_fn``'s to float32 ulp-level (the
+    tolerance contract of :mod:`repro.data.ragged`, gated in
+    benchmarks/data_bench.py). In-graph replay is unsupported here
+    (:func:`run_compiled` raises before getting this far), so
+    ``rstate`` never rides the carry."""
+    from repro.core.continual import _make_masked_steps
+    raw_train, raw_eval, _ = _make_masked_steps(cfg, trainer, backend)
+    tele = backend.telemetry
+
+    def run(params, opt_state, dev_state, rstate, xs, ys, step_keys,
+            eval_keys, step_valid, row_valid, lengths,
+            eval_x, eval_y, eval_valid, eval_len):
+        del rstate  # host-materialized policies only on the masked path
+
+        def eval_all(p, k_eval, dstate, scale):
+            def one(args):
+                ex, ey, ev, el = args
+                return raw_eval(p, k_eval, ex, ey, dstate, ev, el)
+            with tele.scaled(scale):
+                return jax.lax.map(one, (eval_x, eval_y,
+                                         eval_valid, eval_len))
+
+        def task_body(carry, inp):
+            xs_t, ys_t, keys_t, k_eval, sv_t, rv_t, ln_t = inp
+
+            def step_body(c, sinp):
+                p, o, d, wc = c
+                x, y, k, sv, rv, ln = sinp
+                p2, o2, loss, applied, d2 = raw_train(p, o, k, x, y, d,
+                                                      rv, ln)
+                # Step-axis padding: compute-and-discard. The pad step's
+                # dummy key was never split from the loop's chain, so
+                # keeping the incoming carry preserves PRNG parity.
+                def keep(new, old):
+                    return jax.tree.map(
+                        lambda a, b: jnp.where(sv, a, b), new, old)
+                p, o, d = keep(p2, p), keep(o2, o), keep(d2, d)
+                loss = jnp.where(sv, loss, 0.0)
+                if wc is not None:
+                    wc = {n: wc[n] + jnp.where(
+                        sv, (applied[n] != 0).astype(jnp.int32), 0)
+                        for n in wc}
+                return (p, o, d, wc), loss
+
+            # One scale for the whole (padded) step scan: the real step
+            # total across tasks. On a uniform stream this equals the
+            # unmasked program's nested S × n_tasks product exactly.
+            with tele.scaled(total_real_steps):
+                carry, losses_t = jax.lax.scan(
+                    step_body, carry,
+                    (xs_t, ys_t, keys_t, sv_t, rv_t, ln_t))
+            p, _, d, _ = carry
+            accs = eval_all(p, k_eval, d, n_tasks * n_tasks)
+            return carry, (accs, losses_t)
+
+        wc0 = {n: jnp.zeros(p.shape, jnp.int32)
+               for n, p in params.items()
+               if jnp.ndim(p) >= 2} if track_writes else None
+        with tele.deferred():
+            base_row = eval_all(params, eval_keys[0], dev_state,
+                                n_tasks) \
+                if baseline else jnp.zeros((n_tasks,), jnp.float32)
+            carry, (R_full, losses) = jax.lax.scan(
+                task_body, (params, opt_state, dev_state, wc0),
+                (xs, ys, step_keys, eval_keys, step_valid,
+                 row_valid, lengths))
+        tele.emit_pending()
+        params, opt_state, dev_state, wcounts = carry
+        return {"params": params, "dev_state": dev_state,
+                "R_full": R_full, "losses": losses,
+                "wcounts": wcounts, "baseline_row": base_row}
+
+    return run
+
+
 def _summarize_run(R_full, base_row, losses, baseline: bool) -> dict:
     """One run's summary dict from its raw outputs — shared by the
     seed-vmapped path here and the fleet runner's device axis.
@@ -283,7 +417,8 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
                  *, seeds: Optional[Sequence[int]] = None,
                  baseline: bool = True,
                  uniform: bool = True,
-                 obs: Optional[Any] = None) -> dict[str, Any]:
+                 obs: Optional[Any] = None,
+                 pad: Optional[Any] = None) -> dict[str, Any]:
     """Train through the task sequence inside one compiled program.
 
     Same contract as :func:`run_continual` (and bit-identical ``R``/
@@ -311,6 +446,15 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     compile separated from execute by lowering ahead of time, which is
     also what ``"compile_s"``/``"execute_s"`` report. ``obs=None`` (the
     default) compiles and runs the exact pre-obs program.
+
+    ``pad`` is a :class:`repro.data.ragged.PadPolicy`: ragged streams
+    (unequal n_train/n_test/sequence length across tasks) pad onto one
+    bucketed shape with validity masks and run *compiled* through the
+    masked program instead of falling back to the loop. With a policy
+    attached but nothing actually ragged (and ``force=False``), the
+    exact pre-refactor unmasked program runs — bitwise-identical
+    outputs. Masked runs keep host-materialized replay only (an
+    in-graph policy raises) and do not support obs metric streams.
     """
     trainer = spec
     if not isinstance(trainer, TrainerSpec):
@@ -322,13 +466,24 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     obs_on = obs is not None and getattr(obs, "metrics", False)
     tracer = getattr(obs, "tracer", None) if obs is not None else None
 
+    in_graph = get_policy_class(rspec.resolved_policy).in_graph
+    eval_padded = False
+    if pad is not None:
+        from repro.data.ragged import pad_tasks
+        if in_graph:
+            raise ValueError(
+                "a PadPolicy cannot be combined with an in-graph replay "
+                "policy (loss_aware): the device-resident buffer has no "
+                "row-validity channel; use a host-materialized policy")
+        tasks, eval_padded = pad_tasks(tasks, pad)
+
     test_shapes = {(t.x_test.shape, t.y_test.shape) for t in tasks}
     seed_list = list(seeds) if seeds is not None else None
     many = seed_list is not None and len(seed_list) > 1
 
-    if not uniform:
-        # Declared ragged (ScenarioSpec.uniform=False): skip schedule
-        # materialization and run the loop directly.
+    if not uniform and pad is None:
+        # Declared ragged (ScenarioSpec.uniform=False) with no padding
+        # policy: skip schedule materialization and run the loop.
         return _fallback_python(cfg, trainer, tasks, rspec, backend,
                                 seed_list, obs=obs)
 
@@ -340,7 +495,7 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         for s in (seed_list if seed_list is not None else [trainer.seed]):
             tsp = dataclasses.replace(trainer, seed=s)
             inp, sched = _build_seed_inputs(cfg, tsp, rspec, backend,
-                                            tasks, opt)
+                                            tasks, opt, pad=pad)
             inputs.append(inp)
             scheds.append(sched)
     if any(i is None for i in inputs) or len(test_shapes) != 1:
@@ -350,10 +505,22 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         return _fallback_python(cfg, trainer, tasks, rspec, backend,
                                 seed_list, obs=obs)
 
+    masked = False
+    if pad is not None:
+        from repro.data.ragged import needs_masked_program
+        # The mask *structure* (step counts, row/length masks present)
+        # is seed-independent — only the shuffled content differs — so
+        # one schedule decides for all seeds.
+        masked = needs_masked_program(pad, eval_padded, scheds[0])
+    if masked and obs_on:
+        raise ValueError(
+            "obs metric streams are not supported on the masked "
+            "(padded) program; drop ObsSpec.metrics or run the loop")
+
     n_tasks = len(tasks)
     S = inputs[0].xs.shape[1]
+    total_real = sum(scheds[0].steps_per_task)
     track_writes = backend.tracker is not None or tele.enabled
-    in_graph = get_policy_class(rspec.resolved_policy).in_graph
     if tele.enabled:
         # Credit the replay DRAM traffic of every schedule this compiled
         # run will actually consume (host policies), or the exact
@@ -365,12 +532,23 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
                 (T, F)) if in_graph else sched.replay_traffic
             if traffic:
                 tele.record(traffic)
-    run = _make_run_fn(cfg, trainer, backend, n_tasks, S, track_writes,
-                       baseline, ingraph_rspec=rspec if in_graph else None,
-                       obs_metrics=obs_on)
+    if masked:
+        run = _make_masked_run_fn(cfg, trainer, backend, n_tasks,
+                                  total_real, track_writes, baseline)
+    else:
+        run = _make_run_fn(cfg, trainer, backend, n_tasks, S,
+                           track_writes, baseline,
+                           ingraph_rspec=rspec if in_graph else None,
+                           obs_metrics=obs_on)
 
     eval_x = jnp.asarray(np.stack([t.x_test for t in tasks]))
     eval_y = jnp.asarray(np.stack([t.y_test for t in tasks]))
+    eval_extra = ()
+    if masked:
+        from repro.data.ragged import eval_masks
+        ev_valid, ev_len = eval_masks(tasks)
+        eval_extra = (jnp.asarray(ev_valid), jnp.asarray(ev_len))
+    n_seed_args = 11 if masked else 8
 
     # Donate the mutated state buffers (params; the conductance pairs).
     # opt_state is excluded: DFA's is the pass-through Ψ and XLA declines
@@ -378,12 +556,17 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
     # Vmapped leaves don't alias at all.
     donate = (0, 2) if not many else ()
     if many:
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[i.as_arrays() for i in inputs])
-        fn = jax.jit(jax.vmap(run, in_axes=(0,) * 8 + (None, None)))
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[(i.as_masked_arrays() if masked else i.as_arrays())
+              for i in inputs])
+        fn = jax.jit(jax.vmap(
+            run, in_axes=(0,) * n_seed_args
+            + (None,) * (2 + len(eval_extra))))
         scope = tele.scaled(len(seed_list))
     else:
-        stacked = inputs[0].as_arrays()
+        stacked = inputs[0].as_masked_arrays() if masked \
+            else inputs[0].as_arrays()
         fn = jax.jit(run, donate_argnums=donate)
         scope = contextlib.nullcontext()
 
@@ -396,24 +579,27 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         with tracer.span("compile", backend=backend.name,
                          n_tasks=n_tasks, steps_per_task=S):
             with scope:
-                lowered = fn.lower(*stacked, eval_x, eval_y)
+                lowered = fn.lower(*stacked, eval_x, eval_y, *eval_extra)
             compiled_fn = lowered.compile()
         compile_s = time.perf_counter() - t0
         t1 = time.perf_counter()
         with tracer.span("execute", backend=backend.name):
-            res = compiled_fn(*stacked, eval_x, eval_y)
+            res = compiled_fn(*stacked, eval_x, eval_y, *eval_extra)
             res = jax.tree.map(np.asarray, res)
         execute_s = time.perf_counter() - t1
     else:
         with scope:
-            res = fn(*stacked, eval_x, eval_y)
+            res = fn(*stacked, eval_x, eval_y, *eval_extra)
         res = jax.tree.map(np.asarray, res)
     wall_s = time.perf_counter() - t0
     obs_streams = res.pop("obs", None)
 
     # Host-side accounting of the data-dependent write pulses the scan
     # summed (the Python loop meters these per step in record_endurance).
-    total_steps = n_tasks * S * (len(seed_list) if many else 1)
+    # Masked runs zeroed the pad steps' pulses in-graph, so the event
+    # count is the real step total.
+    total_steps = (total_real if masked else n_tasks * S) \
+        * (len(seed_list) if many else 1)
     wcounts = res.pop("wcounts")
     if track_writes and wcounts:
         counts = {k: (v.sum(axis=0) if many else v)
@@ -422,17 +608,26 @@ def run_compiled(cfg, spec: TrainerSpec, tasks: list[TaskData],
         if backend.tracker is not None:
             backend.tracker.record_counts(counts, total_steps)
 
+    def _trim(losses):
+        # Masked runs pad the step axis; report real steps only, in the
+        # same task-major order the loop's loss list uses.
+        if not masked:
+            return losses
+        return np.concatenate(
+            [np.asarray(losses[t, :st])
+             for t, st in enumerate(scheds[0].steps_per_task)])
+
     out: dict[str, Any]
     if many:
         per_seed = [_summarize_run(res["R_full"][i], res["baseline_row"][i],
-                                   res["losses"][i], baseline)
+                                   _trim(res["losses"][i]), baseline)
                     for i in range(len(seed_list))]
         out = dict(per_seed[0])
         out.update(_aggregate_seeds(per_seed, seed_list))
         out["params"] = jax.tree.map(lambda v: v[0], res["params"])
     else:
         out = _summarize_run(res["R_full"], res["baseline_row"],
-                             res["losses"], baseline)
+                             _trim(res["losses"]), baseline)
         out["params"] = res["params"]
         if res["dev_state"]:
             out["device_state"] = res["dev_state"]
@@ -550,7 +745,8 @@ def run_sweep(scenarios: Sequence[str], backends: Sequence[str],
             with cell_scope:
                 res = run_compiled(cfg, tsp, tasks, replay=rsp,
                                    device=backend, seeds=seeds,
-                                   uniform=sc.uniform, obs=obs)
+                                   uniform=sc.uniform, obs=obs,
+                                   pad=sc.pad)
             cell = {
                 "scenario": sc_name, "backend": be_name,
                 "replay_policy": rsp.resolved_policy,
